@@ -1,0 +1,79 @@
+//! Cost sweep (Fig. 10-style): total inference cost of every strategy
+//! across prefill:decode ratios and both models, on *measured* routing
+//! from the real gate.
+//!
+//!     cargo run --release --example cost_sweep
+
+use remoe::baselines::{BaselineEvaluator, Strategy};
+use remoe::config::{CostDims, SlaConfig, SystemConfig};
+use remoe::coordinator::{build_history, prompt_signature, Planner};
+use remoe::metrics::{fmt_f, Table};
+use remoe::model::{self, Engine};
+use remoe::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SystemConfig::default();
+    for which in ["gpt2", "dsv2"] {
+        let (hyper, dims) = if which == "gpt2" {
+            let h = model::gpt2_moe_mini();
+            let d = CostDims::gpt2_moe(h.layers);
+            (h, d)
+        } else {
+            let h = model::dsv2_mini();
+            let d = CostDims::dsv2_lite(h.layers, h.experts, h.topk);
+            (h, d)
+        };
+        let mut engine = Engine::native(hyper, 7);
+        let sla = SlaConfig::for_dims(&dims);
+        let planner = Planner::new(&dims, &cfg, &sla);
+        let ev = BaselineEvaluator::new(&dims, &cfg.platform);
+
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (train, test) = corpus.split(120, 5, 3);
+        let history = build_history(&mut engine, &train)?;
+        let sps = SpsPredictor::build(
+            history,
+            10,
+            TreeParams { beta: 40, fanout: 4, ..TreeParams::default() },
+            &mut Rng::new(2),
+        );
+
+        println!("\n== {} — cost vs prefill:decode ratio ==", dims.name);
+        let mut t = Table::new(&["in:out", "CPU", "GPU", "Fetch", "MIX", "Remoe"]);
+        for (n_in, n_out) in [(128usize, 32usize), (128, 64), (96, 96), (64, 128), (32, 128)] {
+            let mut sums = [0.0f64; 5];
+            for prompt in &test {
+                let mut text = prompt.text.clone();
+                while text.len() < n_in {
+                    let dup = text.clone();
+                    text.push_str(&dup);
+                }
+                text.truncate(n_in);
+                let ids = remoe::coordinator::prompt_ids(&engine, &text);
+                let gen = engine.generate(&ids, n_out)?;
+                let profile = remoe::costmodel::RequestProfile::from_generation(&gen);
+                for (i, s) in Strategy::all_baselines().iter().enumerate() {
+                    sums[i] += ev.evaluate(*s, &profile).cost;
+                }
+                let sig = prompt_signature(&engine, &text);
+                let plan = planner.plan(&sps.predict(&sig), ids.len(), n_out);
+                let lb = planner.lat.evaluate(&plan.plan, &profile, plan.cold_start_s);
+                let cb = planner.cost.evaluate(&plan.plan, &profile, &lb, &planner.lat);
+                sums[4] += cb.total();
+            }
+            let n = test.len() as f64;
+            t.row(vec![
+                format!("{n_in}:{n_out}"),
+                fmt_f(sums[0] / n, 1),
+                fmt_f(sums[1] / n, 1),
+                fmt_f(sums[2] / n, 1),
+                fmt_f(sums[3] / n, 1),
+                fmt_f(sums[4] / n, 1),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Prediction demo: build the SPS clustering tree over a corpus,
+//! predict expert activations for unseen prompts, and compare JSD and
+//! search latency against all Fig. 8 baselines.
+//!
+//!     cargo run --release --example prediction_demo [n_train]
+
+use std::time::Instant;
+
+use remoe::coordinator::{build_history, ground_truth, prompt_signature};
+use remoe::metrics::{fmt_f, Table};
+use remoe::model::{self, Engine};
+use remoe::prediction::{
+    matrix_jsd, ActivationPredictor, BfPredictor, DopPredictor, EfPredictor, FatePredictor,
+    SpsPredictor, TreeParams,
+};
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    let n_train = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(400);
+    let n_test = 40;
+
+    // native backend: numerically identical to the PJRT artifacts
+    // (integration_runtime proves it) and much faster for bulk sweeps.
+    let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, test) = corpus.split(n_train, n_test, 21);
+
+    println!("recording gate activations of {n_train} training prompts…");
+    let history = build_history(&mut engine, &train)?;
+
+    let params = TreeParams { beta: 60, fanout: 4, ..TreeParams::default() };
+    let sps = SpsPredictor::build(history.clone(), 15, params, &mut Rng::new(1));
+    println!(
+        "SPS tree: {} leaves, depth {}, built in {:.3}s",
+        sps.tree.leaf_count(),
+        sps.tree.depth(),
+        sps.build_time_s
+    );
+
+    let bf = BfPredictor { history: history.clone(), alpha: 15 };
+    let dop = DopPredictor::build(&history);
+    let fate = FatePredictor::train(&history, 1e-3);
+    let ef = EfPredictor { layers: engine.hyper.layers, experts: engine.hyper.experts };
+    let predictors: Vec<&dyn ActivationPredictor> = vec![&sps, &bf, &dop, &fate, &ef];
+
+    let mut jsd_sum = vec![0.0; predictors.len()];
+    let mut sps_us = 0.0;
+    let mut bf_us = 0.0;
+    for prompt in &test {
+        let sig = prompt_signature(&engine, &prompt.text);
+        let truth = ground_truth(&mut engine, &prompt.text)?;
+        for (i, p) in predictors.iter().enumerate() {
+            jsd_sum[i] += matrix_jsd(&p.predict(&sig), &truth);
+        }
+        let t = Instant::now();
+        let _ = sps.search(&sig);
+        sps_us += t.elapsed().as_secs_f64() * 1e6;
+        let t = Instant::now();
+        let _ = bf.search(&sig);
+        bf_us += t.elapsed().as_secs_f64() * 1e6;
+    }
+
+    let mut table = Table::new(&["predictor", "mean JSD"]);
+    for (i, p) in predictors.iter().enumerate() {
+        table.row(vec![p.name().into(), fmt_f(jsd_sum[i] / n_test as f64, 4)]);
+    }
+    table.print();
+    println!(
+        "search latency: SPS {:.1} µs vs BF {:.1} µs ({:.1}× faster)",
+        sps_us / n_test as f64,
+        bf_us / n_test as f64,
+        bf_us / sps_us
+    );
+    Ok(())
+}

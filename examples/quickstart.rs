@@ -1,0 +1,80 @@
+//! Quickstart: load the AOT artifacts, run one request through the
+//! full Remoe pipeline (predict → plan → execute → account), print
+//! the plan and the bill.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use remoe::config::{CostDims, SlaConfig, SystemConfig};
+use remoe::coordinator::{build_history, prompt_ids, prompt_signature, Planner};
+use remoe::costmodel::RequestProfile;
+use remoe::model::{tokenizer, Engine};
+use remoe::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
+use remoe::runtime::ArtifactStore;
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the model: gpt2-moe-mini via PJRT (L1 Pallas kernels inside)
+    let store = Rc::new(ArtifactStore::open("artifacts")?);
+    let mut engine = Engine::pjrt(store, "gpt2_moe_mini", 7)?;
+    println!("engine up: {}", engine.hyper.name);
+
+    // 2. offline phase: record gate activations of historical prompts
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, _) = corpus.split(60, 0, 5);
+    let history = build_history(&mut engine, &train)?;
+    let sps = SpsPredictor::build(
+        history,
+        8,
+        TreeParams { beta: 25, fanout: 3, ..TreeParams::default() },
+        &mut Rng::new(1),
+    );
+    println!("SPS tree built over {} prompts in {:.3}s", train.len(), sps.build_time_s);
+
+    // 3. a request arrives
+    let prompt = "serverless moe gate routing experts to cheap memory";
+    let sig = prompt_signature(&engine, prompt);
+    let dist = sps.predict(&sig);
+
+    // 4. plan: MMP → selection → Lagrangian memory → LPT replicas
+    let dims = CostDims::gpt2_moe(engine.hyper.layers);
+    let planner = Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
+    let ids = prompt_ids(&engine, prompt);
+    let out = planner.plan(&dist, ids.len(), 24);
+    println!(
+        "plan: b={:.2}, main {} MB, remote mem {:?}, replicas {:?} (calc {:.3}s)",
+        out.mmp.remote_ratio,
+        out.plan.main_mem_mb,
+        out.plan.remote_mem_mb.iter().map(|m| *m as i64).collect::<Vec<_>>(),
+        out.plan.replicas,
+        out.calc_time_s
+    );
+
+    // 5. execute for real on the PJRT request path
+    let gen = engine.generate(&ids, 24)?;
+    println!(
+        "generated 24 tokens, first 12 decoded: {:?}",
+        tokenizer::decode(&gen.tokens[..12.min(gen.tokens.len())])
+    );
+
+    // 6. bill with the *measured* routing
+    let profile = RequestProfile::from_generation(&gen);
+    let lb = planner.lat.evaluate(&out.plan, &profile, out.cold_start_s);
+    let cb = planner.cost.evaluate(&out.plan, &profile, &lb, &planner.lat);
+    println!(
+        "bill: total {:.1} (main gpu {:.1} + main cpu {:.1} + remote {:.1})",
+        cb.total(),
+        cb.main_gpu,
+        cb.main_cpu,
+        cb.remote()
+    );
+    println!(
+        "latency: TTFT {:.2}s (cold {:.2}s), TPOT {:.4}s",
+        lb.ttft(),
+        out.cold_start_s,
+        lb.tpot(24)
+    );
+    Ok(())
+}

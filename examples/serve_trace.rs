@@ -1,0 +1,99 @@
+//! End-to-end serving driver (the mandated E2E validation): load the
+//! real gpt2-moe-mini artifacts, serve a batched Poisson trace through
+//! the full Remoe pipeline on the PJRT request path, and report
+//! latency / throughput / cost vs all four baselines.
+//!
+//!     make artifacts && cargo run --release --example serve_trace
+//!
+//! Results of this run are recorded in EXPERIMENTS.md.
+
+use std::rc::Rc;
+
+use remoe::baselines::{BaselineEvaluator, Strategy};
+use remoe::config::{CostDims, SlaConfig, SystemConfig};
+use remoe::coordinator::{build_history, serve_remoe, Planner};
+use remoe::costmodel::RequestProfile;
+use remoe::metrics::{fmt_f, Table};
+use remoe::model::Engine;
+use remoe::prediction::{SpsPredictor, TreeParams};
+use remoe::runtime::ArtifactStore;
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+use remoe::workload::trace::{poisson_trace, TraceSpec};
+
+fn main() -> anyhow::Result<()> {
+    let model_name = "gpt2_moe_mini";
+    let n_requests = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(20);
+    let n_out = 32;
+
+    let store = Rc::new(ArtifactStore::open("artifacts")?);
+    let mut engine = Engine::pjrt(store, model_name, 7)?;
+    let dims = CostDims::gpt2_moe(engine.hyper.layers);
+    let cfg = SystemConfig::default();
+    let sla = SlaConfig::for_dims(&dims);
+    let planner = Planner::new(&dims, &cfg, &sla);
+
+    // offline: history + SPS tree
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, _) = corpus.split(150, 0, 11);
+    eprintln!("building history over {} prompts (real PJRT prefills)…", train.len());
+    let history = build_history(&mut engine, &train)?;
+    let sps = SpsPredictor::build(
+        history,
+        10,
+        TreeParams { beta: 40, fanout: 4, ..TreeParams::default() },
+        &mut Rng::new(3),
+    );
+
+    // the trace
+    let trace = poisson_trace(
+        &corpus,
+        &TraceSpec { rate_per_s: 0.05, n_requests, n_out, seed: 13 },
+    );
+    eprintln!("serving {n_requests} requests through Remoe (PJRT)…");
+    let t0 = std::time::Instant::now();
+    let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // baseline comparison on the same measured profiles
+    eprintln!("scoring baselines on the same requests…");
+    let ev = BaselineEvaluator::new(&dims, &cfg.platform);
+    let mut baseline_cost = vec![0.0f64; 4];
+    for req in &trace {
+        let ids = remoe::coordinator::prompt_ids(&engine, &req.prompt.text);
+        let gen = engine.generate(&ids, n_out)?;
+        let profile = RequestProfile::from_generation(&gen);
+        for (i, s) in Strategy::all_baselines().iter().enumerate() {
+            baseline_cost[i] += ev.evaluate(*s, &profile).cost;
+        }
+    }
+
+    let mut t = Table::new(&["strategy", "total cost", "mean ttft (s)", "mean tpot (s)"]);
+    for (i, s) in Strategy::all_baselines().iter().enumerate() {
+        t.row(vec![s.name().into(), fmt_f(baseline_cost[i], 1), "-".into(), "-".into()]);
+    }
+    t.row(vec![
+        "Remoe".into(),
+        fmt_f(agg.total_cost(), 1),
+        fmt_f(agg.ttft_summary().mean, 2),
+        fmt_f(agg.tpot_summary().mean, 4),
+    ]);
+    t.print();
+
+    println!(
+        "\nE2E: {} requests in {:.1}s wall  |  engine {:.2} req/s, {:.0} tok/s  |  \
+         mean calc {:.4}s  |  cold starts paid: {}",
+        agg.len(),
+        wall,
+        agg.engine_throughput(),
+        agg.token_throughput(),
+        agg.records.iter().map(|r| r.calc_time_s).sum::<f64>() / agg.len() as f64,
+        agg.records.iter().filter(|r| r.cold_start_s > 0.0).count(),
+    );
+    let best_baseline = baseline_cost.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "Remoe cost vs best baseline: {:+.1}%",
+        (agg.total_cost() / best_baseline - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: jax entry points → HLO **text** artifacts + manifest.
+
+Interchange is HLO text, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<model>__<entry>.hlo.txt`` per artifact plus
+``manifest.json`` describing every model's hyper-parameters and every
+artifact's input shapes — the rust runtime is entirely manifest-driven.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .specs import EXPERT_BUCKETS, MODELS, SEQ_BUCKETS
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps a single tuple result)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_entry(sds) -> dict:
+    return {"shape": list(sds.shape), "dtype": str(sds.dtype)}
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources, so `make artifacts` can skip
+    re-lowering when nothing changed."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS),
+                    help="comma-separated subset of models to lower")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fingerprint = _inputs_fingerprint()
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            old = json.load(fh)
+        if old.get("fingerprint") == fingerprint:
+            print(f"artifacts up-to-date (fingerprint {fingerprint})")
+            return
+
+    manifest = {"fingerprint": fingerprint,
+                "seq_buckets": SEQ_BUCKETS,
+                "expert_buckets": EXPERT_BUCKETS,
+                "models": {}, "artifacts": []}
+
+    for name in args.models.split(","):
+        spec = MODELS[name]
+        manifest["models"][name] = {
+            "hidden": spec.hidden, "layers": spec.layers,
+            "experts": spec.experts, "topk": spec.topk, "ffn": spec.ffn,
+            "shared_experts": spec.shared_experts,
+            "shared_ffn": spec.shared_ffn, "heads": spec.heads,
+            "vocab": spec.vocab, "max_seq": spec.max_seq, "act": spec.act,
+        }
+        eps = model_lib.entry_points(spec, SEQ_BUCKETS, EXPERT_BUCKETS)
+        for ep_name, (fn, ex_args, meta) in eps.items():
+            fname = ep_name.replace("/", "__") + ".hlo.txt"
+            lowered = jax.jit(fn).lower(*ex_args)
+            text = to_hlo_text(lowered)
+            with open(os.path.join(args.out_dir, fname), "w") as fh:
+                fh.write(text)
+            manifest["artifacts"].append({
+                "name": ep_name, "file": fname, "model": name,
+                "kind": meta["kind"], "bucket": meta["bucket"],
+                "inputs": [shape_entry(a) for a in ex_args],
+            })
+            print(f"lowered {ep_name:40s} -> {fname} ({len(text)} chars)",
+                  file=sys.stderr)
+
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to "
+          f"{args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: multi-head attention over a KV cache.
+
+The paper keeps attention (the "non-expert module" F_l) on the GPU; here
+it is the second Pallas kernel of the stack. TPU mapping (DESIGN.md §3):
+
+- Grid over **heads**: each grid step computes one head's
+  ``softmax(q·kᵀ/√d + mask)·v`` with the whole [S,T] score tile resident
+  in VMEM (S≤128, T≤192 ⇒ ≤ 96 KB f32 — trivially resident; for larger
+  S/T the natural extension is a second grid axis over query blocks).
+- The additive mask is precomputed in the surrounding jax function from
+  the scalar cache position (cheap, fused by XLA) and streamed per block;
+  this keeps the kernel free of scalar-prefetch plumbing, which the
+  interpret-mode CPU path doesn't exercise anyway.
+- Scores and the softmax run in f32 (VPU), the two contractions target
+  the MXU with ``preferred_element_type=f32``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    """One head: q [1,S,hd], k/v [1,T,hd], mask [S,T] additive → o [1,S,hd]."""
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd)) + mask_ref[...]
+    # Numerically-stable softmax on the VPU.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32
+                       ).astype(o_ref.dtype)
+
+
+@jax.jit
+def attention_core(q, k, v, mask):
+    """Pallas attention core. q [S,nh,hd]; k,v [T,nh,hd]; mask [S,T]
+    additive → [S,nh,hd]. Grid over heads."""
+    s, nh, hd = q.shape
+    t = k.shape[0]
+    # [nh, S, hd] layout so each head is a contiguous block.
+    qh = jnp.swapaxes(q, 0, 1)
+    kh = jnp.swapaxes(k, 0, 1)
+    vh = jnp.swapaxes(v, 0, 1)
+
+    out = pl.pallas_call(
+        _attn_kernel,
+        grid=(nh,),
+        in_specs=[
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((s, t), lambda h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nh, s, hd), q.dtype),
+        interpret=True,
+    )(qh.reshape(nh, s, hd), kh.reshape(nh, t, hd),
+      vh.reshape(nh, t, hd), mask)
+    return jnp.swapaxes(out, 0, 1)
+
+
+def vmem_footprint_bytes(s: int, t: int, hd: int,
+                         dtype_bytes: int = 4) -> int:
+    """Static VMEM working-set estimate for one head's grid step."""
+    return (s * hd + 2 * t * hd + 2 * s * t + s * hd) * dtype_bytes

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernel: the expert FFN — the paper's compute hot-spot.
+
+Remoe's experts are plain 2-layer FFNs (``act(x·W1 + b1)·W2 + b2``)
+executed on CPU cores in the paper (LibTorch GEMM). For the TPU-shaped
+reproduction we re-think the decomposition (DESIGN.md §3):
+
+- The **token dimension** is tiled into blocks of ``BN`` rows — the MXU
+  systolic array wants ≥8×128 operand tiles; token buckets are powers of
+  two so blocks divide evenly and no masking is needed.
+- The **FFN inner dimension** is tiled into blocks of ``BF`` columns so
+  one (x-block, W1-block, W2-block) working set fits comfortably in VMEM
+  (~16 MB/core); the grid's second axis walks the FFN blocks and
+  accumulates partial ``h_blk @ W2_blk`` products into the output block —
+  this is the HBM↔VMEM schedule that replaces the paper's threadblock
+  decomposition.
+- Accumulation is f32 regardless of input dtype (MXU-style accumulate).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that the rust runtime
+runs. Correctness against ``ref.expert_ffn`` is enforced by pytest +
+hypothesis and again from rust integration tests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. BN: token-block rows (MXU sublane-friendly). BF: FFN-column
+# block. With H=128, F<=256, f32: x-block 64x128 (32 KB) + W1 block
+# 128x128 (64 KB) + W2 block 128x128 (64 KB) + h 64x128 + out 64x128
+# ~ 256 KB per step, far under VMEM; chosen to keep the double-buffered
+# pipeline resident. See DESIGN.md §8 for the footprint table.
+BN = 64
+BF = 128
+
+
+def _act(h, act: str):
+    if act == "gelu":
+        return jax.nn.gelu(h, approximate=False)
+    if act == "silu":
+        return jax.nn.silu(h)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, act: str,
+                nf_blocks: int):
+    """One grid step: token block i × FFN block j.
+
+    Computes ``act(x_i @ W1[:, j] + b1[j]) @ W2[j, :]`` and accumulates
+    into ``o_ref`` (initialised with the output bias on the first FFN
+    block so the bias is added exactly once).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b2_ref[...], o_ref.shape)
+
+    x = x_ref[...].astype(jnp.float32)
+    h = jnp.dot(x, w1_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    h = _act(h + b1_ref[...].astype(jnp.float32), act)
+    part = jnp.dot(h, w2_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = o_ref[...] + part.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def expert_ffn(x, w1, b1, w2, b2, act: str = "gelu"):
+    """Pallas expert FFN. Shapes: x [n,H], w1 [H,F], b1 [F], w2 [F,H],
+    b2 [H] → [n,H]. ``n`` and ``F`` must be multiples of the tile sizes
+    or smaller than them (buckets guarantee this)."""
+    n, hidden = x.shape
+    f = w1.shape[1]
+    bn = min(BN, n)
+    bf = min(BF, f)
+    assert n % bn == 0 and f % bf == 0, (n, f)
+    grid = (n // bn, f // bf)
+
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, act=act, nf_blocks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, hidden), lambda i, j: (i, 0)),   # x
+            pl.BlockSpec((hidden, bf), lambda i, j: (0, j)),   # W1 cols
+            pl.BlockSpec((bf,), lambda i, j: (j,)),            # b1
+            pl.BlockSpec((bf, hidden), lambda i, j: (j, 0)),   # W2 rows
+            pl.BlockSpec((hidden,), lambda i, j: (0,)),        # b2
+        ],
+        out_specs=pl.BlockSpec((bn, hidden), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, hidden), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_footprint_bytes(n: int, hidden: int, f: int,
+                         dtype_bytes: int = 4) -> int:
+    """Static VMEM working-set estimate for one grid step (used by the
+    DESIGN.md §8 perf analysis — interpret mode has no real VMEM)."""
+    bn, bf = min(BN, n), min(BF, f)
+    x_blk = bn * hidden
+    w1_blk = hidden * bf
+    w2_blk = bf * hidden
+    h_blk = bn * bf
+    o_blk = bn * hidden
+    vecs = bf + hidden
+    return (x_blk + w1_blk + w2_blk + h_blk + o_blk + vecs) * dtype_bytes
+
+
+def mxu_flops(n: int, hidden: int, f: int) -> int:
+    """MACs×2 for one expert call — the roofline numerator."""
+    return 2 * n * hidden * f * 2  # two GEMMs

@@ -1,0 +1,162 @@
+"""Layer-2: the MoE model's jax entry points, calling the Pallas kernels.
+
+Rather than lowering one monolithic forward pass, the model is exported
+as five entry-point families (embed / attn / gate / expert_ffn / lm_head)
+with **weights as runtime arguments**. This is what gives the rust
+coordinator the paper's freedom of placement: the *same* ``expert_ffn``
+artifact backs local experts inside the main-model function, remote
+experts inside separate serverless functions, and all four baseline
+deployments — placement is purely an L3 decision.
+
+Shapes are static per artifact (PJRT AOT requires it); sequence lengths
+and expert token counts are bucketed (specs.SEQ_BUCKETS /
+specs.EXPERT_BUCKETS) and rust pads up to the nearest bucket.
+
+The KV cache lives in rust: ``attn`` takes the cache contents as inputs
+and returns the fresh K/V rows for rust to scatter back at ``pos0``.
+"""
+
+import functools
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .specs import ModelSpec
+from .kernels import attention as attn_kernel
+from .kernels import moe_ffn as ffn_kernel
+from .kernels import ref
+
+
+def make_embed(spec: ModelSpec, s: int) -> Tuple[Callable, List]:
+    """``(ids[S] i32, wte[V,H], wpe[T,H], pos0[] i32) → (h[S,H],)``"""
+
+    def fn(ids, wte, wpe, pos0):
+        tok = jnp.take(wte, ids, axis=0)
+        positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+        pos = jnp.take(wpe, positions, axis=0)
+        return (tok + pos,)
+
+    args = [
+        jax.ShapeDtypeStruct((s,), jnp.int32),
+        jax.ShapeDtypeStruct((spec.vocab, spec.hidden), jnp.float32),
+        jax.ShapeDtypeStruct((spec.max_seq, spec.hidden), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    return fn, args
+
+
+def make_attn(spec: ModelSpec, s: int) -> Tuple[Callable, List]:
+    """Pre-LN attention block over the KV cache (one layer).
+
+    ``(h[S,H], ln_g[H], ln_b[H], wqkv[H,3H], bqkv[3H], wo[H,H], bo[H],
+       k_cache[T,H], v_cache[T,H], pos0[] i32)
+       → (h_out[S,H], k_new[S,H], v_new[S,H])``
+    """
+    hidden, heads, t = spec.hidden, spec.heads, spec.max_seq
+    hd = spec.head_dim
+
+    def fn(h, ln_g, ln_b, wqkv, bqkv, wo, bo, k_cache, v_cache, pos0):
+        x = ref.layernorm(h, ln_g, ln_b)
+        qkv = x @ wqkv + bqkv
+        q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+        k_all = jax.lax.dynamic_update_slice(k_cache, k_new, (pos0, 0))
+        v_all = jax.lax.dynamic_update_slice(v_cache, v_new, (pos0, 0))
+        mask = ref.causal_cache_mask(s, t, pos0)
+        out = attn_kernel.attention_core(
+            q.reshape(s, heads, hd), k_all.reshape(t, heads, hd),
+            v_all.reshape(t, heads, hd), mask).reshape(s, hidden)
+        return (h + out @ wo + bo, k_new, v_new)
+
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((s, hidden), f32),
+        jax.ShapeDtypeStruct((hidden,), f32),
+        jax.ShapeDtypeStruct((hidden,), f32),
+        jax.ShapeDtypeStruct((hidden, 3 * hidden), f32),
+        jax.ShapeDtypeStruct((3 * hidden,), f32),
+        jax.ShapeDtypeStruct((hidden, hidden), f32),
+        jax.ShapeDtypeStruct((hidden,), f32),
+        jax.ShapeDtypeStruct((t, hidden), f32),
+        jax.ShapeDtypeStruct((t, hidden), f32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    return fn, args
+
+
+def make_gate(spec: ModelSpec, s: int) -> Tuple[Callable, List]:
+    """``(h[S,H], ln_g, ln_b, wg[H,K]) → (xln[S,H], w[S,topk], idx[S,topk])``"""
+
+    def fn(h, ln_g, ln_b, wg):
+        xln, w, idx = ref.gate_block(h, ln_g, ln_b, wg, spec.topk)
+        return (xln, w, idx)
+
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((s, spec.hidden), f32),
+        jax.ShapeDtypeStruct((spec.hidden,), f32),
+        jax.ShapeDtypeStruct((spec.hidden,), f32),
+        jax.ShapeDtypeStruct((spec.hidden, spec.experts), f32),
+    ]
+    return fn, args
+
+
+def make_expert_ffn(hidden: int, f: int, n: int,
+                    act: str) -> Tuple[Callable, List]:
+    """``(x[n,H], w1[H,F], b1[F], w2[F,H], b2[H]) → (y[n,H],)``
+
+    The Pallas kernel entry point — shared by local & remote experts and
+    by the shared expert (different F).
+    """
+
+    def fn(x, w1, b1, w2, b2):
+        return (ffn_kernel.expert_ffn(x, w1, b1, w2, b2, act),)
+
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((n, hidden), f32),
+        jax.ShapeDtypeStruct((hidden, f), f32),
+        jax.ShapeDtypeStruct((f,), f32),
+        jax.ShapeDtypeStruct((f, hidden), f32),
+        jax.ShapeDtypeStruct((hidden,), f32),
+    ]
+    return fn, args
+
+
+def make_lm_head(spec: ModelSpec, s: int) -> Tuple[Callable, List]:
+    """``(h[S,H], lnf_g, lnf_b, wte[V,H]) → (logits[S,V],)``"""
+
+    def fn(h, lnf_g, lnf_b, wte):
+        return (ref.lm_head(h, lnf_g, lnf_b, wte),)
+
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((s, spec.hidden), f32),
+        jax.ShapeDtypeStruct((spec.hidden,), f32),
+        jax.ShapeDtypeStruct((spec.hidden,), f32),
+        jax.ShapeDtypeStruct((spec.vocab, spec.hidden), f32),
+    ]
+    return fn, args
+
+
+def entry_points(spec: ModelSpec, seq_buckets, expert_buckets
+                 ) -> Dict[str, Tuple[Callable, List, Dict]]:
+    """All artifacts for one model: name → (fn, example_args, meta)."""
+    out: Dict[str, Tuple[Callable, List, Dict]] = {}
+    for s in seq_buckets:
+        fn, args = make_embed(spec, s)
+        out[f"{spec.name}/embed_s{s}"] = (fn, args, {"kind": "embed", "bucket": s})
+        fn, args = make_attn(spec, s)
+        out[f"{spec.name}/attn_s{s}"] = (fn, args, {"kind": "attn", "bucket": s})
+        fn, args = make_gate(spec, s)
+        out[f"{spec.name}/gate_s{s}"] = (fn, args, {"kind": "gate", "bucket": s})
+        fn, args = make_lm_head(spec, s)
+        out[f"{spec.name}/lm_head_s{s}"] = (fn, args, {"kind": "lm_head", "bucket": s})
+    for n in expert_buckets:
+        fn, args = make_expert_ffn(spec.hidden, spec.ffn, n, spec.act)
+        out[f"{spec.name}/expert_n{n}"] = (fn, args, {"kind": "expert", "bucket": n})
+        if spec.shared_experts:
+            fn, args = make_expert_ffn(spec.hidden, spec.shared_ffn, n, spec.act)
+            out[f"{spec.name}/shared_n{n}"] = (fn, args,
+                                               {"kind": "shared", "bucket": n})
+    return out

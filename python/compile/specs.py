@@ -1,0 +1,80 @@
+"""Model specifications shared by the L2 model, the AOT lowering, and tests.
+
+Two MoE configurations mirror the paper's evaluation models at reduced
+scale (see DESIGN.md §2 for the substitution argument):
+
+- ``gpt2_moe_mini``  ~ GPT2-moe   (8 experts/layer, top-2, GPT-2 block)
+- ``dsv2_mini``      ~ Deepseek-v2-lite (many routed experts + shared
+  experts, top-4)
+
+The hyper-parameters here are the single source of truth: ``aot.py``
+emits them into ``artifacts/manifest.json`` and the rust runtime reads
+them from there — rust never hard-codes a model shape.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Hyper-parameters of one MoE model."""
+
+    name: str
+    hidden: int          # H — token embedding width
+    layers: int          # L — number of MoE transformer blocks
+    experts: int         # K — routed experts per layer
+    topk: int            # experts activated per token
+    ffn: int             # F — expert FFN inner width
+    shared_experts: int  # DeepseekMoE-style always-on experts (part of F_l)
+    shared_ffn: int      # inner width of the shared expert (0 if none)
+    heads: int           # attention heads
+    vocab: int           # byte-level vocabulary
+    max_seq: int         # T — KV cache capacity (prefill + decode budget)
+    act: str             # expert activation: "gelu" | "silu"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+# Sequence-length buckets for prefill (S=128) and decode (S=1).
+SEQ_BUCKETS: List[int] = [1, 128]
+
+# Token-count buckets for the expert FFN artifact. Power-of-two so the
+# Pallas token-block tiling divides evenly (see kernels/moe_ffn.py).
+EXPERT_BUCKETS: List[int] = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+GPT2_MOE_MINI = ModelSpec(
+    name="gpt2_moe_mini",
+    hidden=128,
+    layers=4,
+    experts=8,
+    topk=2,
+    ffn=256,
+    shared_experts=0,
+    shared_ffn=0,
+    heads=4,
+    vocab=256,
+    max_seq=192,
+    act="gelu",
+)
+
+DSV2_MINI = ModelSpec(
+    name="dsv2_mini",
+    hidden=128,
+    layers=6,
+    experts=16,
+    topk=4,
+    ffn=128,
+    shared_experts=1,
+    shared_ffn=256,
+    heads=4,
+    vocab=256,
+    max_seq=192,
+    act="silu",
+)
+
+MODELS = {m.name: m for m in (GPT2_MOE_MINI, DSV2_MINI)}

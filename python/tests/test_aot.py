@@ -1,0 +1,63 @@
+"""AOT pipeline checks: HLO-text artifacts parse, the manifest is
+complete, and the fingerprint no-op logic works."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def test_manifest_models_complete(manifest):
+    assert set(manifest["models"]) == {"gpt2_moe_mini", "dsv2_mini"}
+    for name, m in manifest["models"].items():
+        for key in ("hidden", "layers", "experts", "topk", "ffn", "heads",
+                    "vocab", "max_seq", "act"):
+            assert key in m, (name, key)
+
+
+def test_every_artifact_file_exists_and_is_hlo(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head, a["file"]
+
+
+def test_expected_entry_points_present(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    for s in manifest["seq_buckets"]:
+        for kind in ("embed", "attn", "gate", "lm_head"):
+            assert f"gpt2_moe_mini/{kind}_s{s}" in names
+    for n in manifest["expert_buckets"]:
+        assert f"gpt2_moe_mini/expert_n{n}" in names
+        assert f"dsv2_mini/shared_n{n}" in names
+
+
+def test_input_arity_matches_kind(manifest):
+    arity = {"embed": 4, "attn": 10, "gate": 4, "lm_head": 4,
+             "expert": 5, "shared": 5}
+    for a in manifest["artifacts"]:
+        assert len(a["inputs"]) == arity[a["kind"]], a["name"]
+
+
+def test_fingerprint_noop():
+    """Re-running aot.py with an up-to-date manifest must be a fast no-op."""
+    py_dir = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", "../artifacts"],
+        cwd=py_dir, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0
+    assert "up-to-date" in out.stdout

@@ -1,0 +1,152 @@
+"""L2 correctness: artifact entry points match the oracle composition and
+produce the shapes the manifest advertises."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.kernels import ref
+from compile.specs import DSV2_MINI, GPT2_MOE_MINI, MODELS
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def materialize(args, seed=0):
+    """Random concrete values for a list of ShapeDtypeStructs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), max(2, len(args)))
+    out = []
+    for i, a in enumerate(args):
+        if a.dtype == jnp.int32:
+            if a.shape == ():
+                out.append(jnp.int32(0))
+            else:
+                out.append(jax.random.randint(ks[i], a.shape, 0, 255,
+                                              jnp.int32))
+        else:
+            out.append(jax.random.normal(ks[i], a.shape, jnp.float32) * 0.1)
+    return out
+
+
+@pytest.mark.parametrize("spec", [GPT2_MOE_MINI, DSV2_MINI],
+                         ids=lambda s: s.name)
+def test_entry_point_shapes(spec):
+    eps = model_lib.entry_points(spec, [1, 128], [1, 16])
+    for name, (fn, args, meta) in eps.items():
+        vals = materialize(args)
+        outs = fn(*vals)
+        assert isinstance(outs, tuple), name
+        for o in outs:
+            assert not np.any(np.isnan(np.asarray(o))), name
+
+
+def test_embed_matches_oracle():
+    spec = GPT2_MOE_MINI
+    fn, args = model_lib.make_embed(spec, 128)
+    ids = jnp.arange(128, dtype=jnp.int32) % spec.vocab
+    wte = jax.random.normal(jax.random.PRNGKey(0), (spec.vocab, spec.hidden))
+    wpe = jax.random.normal(jax.random.PRNGKey(1), (spec.max_seq, spec.hidden))
+    (h,) = fn(ids, wte, wpe, jnp.int32(3))
+    want = ref.embed(ids, wte, wpe, 3)
+    np.testing.assert_allclose(h, want, **TOL)
+
+
+def test_attn_entry_matches_block_oracle():
+    spec = GPT2_MOE_MINI
+    fn, args = model_lib.make_attn(spec, 1)
+    vals = materialize(args, seed=3)
+    vals[-1] = jnp.int32(17)  # pos0
+    h_out, k_new, v_new = fn(*vals)
+    want = ref.attention_block(*vals[:-1], 17, spec.heads)
+    np.testing.assert_allclose(h_out, want[0], **TOL)
+    np.testing.assert_allclose(k_new, want[1], **TOL)
+    np.testing.assert_allclose(v_new, want[2], **TOL)
+
+
+def test_decode_consistency_with_prefill():
+    """Decoding token-by-token with the KV cache must equal prefilling
+    the whole sequence at once — the cache contract rust relies on."""
+    spec = GPT2_MOE_MINI
+    s_total = 6
+    hidden, heads, t = spec.hidden, spec.heads, spec.max_seq
+    ks = jax.random.split(jax.random.PRNGKey(9), 8)
+    h_seq = jax.random.normal(ks[0], (s_total, hidden)) * 0.5
+    ln_g = jnp.ones(hidden); ln_b = jnp.zeros(hidden)
+    wqkv = jax.random.normal(ks[1], (hidden, 3 * hidden)) * 0.05
+    bqkv = jax.random.normal(ks[2], (3 * hidden,)) * 0.05
+    wo = jax.random.normal(ks[3], (hidden, hidden)) * 0.05
+    bo = jax.random.normal(ks[4], (hidden,)) * 0.05
+
+    # full prefill (pos0 = 0)
+    kc = jnp.zeros((t, hidden)); vc = jnp.zeros((t, hidden))
+    full, _, _ = ref.attention_block(h_seq, ln_g, ln_b, wqkv, bqkv, wo, bo,
+                                     kc, vc, 0, heads)
+
+    # token-by-token with cache updates
+    kc = jnp.zeros((t, hidden)); vc = jnp.zeros((t, hidden))
+    outs = []
+    for i in range(s_total):
+        hi = h_seq[i:i + 1]
+        o, k_new, v_new = ref.attention_block(hi, ln_g, ln_b, wqkv, bqkv,
+                                              wo, bo, kc, vc, i, heads)
+        kc = kc.at[i].set(k_new[0])
+        vc = vc.at[i].set(v_new[0])
+        outs.append(o[0])
+    step = jnp.stack(outs)
+    np.testing.assert_allclose(step, full, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_layer_sparse_equals_dense_combine():
+    """Running only the routed experts per token (what rust does) equals
+    the dense masked-combine oracle."""
+    spec = GPT2_MOE_MINI
+    s = 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 12)
+    xln = jax.random.normal(ks[0], (s, spec.hidden)) * 0.5
+    wg = jax.random.normal(ks[1], (spec.hidden, spec.experts))
+    _, w, idx = ref.gate_block(xln, jnp.ones(spec.hidden),
+                               jnp.zeros(spec.hidden), wg, spec.topk)
+    w1 = jax.random.normal(ks[2], (spec.experts, spec.hidden, spec.ffn)) * .05
+    b1 = jax.random.normal(ks[3], (spec.experts, spec.ffn)) * .05
+    w2 = jax.random.normal(ks[4], (spec.experts, spec.ffn, spec.hidden)) * .05
+    b2 = jax.random.normal(ks[5], (spec.experts, spec.hidden)) * .05
+
+    # dense combine
+    dense = jnp.zeros((s, spec.hidden))
+    for k in range(spec.experts):
+        ek = ref.expert_ffn(xln, w1[k], b1[k], w2[k], b2[k], spec.act)
+        sel = (idx == k).astype(jnp.float32) * w
+        dense = dense + sel.sum(-1, keepdims=True) * ek
+
+    # sparse per-token dispatch (mimics rust's router)
+    sparse = np.zeros((s, spec.hidden), np.float32)
+    idx_np, w_np = np.asarray(idx), np.asarray(w)
+    for tok in range(s):
+        for j in range(spec.topk):
+            k = int(idx_np[tok, j])
+            ek = ref.expert_ffn(xln[tok:tok + 1], w1[k], b1[k], w2[k],
+                                b2[k], spec.act)
+            sparse[tok] += w_np[tok, j] * np.asarray(ek)[0]
+    np.testing.assert_allclose(sparse, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_lm_head_tied_embedding():
+    spec = GPT2_MOE_MINI
+    fn, _ = model_lib.make_lm_head(spec, 1)
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    h = jax.random.normal(ks[0], (1, spec.hidden))
+    wte = jax.random.normal(ks[1], (spec.vocab, spec.hidden))
+    (logits,) = fn(h, jnp.ones(spec.hidden), jnp.zeros(spec.hidden), wte)
+    assert logits.shape == (1, spec.vocab)
+    want = ref.layernorm(h, jnp.ones(spec.hidden), jnp.zeros(spec.hidden)) @ wte.T
+    np.testing.assert_allclose(logits, want, **TOL)
+
+
+def test_specs_are_consistent():
+    for spec in MODELS.values():
+        assert spec.hidden % spec.heads == 0
+        assert spec.topk <= spec.experts
+        assert spec.max_seq >= 129  # prefill bucket + >=1 decode
+        if spec.shared_experts:
+            assert spec.shared_ffn > 0

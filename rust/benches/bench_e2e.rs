@@ -1,0 +1,75 @@
+//! End-to-end request bench: the full Remoe request path (predict →
+//! plan → execute → account) against each baseline's accounting, on
+//! the real PJRT engine — the paper's "overall performance" measured
+//! as latency rather than cost.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use remoe::baselines::{BaselineEvaluator, Strategy};
+use remoe::config::{CostDims, SlaConfig, SystemConfig};
+use remoe::coordinator::{build_history, prompt_ids, prompt_signature, Planner};
+use remoe::costmodel::RequestProfile;
+use remoe::model::Engine;
+use remoe::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
+use remoe::runtime::ArtifactStore;
+use remoe::util::bench::{black_box, section, Bench};
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_e2e: run `make artifacts` first");
+        return;
+    }
+    let store = Rc::new(ArtifactStore::open("artifacts").expect("artifacts"));
+    let mut engine = Engine::pjrt(store, "gpt2_moe_mini", 7).unwrap();
+    let dims = CostDims::gpt2_moe(engine.hyper.layers);
+    let cfg = SystemConfig::default();
+    let planner = Planner::new(&dims, &cfg, &SlaConfig::for_dims(&dims));
+    let ev = BaselineEvaluator::new(&dims, &cfg.platform);
+
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, test) = corpus.split(100, 8, 9);
+    let history = build_history(&mut engine, &train).unwrap();
+    let sps = SpsPredictor::build(
+        history,
+        10,
+        TreeParams { beta: 40, fanout: 4, ..TreeParams::default() },
+        &mut Rng::new(4),
+    );
+
+    section("request-path stages (gpt2_moe_mini, PJRT)");
+    let prompt = &test[0];
+    let sig = prompt_signature(&engine, &prompt.text);
+    Bench::new("stage i: SPS predict")
+        .run(|| black_box(sps.predict(&sig)))
+        .report();
+    let dist = sps.predict(&sig);
+    Bench::new("stage ii–v: planner")
+        .with_budget(Duration::from_secs(4))
+        .run(|| black_box(planner.plan(&dist, 96, 24)))
+        .report();
+    let ids = prompt_ids(&engine, &prompt.text);
+    Bench::new("execute: generate 24 tokens (PJRT)")
+        .with_iters(3, 30)
+        .with_budget(Duration::from_secs(6))
+        .run(|| black_box(engine.generate(&ids, 24).unwrap()))
+        .report();
+
+    section("accounting (per request, analytic)");
+    let gen = engine.generate(&ids, 24).unwrap();
+    let profile = RequestProfile::from_generation(&gen);
+    let out = planner.plan(&dist, profile.n_in, 24);
+    Bench::new("latency+cost eval (Remoe plan)")
+        .run(|| {
+            let lb = planner.lat.evaluate(&out.plan, &profile, out.cold_start_s);
+            black_box(planner.cost.evaluate(&out.plan, &profile, &lb, &planner.lat))
+        })
+        .report();
+    for s in Strategy::all_baselines() {
+        Bench::new(&format!("baseline eval: {}", s.name()))
+            .run(|| black_box(ev.evaluate(s, &profile)))
+            .report();
+    }
+}

@@ -1,0 +1,72 @@
+//! Optimizer benches: the CALCULATE path (Fig. 11) — curve fit,
+//! Lagrangian dual solve, full planner pipeline per request.
+
+use std::time::Duration;
+
+use remoe::config::{CostDims, PlatformConfig, SlaConfig, SystemConfig};
+use remoe::coordinator::Planner;
+use remoe::optimizer::{fit_exp_curve, solve, GTerm, LayerTerm};
+use remoe::serverless::PerfModel;
+use remoe::util::bench::{black_box, section, Bench};
+
+fn terms(dims: &CostDims) -> Vec<LayerTerm> {
+    let perf = PerfModel::from_dims(dims, &PlatformConfig::default());
+    let profile = perf.profile_decode_latency(dims.topk, &dims.remote_specs.specs());
+    let curve = fit_exp_curve(&profile);
+    (0..dims.layers)
+        .map(|l| {
+            let s = 0.2 + 0.05 * l as f64;
+            LayerTerm {
+                g: GTerm { curve, h_w: 5000.0, c_c: 1.0, t_rem_over_s: 0.007 / s },
+                s_tilde: s,
+                fixed_decode_s: dims.topk as f64 * s * 0.0071,
+                kernel_mass: dims.topk as f64 * s,
+                lo: dims.remote_specs.min_mb,
+                hi: dims.remote_specs.max_mb,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let gpt2 = CostDims::gpt2_moe(4);
+    let dsv2 = CostDims::dsv2_lite(6, 16, 4);
+
+    section("curve fitting (Fig. 6 pipeline)");
+    let perf = PerfModel::from_dims(&gpt2, &PlatformConfig::default());
+    let profile = perf.profile_decode_latency(2, &gpt2.remote_specs.specs());
+    Bench::new("fit_exp_curve (19 points)")
+        .run(|| black_box(fit_exp_curve(&profile)))
+        .report();
+
+    section("Lagrangian dual solve (P2)");
+    for (name, dims) in [("gpt2 L=4", &gpt2), ("dsv2 L=6", &dsv2)] {
+        let ts = terms(dims);
+        Bench::new(&format!("dual solve {name} (binding)"))
+            .run(|| black_box(solve(&ts, 0.1, 0.08)))
+            .report();
+        Bench::new(&format!("dual solve {name} (slack)"))
+            .run(|| black_box(solve(&ts, 0.1, 10.0)))
+            .report();
+    }
+
+    section("full planner (MMP → select → dual → LPT replicas)");
+    for (name, dims) in [("gpt2", &gpt2), ("dsv2", &dsv2)] {
+        let sla = SlaConfig::for_dims(dims);
+        let planner = Planner::new(dims, &SystemConfig::default(), &sla);
+        let dist: Vec<Vec<f64>> = (0..dims.layers)
+            .map(|l| {
+                let mut row: Vec<f64> = (0..dims.experts)
+                    .map(|k| 1.0 / (((k + l) % dims.experts) + 1) as f64)
+                    .collect();
+                let s: f64 = row.iter().sum();
+                row.iter_mut().for_each(|v| *v /= s);
+                row
+            })
+            .collect();
+        Bench::new(&format!("planner.plan {name}"))
+            .with_budget(Duration::from_secs(4))
+            .run(|| black_box(planner.plan(&dist, 128, 48)))
+            .report();
+    }
+}

@@ -1,0 +1,37 @@
+//! Partition benches: LPT vs round-robin vs exact at the sizes the
+//! replica decision sees per layer (K remote experts, z replicas).
+
+use remoe::partition::{lpt, optimal, round_robin};
+use remoe::util::bench::{black_box, section, Bench};
+use remoe::util::rng::Rng;
+
+fn weights(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range_f64(0.05, 1.0)).collect()
+}
+
+fn main() {
+    section("LPT at per-layer sizes");
+    for (n, z) in [(8usize, 2usize), (16, 4), (64, 8), (256, 8)] {
+        let w = weights(n, 3);
+        Bench::new(&format!("lpt n={n} z={z}"))
+            .run(|| black_box(lpt(&w, z)))
+            .report();
+    }
+
+    section("baselines + exact (small instances)");
+    let w = weights(12, 5);
+    Bench::new("round_robin n=12 z=3").run(|| black_box(round_robin(&w, 3))).report();
+    Bench::new("optimal (DFS+prune) n=12 z=3").run(|| black_box(optimal(&w, 3))).report();
+
+    section("quality: makespan ratio vs optimal (n=12, z=3)");
+    let l = lpt(&w, 3);
+    let o = optimal(&w, 3);
+    let r = round_robin(&w, 3);
+    println!(
+        "LPT/OPT = {:.4}  (Graham bound {:.4});  RR/OPT = {:.4}",
+        l.makespan() / o.makespan(),
+        remoe::partition::lpt_ratio_bound(3),
+        r.makespan() / o.makespan()
+    );
+}

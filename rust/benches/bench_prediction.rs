@@ -1,0 +1,64 @@
+//! Prediction benches (§V-B timing claims): tree build vs PAM, SPS
+//! search vs brute force, prediction throughput.
+
+use std::time::Duration;
+
+use remoe::coordinator::{build_history, prompt_signature};
+use remoe::model::{self, Engine};
+use remoe::prediction::{
+    ActivationPredictor, BfPredictor, SpsPredictor, Splitter, TreeParams,
+};
+use remoe::util::bench::{black_box, section, Bench};
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+
+fn main() {
+    let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, test) = corpus.split(400, 20, 5);
+    let history = build_history(&mut engine, &train).unwrap();
+    let params = TreeParams { beta: 60, fanout: 4, ..TreeParams::default() };
+
+    section("offline: clustering-tree construction (400 prompts)");
+    Bench::new("SPS tree build (customized k-medoids)")
+        .with_iters(3, 20)
+        .with_budget(Duration::from_secs(5))
+        .run(|| {
+            black_box(SpsPredictor::build(history.clone(), 15, params, &mut Rng::new(1)))
+        })
+        .report();
+    let pam_params = TreeParams { splitter: Splitter::Pam, ..params };
+    Bench::new("VarPAM tree build (full swap search)")
+        .with_iters(1, 5)
+        .with_budget(Duration::from_secs(10))
+        .run(|| {
+            black_box(SpsPredictor::build(history.clone(), 15, pam_params, &mut Rng::new(1)))
+        })
+        .report();
+
+    section("online: top-α search + prediction (per request)");
+    let sps = SpsPredictor::build(history.clone(), 15, params, &mut Rng::new(1));
+    let bf = BfPredictor { history: history.clone(), alpha: 15 };
+    let sigs: Vec<_> = test.iter().map(|p| prompt_signature(&engine, &p.text)).collect();
+    let mut i = 0;
+    Bench::new("SPS search (tree + local brute force)")
+        .run(|| {
+            i = (i + 1) % sigs.len();
+            black_box(sps.search(&sigs[i]))
+        })
+        .report();
+    let mut j = 0;
+    Bench::new("BF search (full scan)")
+        .run(|| {
+            j = (j + 1) % sigs.len();
+            black_box(bf.search(&sigs[j]))
+        })
+        .report();
+    let mut k = 0;
+    Bench::new("SPS full prediction (search + softmax mix)")
+        .run(|| {
+            k = (k + 1) % sigs.len();
+            black_box(sps.predict(&sigs[k]))
+        })
+        .report();
+}

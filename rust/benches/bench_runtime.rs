@@ -1,0 +1,74 @@
+//! Runtime benches: artifact execution latency per kind/bucket on the
+//! PJRT request path (the L3 hot loop's compute substrate), plus the
+//! native backend for comparison. Skips silently if artifacts are
+//! missing.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use remoe::model::engine::Backend;
+use remoe::model::{self, Engine, ModelWeights, NativeBackend, PjrtBackend};
+use remoe::runtime::{ArtifactStore, HostTensor};
+use remoe::util::bench::{black_box, section, Bench};
+use remoe::util::rng::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let store = Rc::new(ArtifactStore::open("artifacts").expect("open artifacts"));
+    let hyper = store.manifest.model("gpt2_moe_mini").unwrap().clone();
+    let weights = ModelWeights::generate(&hyper, 7);
+    let pjrt = PjrtBackend::new(store.clone(), "gpt2_moe_mini").unwrap();
+    let native = NativeBackend { heads: hyper.heads, topk: hyper.topk };
+    let mut rng = Rng::new(3);
+
+    section("expert FFN artifact by token bucket (PJRT)");
+    for n in [1usize, 8, 32, 128] {
+        let x = HostTensor::new(
+            vec![n, hyper.hidden],
+            (0..n * hyper.hidden).map(|_| rng.normal() as f32 * 0.5).collect(),
+        );
+        let ew = &weights.layers[0].experts[0];
+        Bench::new(&format!("pjrt/expert_ffn n={n}"))
+            .with_budget(Duration::from_secs(2))
+            .run(|| black_box(pjrt.expert(ew, &x, &hyper.act).unwrap()))
+            .report();
+        Bench::new(&format!("native/expert_ffn n={n}"))
+            .with_budget(Duration::from_secs(1))
+            .run(|| black_box(native.expert(ew, &x, &hyper.act).unwrap()))
+            .report();
+    }
+
+    section("attention + gate (decode shape, PJRT)");
+    let h = HostTensor::new(
+        vec![1, hyper.hidden],
+        (0..hyper.hidden).map(|_| rng.normal() as f32 * 0.5).collect(),
+    );
+    let kc = HostTensor::zeros(vec![hyper.max_seq, hyper.hidden]);
+    let vc = HostTensor::zeros(vec![hyper.max_seq, hyper.hidden]);
+    Bench::new("pjrt/attn s=1")
+        .with_budget(Duration::from_secs(2))
+        .run(|| black_box(pjrt.attn(&weights.layers[0], &h, &kc, &vc, 8).unwrap()))
+        .report();
+    Bench::new("pjrt/gate s=1")
+        .with_budget(Duration::from_secs(2))
+        .run(|| black_box(pjrt.gate(&weights.layers[0], &h).unwrap()))
+        .report();
+
+    section("end-to-end decode step (engine, both backends)");
+    let prompt: Vec<i32> = (0..64).collect();
+    let mut engine = Engine::pjrt(store, "gpt2_moe_mini", 7).unwrap();
+    Bench::new("pjrt/generate 64+8")
+        .with_iters(3, 50)
+        .with_budget(Duration::from_secs(5))
+        .run(|| black_box(engine.generate(&prompt, 8).unwrap()))
+        .report();
+    let mut nengine = Engine::native(model::gpt2_moe_mini(), 7);
+    Bench::new("native/generate 64+8")
+        .with_iters(3, 50)
+        .with_budget(Duration::from_secs(5))
+        .run(|| black_box(nengine.generate(&prompt, 8).unwrap()))
+        .report();
+}

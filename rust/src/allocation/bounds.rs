@@ -1,0 +1,99 @@
+//! Theorem 1 / Corollary 1 (§IV-C): Hoeffding-style worst-case bounds
+//! on per-expert token load.
+//!
+//! Theorem 1: when n tokens pass through a layer with K experts, the
+//! number of tokens any one expert processes is ≤ √(3n)/2 + n/K with
+//! probability ≥ 95%. Corollary 1 extends to any m experts:
+//! ≤ √(3n)/2 + mn/K. (Derivation: Hoeffding on the sum of n Bernoulli
+//! indicators with mean m/K; √(3n)/2 = √(n·ln(1/0.05)/2) ≈ √(1.498·n).)
+
+/// Theorem 1 bound for one expert.
+pub fn theorem1_bound(n_tokens: f64, experts: usize) -> f64 {
+    assert!(experts > 0);
+    (3.0 * n_tokens).sqrt() / 2.0 + n_tokens / experts as f64
+}
+
+/// Corollary 1 bound for a set of `m` experts.
+pub fn corollary1_bound(n_tokens: f64, m: usize, experts: usize) -> f64 {
+    assert!(experts > 0 && m <= experts);
+    (3.0 * n_tokens).sqrt() / 2.0 + (m as f64 * n_tokens) / experts as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bound_exceeds_mean() {
+        // the bound must sit above the expectation n/K
+        for n in [16.0, 128.0, 1024.0] {
+            for k in [2usize, 8, 64] {
+                assert!(theorem1_bound(n, k) > n / k as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn corollary_reduces_to_theorem_at_m1() {
+        assert_eq!(corollary1_bound(100.0, 1, 8), theorem1_bound(100.0, 8));
+    }
+
+    #[test]
+    fn corollary_monotone_in_m() {
+        let mut last = 0.0;
+        for m in 1..=8 {
+            let b = corollary1_bound(128.0, m, 8);
+            assert!(b > last);
+            last = b;
+        }
+    }
+
+    /// Empirical validation of the 95% claim: uniform multinomial
+    /// routing (the worst case the proof assumes), the per-expert load
+    /// must stay under the bound in ≥95% of trials.
+    #[test]
+    fn empirical_coverage_at_least_95_percent() {
+        let mut rng = Rng::new(42);
+        let trials = 2000;
+        for (n, k) in [(64usize, 8usize), (128, 8), (128, 16), (512, 64)] {
+            let bound = theorem1_bound(n as f64, k);
+            let mut ok = 0;
+            for _ in 0..trials {
+                let mut counts = vec![0usize; k];
+                for _ in 0..n {
+                    counts[rng.below(k as u64) as usize] += 1;
+                }
+                // check expert 0 (any fixed expert — the theorem is
+                // per-expert, not per-max)
+                if (counts[0] as f64) <= bound {
+                    ok += 1;
+                }
+            }
+            let rate = ok as f64 / trials as f64;
+            assert!(rate >= 0.95, "n={n} k={k} coverage={rate}");
+        }
+    }
+
+    /// The corollary's m-expert version, empirically.
+    #[test]
+    fn empirical_corollary_coverage() {
+        let mut rng = Rng::new(43);
+        let (n, k, m) = (128usize, 8usize, 3usize);
+        let bound = corollary1_bound(n as f64, m, k);
+        let trials = 2000;
+        let mut ok = 0;
+        for _ in 0..trials {
+            let mut hits = 0usize;
+            for _ in 0..n {
+                if rng.below(k as u64) < m as u64 {
+                    hits += 1;
+                }
+            }
+            if (hits as f64) <= bound {
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 / trials as f64 >= 0.95);
+    }
+}

@@ -1,0 +1,289 @@
+//! Main Model Pre-allocation — Algorithm 2 (§IV-C).
+//!
+//! Runs the moment a request arrives, *before* activation prediction
+//! (it overlaps with the pre-processing cold start): sweep the remote
+//! ratio b downward from 1, estimate worst-case TTFT/TPOT via the
+//! Theorem-1/Corollary-1 bounds, and return the smallest main-model
+//! memory specification that meets the SLOs.
+
+use crate::config::{CostDims, PlatformConfig, SlaConfig};
+use crate::serverless::{ColdStartModel, NetworkModel, PerfModel};
+
+use super::bounds::corollary1_bound;
+
+/// MMP output: the chosen remote ratio and main-model spec.
+#[derive(Debug, Clone)]
+pub struct MmpDecision {
+    /// b — fraction of each layer's experts that go remote.
+    pub remote_ratio: f64,
+    /// Number of remote experts per layer (⌊b·K⌋).
+    pub remote_per_layer: usize,
+    /// w — main-model memory specification, MB.
+    pub main_mem_mb: f64,
+    /// Worst-case estimates at the accepted b (audit trail).
+    pub worst_ttft_s: f64,
+    pub worst_tpot_s: f64,
+    /// Memory actually required (before snapping to the catalog).
+    pub required_mb: f64,
+}
+
+pub struct Mmp<'a> {
+    pub dims: &'a CostDims,
+    pub platform: &'a PlatformConfig,
+    pub sla: &'a SlaConfig,
+    pub perf: PerfModel,
+    pub net: NetworkModel,
+    pub cold: ColdStartModel,
+    /// ε — ratio sweep step (Alg. 2 line 10).
+    pub epsilon: f64,
+}
+
+impl<'a> Mmp<'a> {
+    pub fn new(
+        dims: &'a CostDims,
+        platform: &'a PlatformConfig,
+        sla: &'a SlaConfig,
+        epsilon: f64,
+    ) -> Self {
+        Mmp {
+            dims,
+            platform,
+            sla,
+            perf: PerfModel::from_dims(dims, platform),
+            net: NetworkModel::from_platform(platform),
+            cold: ColdStartModel::from_platform(platform),
+            epsilon,
+        }
+    }
+
+    /// Worst-case remote-expert memory a layer's function needs under
+    /// ratio b (constraint 10e with the Corollary-1 token bound).
+    fn remote_mem_required(&self, b: f64, n_in: usize) -> f64 {
+        let m = (b * self.dims.experts as f64).floor() as usize;
+        if m == 0 {
+            return 0.0;
+        }
+        let tokens = corollary1_bound(n_in as f64, m, self.dims.experts);
+        let mem = m as f64 * self.dims.expert_mb + tokens * self.dims.token_bytes / 1e6;
+        self.dims.remote_specs.round_up(mem)
+    }
+
+    /// Worst-case prefill time of layer-l remote experts under ratio b
+    /// (Alg. 2 lines 4–6): all Corollary-1 tokens on one replica. The
+    /// time estimate may assume the largest remote spec m_{V^e} —
+    /// MMP certifies that *some* remote configuration meets the SLO;
+    /// the optimizer's own TPOT constraint (q_{l,1} in P2) enforces it
+    /// for the spec it actually picks.
+    fn worst_remote_prefill(&self, b: f64, n_in: usize) -> f64 {
+        let m = (b * self.dims.experts as f64).floor() as usize;
+        if m == 0 {
+            return 0.0;
+        }
+        let mem = self.dims.remote_specs.max_mb;
+        let tokens = corollary1_bound(n_in as f64, m, self.dims.experts);
+        self.perf.expert_time(tokens, mem)
+            + 2.0 * self.net.transfer_time(tokens * self.dims.token_bytes)
+            + self.net.invoke_overhead_expected()
+    }
+
+    /// Worst-case TTFT and TPOT for (b, main memory M).
+    ///
+    /// TPOT is an *average* over N^out decode tokens, so the remote
+    /// share per token is bounded probabilistically (Corollary 1 over
+    /// the decode stream: topk·(m/K + √(3·N^out)/(2·N^out))), not by
+    /// the all-topk-remote single-token worst case — the same bound
+    /// family the paper applies to prefill loads.
+    pub fn worst_case(&self, b: f64, main_mb: f64, n_in: usize) -> (f64, f64) {
+        self.worst_case_n(b, main_mb, n_in, 48)
+    }
+
+    pub fn worst_case_n(&self, b: f64, main_mb: f64, n_in: usize, n_out: usize) -> (f64, f64) {
+        let k = self.dims.experts;
+        let m_remote = (b * k as f64).floor() as usize;
+        let m_local = k - m_remote;
+
+        // --- prefill (eq. 1/2 worst case) ---
+        let mut pt = 0.0;
+        for _l in 0..self.dims.layers {
+            let pt_f = self.perf.nonexpert_time(n_in as f64);
+            let local_tokens = corollary1_bound(n_in as f64, m_local, k);
+            let local = self.perf.expert_time(local_tokens, main_mb);
+            let remote = self.worst_remote_prefill(b, n_in);
+            pt += pt_f + local.max(remote) + 2.0 * self.perf.swap_time(n_in as f64);
+        }
+        // cold start of the main model (weights it must load)
+        let main_footprint =
+            self.dims.total_nonexpert_mb() + m_local as f64 * self.dims.layers as f64 * self.dims.expert_mb;
+        let ttft = pt + self.cold.function(main_footprint).total();
+
+        // --- decode (eq. 4/5 worst case, remote path binding §IV-C) ---
+        let remote_mem = self.dims.remote_specs.max_mb;
+        // Corollary-1 bound on the remote share of the decode stream.
+        let remote_frac = if m_remote == 0 {
+            0.0
+        } else {
+            ((m_remote as f64 / k as f64)
+                + (3.0 * n_out as f64).sqrt() / (2.0 * n_out.max(1) as f64))
+                .min(1.0)
+        };
+        let mut per_token = 0.0;
+        for _l in 0..self.dims.layers {
+            let t_f = self.perf.nonexpert_time(1.0);
+            let swap = 2.0 * self.perf.swap_time(self.dims.topk as f64);
+            let local = self.dims.topk as f64 * (1.0 - remote_frac).max(0.0)
+                * self.perf.expert_token_time(main_mb);
+            let remote = self.dims.topk as f64
+                * remote_frac
+                * (self.perf.expert_token_time(remote_mem)
+                    + 2.0 * self.net.transfer_time(self.dims.token_bytes)
+                    + self.net.invoke_overhead_expected());
+            per_token += t_f + swap + local.max(remote);
+        }
+        (ttft, per_token)
+    }
+
+    /// The Alg.-2 body at one fixed ratio: memory sizing + worst-case
+    /// SLO check. Returns the decision plus whether it is feasible.
+    pub fn decision_for(&self, b: f64, n_in: usize, n_out: usize) -> (MmpDecision, bool) {
+        let k = self.dims.experts;
+        let m_min = (n_in + n_out) as f64 * self.dims.token_bytes / 1e6;
+        // M_cal: enough main memory that local experts run no slower
+        // than the remote functions do — i.e. at least the spec a
+        // remote function needs at this ratio. (Alg. 2 initialises
+        // this to m_{V^e}; sizing it to the ratio's actual remote
+        // requirement keeps the same guarantee without forcing the
+        // catalog maximum onto every deployment — DESIGN.md §2.)
+        let m_cal = self.remote_mem_required(b, n_in);
+        let m_remote = (b * k as f64).floor() as usize;
+        let m_local = k - m_remote;
+        let m_e = m_local as f64 * self.dims.layers as f64 * self.dims.expert_mb;
+        let required = (m_min + m_e).max(m_cal);
+        let main_mb = self.dims.main_specs.round_up(required);
+        let (ttft, tpot) = self.worst_case_n(b, main_mb, n_in, n_out);
+        let feasible = ttft <= self.sla.ttft_s && tpot <= self.sla.tpot_s;
+        (
+            MmpDecision {
+                remote_ratio: b,
+                remote_per_layer: m_remote,
+                main_mem_mb: main_mb,
+                worst_ttft_s: ttft,
+                worst_tpot_s: tpot,
+                required_mb: required,
+            },
+            feasible,
+        )
+    }
+
+    /// Algorithm 2. `n_in`/`n_out` are the request's token budgets
+    /// (N^max = n_in + n_out bounds the staging memory). Sweeps b
+    /// downward from 1 and returns the first (largest) feasible ratio,
+    /// or b = 0 (all-local fallback) if none is.
+    pub fn run(&self, n_in: usize, n_out: usize) -> MmpDecision {
+        let mut b: f64 = 1.0;
+        loop {
+            let bb = b.max(0.0);
+            let (decision, feasible) = self.decision_for(bb, n_in, n_out);
+            if feasible || bb == 0.0 {
+                return decision;
+            }
+            b -= self.epsilon;
+        }
+    }
+
+    /// All feasible candidate ratios on the ε grid (largest first) —
+    /// the planner scans these for the cost-minimising b, since the
+    /// objective (10a) is cost, not offload maximisation.
+    pub fn feasible_ratios(&self, n_in: usize, n_out: usize, max_candidates: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut b: f64 = 1.0;
+        while b > -self.epsilon / 2.0 {
+            let bb = b.max(0.0);
+            let (_, feasible) = self.decision_for(bb, n_in, n_out);
+            if feasible || bb == 0.0 {
+                out.push(bb);
+            }
+            b -= self.epsilon;
+        }
+        if out.is_empty() {
+            out.push(0.0);
+        }
+        // thin to at most max_candidates, keeping the extremes
+        if out.len() > max_candidates {
+            let n = out.len();
+            let mut thin = Vec::with_capacity(max_candidates);
+            for i in 0..max_candidates {
+                thin.push(out[i * (n - 1) / (max_candidates - 1)]);
+            }
+            thin.dedup();
+            return thin;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (CostDims, PlatformConfig, SlaConfig) {
+        (CostDims::gpt2_moe(4), PlatformConfig::default(), SlaConfig::default())
+    }
+
+    #[test]
+    fn returns_valid_spec_and_ratio() {
+        let (dims, platform, sla) = setup();
+        let mmp = Mmp::new(&dims, &platform, &sla, 0.05);
+        let d = mmp.run(128, 48);
+        assert!((0.0..=1.0).contains(&d.remote_ratio));
+        assert!(d.main_mem_mb >= dims.main_specs.min_mb);
+        assert!(d.main_mem_mb <= dims.main_specs.max_mb);
+        assert!(d.remote_per_layer <= dims.experts);
+        // spec covers the requirement (unless capped by the catalog)
+        assert!(d.main_mem_mb >= d.required_mb.min(dims.main_specs.max_mb) - 1e-9);
+    }
+
+    #[test]
+    fn tight_slo_forces_more_local_experts() {
+        let (dims, platform, _) = setup();
+        let loose = SlaConfig { ttft_s: 60.0, tpot_s: 5.0 };
+        let tight = SlaConfig { ttft_s: 8.0, tpot_s: 0.06 };
+        let d_loose = Mmp::new(&dims, &platform, &loose, 0.05).run(128, 48);
+        let d_tight = Mmp::new(&dims, &platform, &tight, 0.05).run(128, 48);
+        assert!(
+            d_tight.remote_ratio <= d_loose.remote_ratio,
+            "tight {:?} vs loose {:?}",
+            d_tight.remote_ratio,
+            d_loose.remote_ratio
+        );
+        assert!(d_tight.main_mem_mb >= d_loose.main_mem_mb);
+    }
+
+    #[test]
+    fn worst_case_monotone_in_memory() {
+        let (dims, platform, sla) = setup();
+        let mmp = Mmp::new(&dims, &platform, &sla, 0.05);
+        let (ttft_small, tpot_small) = mmp.worst_case(0.5, 1000.0, 128);
+        let (ttft_big, tpot_big) = mmp.worst_case(0.5, 5000.0, 128);
+        assert!(ttft_big <= ttft_small + 1e-9);
+        assert!(tpot_big <= tpot_small + 1e-9);
+    }
+
+    #[test]
+    fn accepted_decision_meets_slo_or_is_all_local() {
+        let (dims, platform, sla) = setup();
+        let mmp = Mmp::new(&dims, &platform, &sla, 0.05);
+        let d = mmp.run(128, 48);
+        if d.remote_ratio > 0.01 {
+            assert!(d.worst_ttft_s <= sla.ttft_s + 1e-9, "{:?}", d);
+            assert!(d.worst_tpot_s <= sla.tpot_s + 1e-9, "{:?}", d);
+        }
+    }
+
+    #[test]
+    fn worst_case_remote_zero_when_b_zero() {
+        let (dims, platform, sla) = setup();
+        let mmp = Mmp::new(&dims, &platform, &sla, 0.05);
+        assert_eq!(mmp.worst_remote_prefill(0.0, 128), 0.0);
+        assert_eq!(mmp.remote_mem_required(0.0, 128), 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Resource pre-allocation for the main model: the Theorem-1 worst-case
+//! load bounds and the MMP algorithm (Alg. 2).
+
+pub mod bounds;
+pub mod mmp;
+
+pub use bounds::{corollary1_bound, theorem1_bound};
+pub use mmp::{Mmp, MmpDecision};

@@ -1,0 +1,364 @@
+//! Deployment-strategy baselines (§V-C): CPU, GPU, Fetch (idealised
+//! expert offloading), MIX (heterogeneous, everything cached) — and
+//! Remoe itself for uniform evaluation.
+//!
+//! Each strategy is scored on the same `RequestProfile` through the
+//! paper's pricing rules, so Fig. 9/10/11 compare like for like.
+
+use crate::config::{CostDims, PlatformConfig};
+use crate::costmodel::{DeploymentPlan, LatencyModel, RequestProfile};
+use crate::serverless::{ColdStartModel, PerfModel};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    Cpu,
+    Gpu,
+    Fetch,
+    Mix,
+    Remoe,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Cpu => "CPU",
+            Strategy::Gpu => "GPU",
+            Strategy::Fetch => "Fetch",
+            Strategy::Mix => "MIX",
+            Strategy::Remoe => "Remoe",
+        }
+    }
+
+    pub fn all_baselines() -> [Strategy; 4] {
+        [Strategy::Cpu, Strategy::Gpu, Strategy::Fetch, Strategy::Mix]
+    }
+}
+
+/// Uniform outcome record for every strategy.
+#[derive(Debug, Clone)]
+pub struct StrategyOutcome {
+    pub strategy: Strategy,
+    pub cost: f64,
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub cold_start_s: f64,
+}
+
+/// Evaluator for the four non-Remoe baselines.
+pub struct BaselineEvaluator {
+    pub dims: CostDims,
+    pub platform: PlatformConfig,
+    pub perf: PerfModel,
+    pub cold: ColdStartModel,
+    pub lat: LatencyModel,
+}
+
+impl BaselineEvaluator {
+    pub fn new(dims: &CostDims, platform: &PlatformConfig) -> Self {
+        BaselineEvaluator {
+            dims: dims.clone(),
+            platform: platform.clone(),
+            perf: PerfModel::from_dims(dims, platform),
+            cold: ColdStartModel::from_platform(platform),
+            lat: LatencyModel::new(dims, platform),
+        }
+    }
+
+    /// Total parameter footprint, MB.
+    fn total_params_mb(&self) -> f64 {
+        self.dims.total_expert_mb() + self.dims.total_nonexpert_mb()
+    }
+
+    /// Activation + kv-cache memory, MB (eq. 7's token terms).
+    fn activation_mb(&self, profile: &RequestProfile) -> f64 {
+        (profile.n_in + profile.n_out) as f64
+            * (self.dims.token_bytes
+                + self.dims.layers as f64 * self.dims.kv_bytes_per_token_layer)
+            / 1e6
+    }
+
+    /// GPU decode advantage: single-token decode is memory-bandwidth
+    /// bound, so the GPU's batched-compute ratio R collapses to a far
+    /// smaller factor (the standard roofline argument; prefill keeps R).
+    fn gpu_decode_ratio(&self) -> f64 {
+        self.platform.gpu_decode_speed_ratio
+    }
+
+    /// Sequential expert compute per layer (all activations on the
+    /// single deployment device), with separate prefill/decode
+    /// speed divisors.
+    fn expert_seconds(
+        &self,
+        profile: &RequestProfile,
+        mem_mb: f64,
+        pre_div: f64,
+        dec_div: f64,
+    ) -> (f64, f64) {
+        // prefill: Σ_l Σ_k τ(N_pre)
+        let mut pre = 0.0;
+        for row in &profile.prefill_counts {
+            for &n in row {
+                pre += self.perf.expert_time(n, mem_mb);
+            }
+        }
+        // decode: Σ_i Σ_l Σ_k mass·t_token
+        let mut dec = 0.0;
+        for step in &profile.decode_routing {
+            for routing in step {
+                for &(_, mass) in routing {
+                    dec += mass * self.perf.expert_token_time(mem_mb);
+                }
+            }
+        }
+        (pre / pre_div, dec / dec_div)
+    }
+
+    /// Non-expert compute (attention etc.) over the request.
+    fn nonexpert_seconds(&self, profile: &RequestProfile, pre_div: f64, dec_div: f64) -> (f64, f64) {
+        let pre = self.dims.layers as f64 * self.perf.nonexpert_time(profile.n_in as f64);
+        let dec = profile.n_out as f64 * self.dims.layers as f64 * self.perf.nonexpert_time(1.0);
+        (pre / pre_div, dec / dec_div)
+    }
+
+    /// CPU baseline: the whole model in one CPU function. Non-expert
+    /// modules lose their GPU acceleration: ×R slower in prefill,
+    /// ×√R in (latency-bound) decode.
+    pub fn cpu(&self, profile: &RequestProfile) -> StrategyOutcome {
+        let floor = self.total_params_mb() + self.activation_mb(profile);
+        let r = self.platform.gpu_speed_ratio;
+        let (ne_pre, ne_dec) =
+            self.nonexpert_seconds(profile, 1.0 / r, 1.0 / self.gpu_decode_ratio());
+        let cold = self.cold.monolithic(self.total_params_mb());
+        // A real deployment tunes its memory spec: scan the catalog for
+        // the cost-minimising allocation above the caching floor.
+        self.best_over_specs(floor, |mem| {
+            let (ex_pre, ex_dec) = self.expert_seconds(profile, mem, 1.0, 1.0);
+            let prefill = ne_pre + ex_pre;
+            let decode = ne_dec + ex_dec;
+            let cost = (prefill + decode) * self.platform.cpu_rate_per_mb_s * mem;
+            outcome(Strategy::Cpu, cost, prefill, decode, cold, profile.n_out)
+        })
+    }
+
+    /// Scan candidate memory specs ≥ `floor_mb` and keep the
+    /// cheapest outcome (evaluated at ~12 grid points of the main
+    /// catalog plus the floor itself).
+    fn best_over_specs(
+        &self,
+        floor_mb: f64,
+        eval: impl Fn(f64) -> StrategyOutcome,
+    ) -> StrategyOutcome {
+        let cat = &self.dims.main_specs;
+        let lo = cat.round_up(floor_mb.min(cat.max_mb));
+        let mut candidates = vec![lo.max(floor_mb)];
+        let steps = 12;
+        for i in 1..=steps {
+            let m = lo + (cat.max_mb - lo) * i as f64 / steps as f64;
+            if m > candidates[0] {
+                candidates.push(cat.round_up(m).max(floor_mb));
+            }
+        }
+        candidates
+            .into_iter()
+            .map(eval)
+            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+            .unwrap()
+    }
+
+    /// GPU baseline: the whole model in GPU memory, billed at c^g.
+    pub fn gpu(&self, profile: &RequestProfile) -> StrategyOutcome {
+        let mem = self.total_params_mb() + self.activation_mb(profile)
+            + self.dims.gpu_overhead_mb;
+        let (ne_pre, ne_dec) = self.nonexpert_seconds(profile, 1.0, 1.0);
+        // experts also accelerated on GPU (full R in prefill, √R decode)
+        let (ex_pre, ex_dec) = self.expert_seconds(
+            profile,
+            self.platform.mem_per_vcpu_mb, // reference point; ratio applies below
+            self.platform.gpu_speed_ratio,
+            self.gpu_decode_ratio(),
+        );
+        let prefill = ne_pre + ex_pre;
+        let decode = ne_dec + ex_dec;
+        let cold = self.cold.monolithic(self.total_params_mb());
+        let cost = (prefill + decode) * self.platform.gpu_rate_per_mb_s * mem;
+        outcome(Strategy::Gpu, cost, prefill, decode, cold, profile.n_out)
+    }
+
+    /// Fetch: the idealised expert-offloading envelope (§V-C) — every
+    /// needed expert is already on the GPU (no misprediction, no swap
+    /// cost), but all experts stay cached in CPU memory and the GPU
+    /// additionally holds the active working set.
+    pub fn fetch(&self, profile: &RequestProfile) -> StrategyOutcome {
+        let (ne_pre, ne_dec) = self.nonexpert_seconds(profile, 1.0, 1.0);
+        let (ex_pre, ex_dec) = self.expert_seconds(
+            profile,
+            self.platform.mem_per_vcpu_mb,
+            self.platform.gpu_speed_ratio,
+            self.gpu_decode_ratio(),
+        );
+        let prefill = ne_pre + ex_pre;
+        let decode = ne_dec + ex_dec;
+        // GPU: non-expert + activations + topk experts per layer hot
+        let gpu_mem = self.dims.total_nonexpert_mb()
+            + self.activation_mb(profile)
+            + self.dims.gpu_overhead_mb
+            + self.dims.layers as f64 * self.dims.topk as f64 * self.dims.expert_mb;
+        // CPU: the full expert pool stays resident
+        let cpu_mem = self.dims.total_expert_mb();
+        let cold = self.cold.monolithic(self.total_params_mb());
+        let cost = (prefill + decode)
+            * (self.platform.gpu_rate_per_mb_s * gpu_mem
+                + self.platform.cpu_rate_per_mb_s * cpu_mem);
+        outcome(Strategy::Fetch, cost, prefill, decode, cold, profile.n_out)
+    }
+
+    /// MIX: experts on CPU, non-expert on GPU, everything cached — the
+    /// all-local DeploymentPlan through the shared cost model. The CPU
+    /// side gets at least 2 vCPUs of memory (a deployment would not
+    /// starve its expert pool below that).
+    pub fn mix(&self, profile: &RequestProfile) -> StrategyOutcome {
+        let floor = self.dims.total_expert_mb()
+            + profile.n_out as f64 * self.dims.token_bytes / 1e6;
+        let cold = self.cold.monolithic(self.total_params_mb());
+        let cm = crate::costmodel::CostModel::new(&self.dims, &self.platform);
+        self.best_over_specs(floor, |main_mem| {
+            let plan =
+                DeploymentPlan::all_local(self.dims.layers, self.dims.experts, main_mem);
+            let lb = self.lat.evaluate(&plan, profile, cold);
+            let cb = cm.evaluate(&plan, profile, &lb, &self.lat);
+            StrategyOutcome {
+                strategy: Strategy::Mix,
+                cost: cb.total(),
+                ttft_s: lb.ttft(),
+                tpot_s: lb.tpot(profile.n_out),
+                prefill_s: lb.prefill_s,
+                decode_s: lb.decode_s,
+                cold_start_s: cold,
+            }
+        })
+    }
+
+    pub fn evaluate(&self, strategy: Strategy, profile: &RequestProfile) -> StrategyOutcome {
+        match strategy {
+            Strategy::Cpu => self.cpu(profile),
+            Strategy::Gpu => self.gpu(profile),
+            Strategy::Fetch => self.fetch(profile),
+            Strategy::Mix => self.mix(profile),
+            Strategy::Remoe => panic!("Remoe is evaluated by the coordinator"),
+        }
+    }
+}
+
+fn outcome(
+    strategy: Strategy,
+    cost: f64,
+    prefill: f64,
+    decode: f64,
+    cold: f64,
+    n_out: usize,
+) -> StrategyOutcome {
+    StrategyOutcome {
+        strategy,
+        cost,
+        ttft_s: prefill + cold,
+        tpot_s: if n_out == 0 { 0.0 } else { decode / n_out as f64 },
+        prefill_s: prefill,
+        decode_s: decode,
+        cold_start_s: cold,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (BaselineEvaluator, RequestProfile) {
+        let dims = CostDims::gpt2_moe(4);
+        let ev = BaselineEvaluator::new(&dims, &PlatformConfig::default());
+        let dist = vec![vec![1.0 / 8.0; 8]; 4];
+        let profile = RequestProfile::from_distribution(&dist, 128, 48, 2);
+        (ev, profile)
+    }
+
+    #[test]
+    fn gpu_fastest_cpu_slowest() {
+        let (ev, p) = setup();
+        let cpu = ev.cpu(&p);
+        let gpu = ev.gpu(&p);
+        let mix = ev.mix(&p);
+        assert!(gpu.decode_s < mix.decode_s);
+        assert!(mix.decode_s < cpu.decode_s);
+        assert!(gpu.ttft_s < cpu.ttft_s);
+    }
+
+    #[test]
+    fn mix_cheaper_than_gpu_and_cpu_on_large_model() {
+        // the §V-C observation: heterogeneous beats homogeneous — the
+        // effect is decisive on the large model (Fig. 9b)
+        let ev = BaselineEvaluator::new(
+            &CostDims::dsv2_lite(6, 16, 4),
+            &PlatformConfig::default(),
+        );
+        let dist = vec![vec![1.0 / 16.0; 16]; 6];
+        let p = RequestProfile::from_distribution(&dist, 128, 48, 4);
+        let cpu = ev.cpu(&p);
+        let gpu = ev.gpu(&p);
+        let mix = ev.mix(&p);
+        assert!(mix.cost < gpu.cost, "mix={} gpu={}", mix.cost, gpu.cost);
+        assert!(mix.cost < cpu.cost, "mix={} cpu={}", mix.cost, cpu.cost);
+        // GPU is the most expensive on the big model (memory waste on
+        // low-frequency experts at the GPU rate)
+        assert!(gpu.cost > cpu.cost, "gpu={} cpu={}", gpu.cost, cpu.cost);
+    }
+
+    #[test]
+    fn small_model_differences_are_minor() {
+        // Fig. 9a: for GPT2-moe the spread across strategies is small
+        let (ev, p) = setup();
+        let costs: Vec<f64> = Strategy::all_baselines()
+            .iter()
+            .map(|&s| ev.evaluate(s, &p).cost)
+            .collect();
+        let max = costs.iter().cloned().fold(0.0, f64::max);
+        let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 4.0, "spread too wide: {costs:?}");
+    }
+
+    #[test]
+    fn fetch_pays_for_double_caching() {
+        let (ev, p) = setup();
+        let fetch = ev.fetch(&p);
+        let mix = ev.mix(&p);
+        // Fetch is fast but keeps experts in CPU *and* a hot set on GPU
+        assert!(fetch.decode_s < mix.decode_s);
+        assert!(fetch.cost > 0.0);
+    }
+
+    #[test]
+    fn all_baselines_have_positive_metrics() {
+        let (ev, p) = setup();
+        for s in Strategy::all_baselines() {
+            let o = ev.evaluate(s, &p);
+            assert!(o.cost > 0.0, "{s:?}");
+            assert!(o.ttft_s > 0.0 && o.tpot_s > 0.0, "{s:?}");
+            assert!(o.cold_start_s > 0.0, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn bigger_model_widens_cost_gap() {
+        // Fig. 9's observation: differences grow with model scale.
+        let platform = PlatformConfig::default();
+        let small = BaselineEvaluator::new(&CostDims::gpt2_moe(4), &platform);
+        let large = BaselineEvaluator::new(&CostDims::dsv2_lite(6, 16, 4), &platform);
+        let dist_s = vec![vec![1.0 / 8.0; 8]; 4];
+        let dist_l = vec![vec![1.0 / 16.0; 16]; 6];
+        let ps = RequestProfile::from_distribution(&dist_s, 128, 48, 2);
+        let pl = RequestProfile::from_distribution(&dist_l, 128, 48, 4);
+        let gap_small = small.gpu(&ps).cost / small.mix(&ps).cost;
+        let gap_large = large.gpu(&pl).cost / large.mix(&pl).cost;
+        assert!(gap_large > gap_small, "small {gap_small} large {gap_large}");
+    }
+}

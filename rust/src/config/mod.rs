@@ -1,0 +1,422 @@
+//! Config system: platform pricing/limits, SLOs, memory-spec catalogs
+//! and the paper-scale cost dimensions.
+//!
+//! Everything is loadable from a TOML file (`remoe --config path`) and
+//! has presets mirroring the paper's §V-A settings. The *cost model*
+//! dimensions are deliberately separate from the *runtime* model spec
+//! (`model::spec::ModelSpec`, read from artifacts/manifest.json): the
+//! runtime executes the mini models, while the cost model uses
+//! paper-scale parameter sizes so that memory magnitudes, and therefore
+//! cost ratios, land in the paper's regime (DESIGN.md §2).
+
+use crate::util::tomlmini::Toml;
+
+/// Serverless platform economics and limits (§II, §III).
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// c^c — cost of 1 MB of CPU memory for 1 s (currency units).
+    pub cpu_rate_per_mb_s: f64,
+    /// c^g — cost of 1 MB of GPU memory for 1 s; the paper argues
+    /// c^g/c^c ≥ 3 on commercial platforms (§IV-E).
+    pub gpu_rate_per_mb_s: f64,
+    /// U^payload — inter-function payload limit in bytes (AWS: 6 MB).
+    pub payload_limit_bytes: f64,
+    /// B — network transfer rate between functions, MB/s.
+    pub net_bandwidth_mb_s: f64,
+    /// t^rem lognormal parameters (seconds): invocation overhead of a
+    /// warm remote-expert function (vCPU scheduling + contention).
+    pub invoke_mu: f64,
+    pub invoke_sigma: f64,
+    /// Container base start time (common image; §V-E "all approaches
+    /// share the same container startup time").
+    pub container_start_s: f64,
+    /// Disk → memory model-load bandwidth during cold start, MB/s.
+    pub disk_bandwidth_mb_s: f64,
+    /// vCPUs granted per MB of memory (paper: 1 GB ↔ 1 vCPU).
+    pub mem_per_vcpu_mb: f64,
+    /// z^max — replica cap per remote-expert function.
+    pub zmax: usize,
+    /// Exponent of the vCPU→speedup law used by the performance model
+    /// (sub-linear: memory bandwidth saturates; see serverless::perfmodel).
+    pub speedup_gamma: f64,
+    /// vCPUs beyond which extra cores no longer help a single expert GEMM.
+    pub speedup_saturation_vcpus: f64,
+    /// GPU compute speed relative to the CPU reference for non-expert
+    /// modules (used by the GPU/Fetch baselines' latency model).
+    pub gpu_speed_ratio: f64,
+    /// GPU advantage for single-token decode (bandwidth-bound, far
+    /// below the batched ratio).
+    pub gpu_decode_speed_ratio: f64,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            // Normalised currency: 1.0 == cost of 1 MB·s of CPU memory.
+            cpu_rate_per_mb_s: 1.0,
+            gpu_rate_per_mb_s: 3.0,
+            payload_limit_bytes: 6.0 * 1024.0 * 1024.0,
+            net_bandwidth_mb_s: 100.0,
+            invoke_mu: -5.0, // median e^-5 ≈ 6.7 ms
+            invoke_sigma: 0.35,
+            container_start_s: 2.0,
+            disk_bandwidth_mb_s: 500.0,
+            mem_per_vcpu_mb: 1024.0,
+            zmax: 8,
+            speedup_gamma: 0.75,
+            speedup_saturation_vcpus: 16.0,
+            gpu_speed_ratio: 8.0,
+            gpu_decode_speed_ratio: 2.0,
+        }
+    }
+}
+
+impl PlatformConfig {
+    pub fn vcpus(&self, mem_mb: f64) -> f64 {
+        (mem_mb / self.mem_per_vcpu_mb).max(0.125)
+    }
+
+    pub fn from_toml(t: &Toml) -> Self {
+        let d = PlatformConfig::default();
+        PlatformConfig {
+            cpu_rate_per_mb_s: t.f64_or("platform.cpu_rate_per_mb_s", d.cpu_rate_per_mb_s),
+            gpu_rate_per_mb_s: t.f64_or("platform.gpu_rate_per_mb_s", d.gpu_rate_per_mb_s),
+            payload_limit_bytes: t.f64_or("platform.payload_limit_bytes", d.payload_limit_bytes),
+            net_bandwidth_mb_s: t.f64_or("platform.net_bandwidth_mb_s", d.net_bandwidth_mb_s),
+            invoke_mu: t.f64_or("platform.invoke_mu", d.invoke_mu),
+            invoke_sigma: t.f64_or("platform.invoke_sigma", d.invoke_sigma),
+            container_start_s: t.f64_or("platform.container_start_s", d.container_start_s),
+            disk_bandwidth_mb_s: t.f64_or("platform.disk_bandwidth_mb_s", d.disk_bandwidth_mb_s),
+            mem_per_vcpu_mb: t.f64_or("platform.mem_per_vcpu_mb", d.mem_per_vcpu_mb),
+            zmax: t.usize_or("platform.zmax", d.zmax),
+            speedup_gamma: t.f64_or("platform.speedup_gamma", d.speedup_gamma),
+            speedup_saturation_vcpus: t.f64_or(
+                "platform.speedup_saturation_vcpus",
+                d.speedup_saturation_vcpus,
+            ),
+            gpu_speed_ratio: t.f64_or("platform.gpu_speed_ratio", d.gpu_speed_ratio),
+            gpu_decode_speed_ratio: t
+                .f64_or("platform.gpu_decode_speed_ratio", d.gpu_decode_speed_ratio),
+        }
+    }
+}
+
+/// SLO targets (§III-B3).
+#[derive(Debug, Clone, Copy)]
+pub struct SlaConfig {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+}
+
+impl Default for SlaConfig {
+    fn default() -> Self {
+        SlaConfig { ttft_s: 10.0, tpot_s: 0.35 }
+    }
+}
+
+impl SlaConfig {
+    /// Per-model SLOs used by the evaluation (scaled to each model's
+    /// achievable latency envelope, as the paper's testbed SLOs were).
+    pub fn for_dims(dims: &CostDims) -> Self {
+        if dims.name == "dsv2_lite" {
+            SlaConfig { ttft_s: 20.0, tpot_s: 0.25 }
+        } else {
+            SlaConfig { ttft_s: 6.0, tpot_s: 0.05 }
+        }
+    }
+
+    pub fn from_toml(t: &Toml) -> Self {
+        let d = SlaConfig::default();
+        SlaConfig {
+            ttft_s: t.f64_or("sla.ttft_s", d.ttft_s),
+            tpot_s: t.f64_or("sla.tpot_s", d.tpot_s),
+        }
+    }
+}
+
+/// Memory-specification catalog M = {m_1..m_V} (§III-A): a range with a
+/// fixed step, as in the paper (step 100 MB).
+#[derive(Debug, Clone)]
+pub struct SpecCatalog {
+    pub min_mb: f64,
+    pub max_mb: f64,
+    pub step_mb: f64,
+}
+
+impl SpecCatalog {
+    pub fn new(min_mb: f64, max_mb: f64, step_mb: f64) -> Self {
+        assert!(max_mb >= min_mb && step_mb > 0.0);
+        SpecCatalog { min_mb, max_mb, step_mb }
+    }
+
+    pub fn specs(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut m = self.min_mb;
+        while m <= self.max_mb + 1e-9 {
+            out.push(m);
+            m += self.step_mb;
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        ((self.max_mb - self.min_mb) / self.step_mb).round() as usize + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Smallest specification ≥ `mem_mb`; None if it exceeds the catalog.
+    pub fn smallest_at_least(&self, mem_mb: f64) -> Option<f64> {
+        if mem_mb <= self.min_mb {
+            return Some(self.min_mb);
+        }
+        if mem_mb > self.max_mb + 1e-9 {
+            return None;
+        }
+        let steps = ((mem_mb - self.min_mb) / self.step_mb).ceil();
+        Some((self.min_mb + steps * self.step_mb).min(self.max_mb))
+    }
+
+    /// Clamp an arbitrary (continuous) memory to the catalog grid —
+    /// the final discretisation step after the Lagrangian solve.
+    pub fn round_up(&self, mem_mb: f64) -> f64 {
+        self.smallest_at_least(mem_mb).unwrap_or(self.max_mb)
+    }
+}
+
+/// Paper-scale dimensions consumed by the *cost model* (eqs. 6–9).
+///
+/// Parameter sizes use bf16 (2 bytes) like the paper's Table I; the
+/// runtime mini-model executes in f32 but never feeds its own byte
+/// sizes into the cost model.
+#[derive(Debug, Clone)]
+pub struct CostDims {
+    pub name: String,
+    /// D — token embedding size in bytes (Table I).
+    pub token_bytes: f64,
+    /// L — layers; must match the runtime model's layer count so the
+    /// activation matrices line up.
+    pub layers: usize,
+    /// K — experts per layer (must match the runtime model).
+    pub experts: usize,
+    /// top-k per token (must match the runtime model).
+    pub topk: usize,
+    /// μ(e_{l,k}) — one expert's parameters, MB.
+    pub expert_mb: f64,
+    /// μ(f_l) — one layer's non-expert modules (attention + gate +
+    /// shared experts), MB; lives in GPU memory for the main model.
+    pub nonexpert_mb_per_layer: f64,
+    /// Embedding + head tables, MB (GPU side).
+    pub embed_mb: f64,
+    /// a_l — kv-cache bytes per token per layer.
+    pub kv_bytes_per_token_layer: f64,
+    /// Remote-expert and main-model spec catalogs (§V-A).
+    pub remote_specs: SpecCatalog,
+    pub main_specs: SpecCatalog,
+    /// Reference decode time of one expert for ONE token at 1 vCPU,
+    /// seconds — calibrated from the profiled mini-model kernel scaled
+    /// by the parameter ratio (serverless::perfmodel).
+    pub expert_token_s_ref: f64,
+    /// Non-expert (attention etc.) time per token per layer on GPU, s.
+    pub nonexpert_token_s_gpu: f64,
+    /// CPU↔GPU staging time per token (τ^sw), seconds.
+    pub swap_s_per_token: f64,
+    /// Fixed GPU workspace a serving stack reserves beyond parameters
+    /// (CUDA context, kernels, staging buffers), MB. Charged to every
+    /// strategy that touches a GPU.
+    pub gpu_overhead_mb: f64,
+    /// Physical-to-runtime layer ratio: the runtime mini has fewer
+    /// layers than the paper's model, so each runtime layer stands for
+    /// `layer_scale` physical layers — memory and per-layer compute
+    /// are scaled accordingly (DESIGN.md §2).
+    pub layer_scale: f64,
+}
+
+impl CostDims {
+    /// GPT2-moe (§V-A): 12 layers × 8 experts, top-2, hidden 768.
+    /// Our runtime mini keeps the K=8/top-2 topology with 4 runtime
+    /// layers, each standing for 12/4 = 3 physical layers.
+    pub fn gpt2_moe(runtime_layers: usize) -> Self {
+        let hidden = 768.0;
+        let ffn = 3072.0;
+        let bytes = 2.0; // bf16
+        let scale = 12.0 / runtime_layers as f64;
+        let expert_mb = 2.0 * hidden * ffn * bytes / 1e6; // ≈ 9.4 MB physical
+        CostDims {
+            name: "gpt2_moe".into(),
+            token_bytes: hidden * bytes,
+            layers: runtime_layers,
+            experts: 8,
+            topk: 2,
+            expert_mb: expert_mb * scale,
+            // attention (4 H²) + ln + gate ≈ 4.8 MB/physical-layer
+            nonexpert_mb_per_layer: (4.0 * hidden * hidden + 2.0 * hidden * 8.0) * bytes / 1e6
+                * scale,
+            embed_mb: 50257.0 * hidden * bytes / 1e6,
+            kv_bytes_per_token_layer: 2.0 * hidden * bytes * scale,
+            remote_specs: SpecCatalog::new(200.0, 2000.0, 100.0),
+            main_specs: SpecCatalog::new(200.0, 5000.0, 100.0),
+            // ≈0.5 ms/token/physical expert at 1 vCPU (4.7 MFLOP GEMV
+            // at ~10 GFLOPS effective)
+            expert_token_s_ref: 0.0005 * scale,
+            nonexpert_token_s_gpu: 0.0002 * scale,
+            swap_s_per_token: 0.00002,
+            gpu_overhead_mb: 500.0,
+            layer_scale: scale,
+        }
+    }
+
+    /// Deepseek-v2-lite (§V-A): 27 layers, 64 routed + 2 shared
+    /// experts, top-6. Runtime mini keeps the many-experts/shared
+    /// topology (K=16, top-4) at 6 runtime layers (scale 27/6 = 4.5).
+    pub fn dsv2_lite(runtime_layers: usize, runtime_experts: usize, runtime_topk: usize) -> Self {
+        let hidden = 2048.0;
+        let moe_ffn = 1408.0;
+        let bytes = 2.0;
+        let scale = 27.0 / runtime_layers as f64;
+        // 64 physical routed experts fold into K=16 runtime experts:
+        // each runtime expert carries 64/16 = 4 physical experts' mass.
+        let expert_fold = 64.0 / runtime_experts as f64;
+        let expert_mb = 3.0 * hidden * moe_ffn * bytes / 1e6; // ≈ 17.3 MB physical
+        CostDims {
+            name: "dsv2_lite".into(),
+            token_bytes: hidden * bytes,
+            layers: runtime_layers,
+            experts: runtime_experts,
+            topk: runtime_topk,
+            expert_mb: expert_mb * scale * expert_fold,
+            // attention + 2 shared experts (counted in F_l per §III-A)
+            nonexpert_mb_per_layer: ((4.0 * hidden * hidden) * bytes / 1e6
+                + 2.0 * 3.0 * hidden * moe_ffn * bytes / 1e6)
+                * scale,
+            embed_mb: 102400.0 * hidden * bytes / 1e6,
+            kv_bytes_per_token_layer: 2.0 * hidden * bytes * scale,
+            remote_specs: SpecCatalog::new(1000.0, 5000.0, 100.0),
+            main_specs: SpecCatalog::new(1000.0, 40000.0, 100.0),
+            // ≈0.9 ms/token/physical expert at 1 vCPU; the 6/topk
+            // factor folds the physical top-6 activations into the
+            // runtime top-4
+            expert_token_s_ref: 0.0009 * scale * (6.0 / runtime_topk as f64),
+            nonexpert_token_s_gpu: 0.0006 * scale,
+            swap_s_per_token: 0.00005,
+            gpu_overhead_mb: 500.0,
+            layer_scale: scale,
+        }
+    }
+
+    /// Total expert parameters across the model, MB.
+    pub fn total_expert_mb(&self) -> f64 {
+        self.layers as f64 * self.experts as f64 * self.expert_mb
+    }
+
+    /// Total non-expert (GPU) parameters, MB.
+    pub fn total_nonexpert_mb(&self) -> f64 {
+        self.layers as f64 * self.nonexpert_mb_per_layer + self.embed_mb
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub platform: PlatformConfig,
+    pub sla: SlaConfig,
+    /// SPS hyper-parameters (§IV-B): top-α similar prompts, β split
+    /// threshold for the clustering tree.
+    pub alpha: usize,
+    pub beta: usize,
+    /// MMP ratio sweep step ε (Alg. 2).
+    pub epsilon: f64,
+    /// η — prefill/decode time ratio bound used by the reformulation
+    /// (§IV-E; "usually η ≤ 0.1").
+    pub eta: f64,
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            platform: PlatformConfig::default(),
+            sla: SlaConfig::default(),
+            alpha: 15,
+            beta: 150,
+            epsilon: 0.05,
+            eta: 0.1,
+            seed: 42,
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        let t = Toml::parse(text)?;
+        let d = SystemConfig::default();
+        Ok(SystemConfig {
+            platform: PlatformConfig::from_toml(&t),
+            sla: SlaConfig::from_toml(&t),
+            alpha: t.usize_or("sps.alpha", d.alpha),
+            beta: t.usize_or("sps.beta", d.beta),
+            epsilon: t.f64_or("mmp.epsilon", d.epsilon),
+            eta: t.f64_or("optimizer.eta", d.eta),
+            seed: t.f64_or("seed", d.seed as f64) as u64,
+        })
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_platform_matches_paper_assumptions() {
+        let p = PlatformConfig::default();
+        assert!(p.gpu_rate_per_mb_s / p.cpu_rate_per_mb_s >= 3.0);
+        assert_eq!(p.payload_limit_bytes, 6.0 * 1024.0 * 1024.0);
+        assert!((p.vcpus(1024.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_catalog_grid() {
+        let c = SpecCatalog::new(200.0, 2000.0, 100.0);
+        let specs = c.specs();
+        assert_eq!(specs.len(), 19);
+        assert_eq!(c.len(), 19);
+        assert_eq!(specs[0], 200.0);
+        assert_eq!(*specs.last().unwrap(), 2000.0);
+        assert_eq!(c.smallest_at_least(150.0), Some(200.0));
+        assert_eq!(c.smallest_at_least(201.0), Some(300.0));
+        assert_eq!(c.smallest_at_least(2000.0), Some(2000.0));
+        assert_eq!(c.smallest_at_least(2001.0), None);
+        assert_eq!(c.round_up(5000.0), 2000.0);
+    }
+
+    #[test]
+    fn cost_dims_paper_scale() {
+        let g = CostDims::gpt2_moe(4);
+        // Table I: GPT2-scale token ~1.5 KB at bf16 (768·2)
+        assert!((g.token_bytes - 1536.0).abs() < 1.0);
+        assert!(g.expert_mb > 20.0 && g.expert_mb < 40.0); // 3 physical layers folded
+        assert!((g.total_expert_mb() - 906.0).abs() < 10.0);
+        let d = CostDims::dsv2_lite(6, 16, 4);
+        assert!(d.expert_mb > g.expert_mb);
+        assert!(d.total_nonexpert_mb() > 100.0);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = SystemConfig::from_toml_str(
+            "[platform]\ngpu_rate_per_mb_s = 5.0\n[sps]\nalpha = 7\n[sla]\nttft_s = 3.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.platform.gpu_rate_per_mb_s, 5.0);
+        assert_eq!(cfg.alpha, 7);
+        assert_eq!(cfg.sla.ttft_s, 3.5);
+        assert_eq!(cfg.eta, 0.1); // default preserved
+    }
+}

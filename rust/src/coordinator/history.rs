@@ -1,0 +1,71 @@
+//! Historical-data collection (the SPS offline phase): run training
+//! prompts through the *real* model, record each prompt's prefill
+//! activation distribution and semantic signature.
+
+use anyhow::Result;
+
+use crate::model::{tokenizer, Backend, Engine};
+use crate::prediction::{History, Signature};
+use crate::workload::corpus::Prompt;
+
+/// Tokenize a prompt, clipped to the engine's prefill capacity.
+pub fn prompt_ids<B: Backend>(engine: &Engine<B>, text: &str) -> Vec<i32> {
+    tokenizer::encode_clipped(text, engine.hyper.max_seq.saturating_sub(64))
+}
+
+/// Signature of a prompt under the engine's embedding table.
+pub fn prompt_signature<B: Backend>(engine: &Engine<B>, text: &str) -> Signature {
+    Signature::from_tokens(&prompt_ids(engine, text), &engine.weights.wte)
+}
+
+/// Run every training prompt through prefill and collect (signature,
+/// normalised activation matrix) pairs.
+pub fn build_history<B: Backend>(engine: &mut Engine<B>, prompts: &[Prompt]) -> Result<History> {
+    let mut history = History::default();
+    for p in prompts {
+        let ids = prompt_ids(engine, &p.text);
+        let acts = engine.prefill_activations(&ids)?;
+        let sig = Signature::from_tokens(&ids, &engine.weights.wte);
+        history.push(sig, acts.normalized());
+    }
+    Ok(history)
+}
+
+/// Ground-truth distribution of a test prompt (for JSD scoring).
+pub fn ground_truth<B: Backend>(engine: &mut Engine<B>, text: &str) -> Result<Vec<Vec<f64>>> {
+    let ids = prompt_ids(engine, text);
+    Ok(engine.prefill_activations(&ids)?.normalized())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+    use crate::util::rng::Rng;
+    use crate::workload::corpus::{standard_corpora, Corpus};
+
+    #[test]
+    fn history_built_from_real_gates() {
+        let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let mut rng = Rng::new(3);
+        let prompts: Vec<_> = (0..6).map(|_| corpus.sample(&mut rng, None)).collect();
+        let h = build_history(&mut engine, &prompts).unwrap();
+        assert_eq!(h.len(), 6);
+        for d in &h.distributions {
+            assert_eq!(d.len(), 4); // layers
+            for row in d {
+                assert_eq!(row.len(), 8); // experts
+                assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn same_prompt_same_truth() {
+        let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+        let a = ground_truth(&mut engine, "hello world this is a test").unwrap();
+        let b = ground_truth(&mut engine, "hello world this is a test").unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,12 @@
+//! The Remoe coordinator (§IV-A): request lifecycle steps i–v —
+//! activation prediction, resource pre-allocation, remote-expert
+//! selection, memory optimization, multi-replica inference — plus the
+//! serving loop and the offline history builder.
+
+pub mod history;
+pub mod planner;
+pub mod serve;
+
+pub use history::{build_history, ground_truth, prompt_ids, prompt_signature};
+pub use planner::{PlanOutput, Planner};
+pub use serve::{serve_remoe, WarmState};

@@ -1,0 +1,145 @@
+//! The serving loop: Remoe's request path end to end.
+//!
+//! For each request: predict S̃ (SPS) → plan (MMP → selection →
+//! Lagrangian → LPT, all in `calc_time`) → execute the *real* model
+//! through the engine (PJRT artifacts on the production path) →
+//! account latency/cost with the measured routing through the paper's
+//! model, with warm-pool semantics across requests.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::costmodel::RequestProfile;
+use crate::metrics::{Aggregator, RequestRecord};
+use crate::model::{Backend, Engine};
+use crate::prediction::ActivationPredictor;
+use crate::workload::trace::Request;
+
+use super::history::{prompt_ids, prompt_signature};
+use super::planner::Planner;
+
+/// Warm-state tracker: the main-model function (and its remote expert
+/// functions) stay warm for `keepalive_s` after a request finishes.
+#[derive(Debug, Clone)]
+pub struct WarmState {
+    pub keepalive_s: f64,
+    warm_until: f64,
+}
+
+impl WarmState {
+    pub fn new(keepalive_s: f64) -> Self {
+        WarmState { keepalive_s, warm_until: -1.0 }
+    }
+
+    pub fn is_warm(&self, t: f64) -> bool {
+        t <= self.warm_until
+    }
+
+    pub fn touch(&mut self, finish: f64) {
+        self.warm_until = finish + self.keepalive_s;
+    }
+}
+
+/// Serve a trace through Remoe. Returns per-request records.
+pub fn serve_remoe<B: Backend>(
+    engine: &mut Engine<B>,
+    planner: &Planner,
+    predictor: &dyn ActivationPredictor,
+    trace: &[Request],
+    keepalive_s: f64,
+) -> Result<Aggregator> {
+    let mut agg = Aggregator::default();
+    let mut warm = WarmState::new(keepalive_s);
+    let mut clock = 0.0f64;
+
+    for req in trace {
+        clock = clock.max(req.arrival_s);
+
+        // step i — activation prediction from the prompt's semantics
+        let sig = prompt_signature(engine, &req.prompt.text);
+        let dist = predictor.predict(&sig);
+
+        // steps ii–v — the planner (its wall time is CALCULATE)
+        let ids = prompt_ids(engine, &req.prompt.text);
+        let n_in = ids.len();
+        let out = planner.plan(&dist, n_in, req.n_out);
+
+        // real execution (the request path: PJRT artifacts, no python)
+        let t0 = Instant::now();
+        let gen = engine.generate(&ids, req.n_out)?;
+        let engine_wall_s = t0.elapsed().as_secs_f64();
+
+        // account with the *measured* routing, not the prediction
+        let profile = RequestProfile::from_generation(&gen);
+        let cold = if warm.is_warm(clock) { 0.0 } else { out.cold_start_s };
+        let lb = planner.lat.evaluate(&out.plan, &profile, cold);
+        let cb = planner.cost.evaluate(&out.plan, &profile, &lb, &planner.lat);
+
+        let finish = clock + lb.ttft() + lb.decode_s;
+        warm.touch(finish);
+        clock = finish;
+
+        agg.push(RequestRecord {
+            id: req.id,
+            strategy: "Remoe",
+            n_in,
+            n_out: req.n_out,
+            ttft_s: lb.ttft(),
+            tpot_s: lb.tpot(req.n_out),
+            cost: cb.total(),
+            cold_start_s: cold,
+            calc_time_s: out.calc_time_s,
+            engine_wall_s,
+        });
+    }
+    Ok(agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CostDims, SlaConfig, SystemConfig};
+    use crate::coordinator::history::build_history;
+    use crate::model;
+    use crate::prediction::{SpsPredictor, TreeParams};
+    use crate::util::rng::Rng;
+    use crate::workload::corpus::{standard_corpora, Corpus};
+    use crate::workload::trace::batch_trace;
+
+    #[test]
+    fn serves_a_small_trace_end_to_end() {
+        let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (train, test) = corpus.split(30, 4, 5);
+        let history = build_history(&mut engine, &train).unwrap();
+        let params = TreeParams { beta: 20, fanout: 3, ..TreeParams::default() };
+        let sps = SpsPredictor::build(history, 5, params, &mut Rng::new(1));
+
+        let dims = CostDims::gpt2_moe(4);
+        let cfg = SystemConfig::default();
+        let sla = SlaConfig::default();
+        let planner = Planner::new(&dims, &cfg, &sla);
+
+        let trace = batch_trace(&test, 16);
+        let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0).unwrap();
+        assert_eq!(agg.len(), 4);
+        // first request pays a cold start, later warm ones don't
+        assert!(agg.records[0].cold_start_s > 0.0);
+        assert_eq!(agg.records[1].cold_start_s, 0.0);
+        for r in &agg.records {
+            assert!(r.cost > 0.0 && r.ttft_s > 0.0 && r.tpot_s > 0.0);
+            assert!(r.engine_wall_s > 0.0);
+        }
+        assert!(agg.engine_throughput() > 0.0);
+    }
+
+    #[test]
+    fn warm_state_expiry() {
+        let mut w = WarmState::new(10.0);
+        assert!(!w.is_warm(0.0));
+        w.touch(100.0);
+        assert!(w.is_warm(105.0));
+        assert!(!w.is_warm(110.5));
+    }
+}

@@ -1,0 +1,231 @@
+//! Inference cost of Remoe: eqs. (6)–(9) (§III-C).
+
+use crate::config::{CostDims, PlatformConfig};
+
+use super::{DeploymentPlan, LatencyBreakdown, LatencyModel, RequestProfile};
+
+/// Cost decomposition of one request.
+#[derive(Debug, Clone, Default)]
+pub struct CostBreakdown {
+    /// C^loc split into its GPU and CPU memory factors (eq. 6).
+    pub main_gpu: f64,
+    pub main_cpu: f64,
+    /// PC^rem (eq. 8).
+    pub remote_prefill: f64,
+    /// GC^rem (eq. 9).
+    pub remote_decode: f64,
+}
+
+impl CostBreakdown {
+    pub fn main(&self) -> f64 {
+        self.main_gpu + self.main_cpu
+    }
+
+    pub fn remote(&self) -> f64 {
+        self.remote_prefill + self.remote_decode
+    }
+
+    pub fn total(&self) -> f64 {
+        self.main() + self.remote()
+    }
+}
+
+/// Evaluates eqs. (6)–(9).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub dims: CostDims,
+    pub cpu_rate: f64,
+    pub gpu_rate: f64,
+}
+
+impl CostModel {
+    pub fn new(dims: &CostDims, platform: &PlatformConfig) -> Self {
+        CostModel {
+            dims: dims.clone(),
+            cpu_rate: platform.cpu_rate_per_mb_s,
+            gpu_rate: platform.gpu_rate_per_mb_s,
+        }
+    }
+
+    /// M^g (eq. 7): GPU memory of the main model = token embeddings +
+    /// full kv-cache + non-expert modules, in MB.
+    pub fn main_gpu_mb(&self, profile: &RequestProfile, plan: &DeploymentPlan) -> f64 {
+        let _ = plan;
+        let tokens = (profile.n_in + profile.n_out) as f64;
+        let act_bytes = tokens
+            * (self.dims.token_bytes
+                + self.dims.layers as f64 * self.dims.kv_bytes_per_token_layer);
+        act_bytes / 1e6 + self.dims.total_nonexpert_mb() + self.dims.gpu_overhead_mb
+    }
+
+    /// Minimum CPU memory the main model needs for its local experts +
+    /// decode-token staging (constraint 10f's left side), MB.
+    pub fn main_min_cpu_mb(&self, plan: &DeploymentPlan, n_out: usize) -> f64 {
+        let mut local_mb = 0.0;
+        for l in 0..plan.layers() {
+            local_mb +=
+                plan.remote[l].iter().filter(|&&r| !r).count() as f64 * self.dims.expert_mb;
+        }
+        local_mb + n_out as f64 * self.dims.token_bytes / 1e6
+    }
+
+    /// Memory a remote-expert function for layer l must hold
+    /// (constraint 10e's left side), MB.
+    pub fn remote_min_mb(&self, plan: &DeploymentPlan, profile: &RequestProfile, l: usize) -> f64 {
+        let mut mb = 0.0;
+        for k in plan.remote_set(l) {
+            mb += self.dims.expert_mb
+                + profile.prefill_counts[l][k] * self.dims.token_bytes / 1e6;
+        }
+        mb
+    }
+
+    /// C^loc (eq. 6): (PT + GT) · [c^g·M^g + c^c·Σ w_v·m_v].
+    pub fn main_cost(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+        latency: &LatencyBreakdown,
+    ) -> (f64, f64) {
+        let duration = latency.prefill_s + latency.decode_s;
+        let gpu = duration * self.gpu_rate * self.main_gpu_mb(profile, plan);
+        let cpu = duration * self.cpu_rate * plan.main_mem_mb;
+        (gpu, cpu)
+    }
+
+    /// PC^rem (eq. 8): c^c · Σ_l m_l · Σ_j ZT_{l,j}.
+    pub fn remote_prefill_cost(&self, plan: &DeploymentPlan, latency: &LatencyBreakdown) -> f64 {
+        let mut cost = 0.0;
+        for (l, reps) in latency.replica_times.iter().enumerate() {
+            let mem = plan.remote_mem_mb[l];
+            cost += self.cpu_rate * mem * reps.iter().sum::<f64>();
+        }
+        cost
+    }
+
+    /// GC^rem (eq. 9): per decode token, each remote activation bills
+    /// its function's memory for (t^rem_expert + 2D/B + t^rem).
+    pub fn remote_decode_cost(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+        lat: &LatencyModel,
+    ) -> f64 {
+        let mut cost = 0.0;
+        for step in &profile.decode_routing {
+            for (l, routing) in step.iter().enumerate() {
+                let mem = plan.remote_mem_mb[l];
+                for &(k, mass) in routing {
+                    if plan.remote[l][k] {
+                        let per_activation = lat.perf.expert_token_time(mem)
+                            + 2.0 * lat.net.transfer_time(self.dims.token_bytes)
+                            + lat.t_rem_s;
+                        cost += self.cpu_rate * mem * mass * per_activation;
+                    }
+                }
+            }
+        }
+        cost
+    }
+
+    /// Full decomposition (eqs. 6–9).
+    pub fn evaluate(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+        latency: &LatencyBreakdown,
+        lat_model: &LatencyModel,
+    ) -> CostBreakdown {
+        let (main_gpu, main_cpu) = self.main_cost(plan, profile, latency);
+        CostBreakdown {
+            main_gpu,
+            main_cpu,
+            remote_prefill: self.remote_prefill_cost(plan, latency),
+            remote_decode: self.remote_decode_cost(plan, profile, lat_model),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::RequestProfile;
+
+    fn setup() -> (CostModel, LatencyModel, RequestProfile) {
+        let dims = CostDims::gpt2_moe(4);
+        let platform = PlatformConfig::default();
+        let cost = CostModel::new(&dims, &platform);
+        let lat = LatencyModel::new(&dims, &platform);
+        let dist = vec![vec![1.0 / 8.0; 8]; 4];
+        let profile = RequestProfile::from_distribution(&dist, 64, 16, 2);
+        (cost, lat, profile)
+    }
+
+    fn remote_plan(b: usize, mem: f64) -> DeploymentPlan {
+        let mut plan = DeploymentPlan::all_local(4, 8, 2000.0);
+        for l in 0..4 {
+            for k in 0..b {
+                plan.remote[l][k] = true;
+            }
+            if b > 0 {
+                plan.remote_mem_mb[l] = mem;
+                plan.replicas[l] = 1;
+                plan.partitions[l] = vec![(0..b).collect()];
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn all_local_has_zero_remote_cost() {
+        let (cm, lm, p) = setup();
+        let plan = DeploymentPlan::all_local(4, 8, 2000.0);
+        let lb = lm.evaluate(&plan, &p, 0.0);
+        let cb = cm.evaluate(&plan, &p, &lb, &lm);
+        assert_eq!(cb.remote(), 0.0);
+        assert!(cb.main_gpu > 0.0 && cb.main_cpu > 0.0);
+    }
+
+    #[test]
+    fn gpu_memory_grows_with_tokens() {
+        let (cm, _, _) = setup();
+        let plan = DeploymentPlan::all_local(4, 8, 2000.0);
+        let dist = vec![vec![1.0 / 8.0; 8]; 4];
+        let small = RequestProfile::from_distribution(&dist, 32, 8, 2);
+        let large = RequestProfile::from_distribution(&dist, 128, 64, 2);
+        assert!(cm.main_gpu_mb(&large, &plan) > cm.main_gpu_mb(&small, &plan));
+    }
+
+    #[test]
+    fn remote_costs_scale_with_memory_spec() {
+        let (cm, lm, p) = setup();
+        let cheap = remote_plan(4, 500.0);
+        let costly = remote_plan(4, 2000.0);
+        let lb_cheap = lm.evaluate(&cheap, &p, 0.0);
+        let lb_costly = lm.evaluate(&costly, &p, 0.0);
+        let c1 = cm.evaluate(&cheap, &p, &lb_cheap, &lm);
+        let c2 = cm.evaluate(&costly, &p, &lb_costly, &lm);
+        // 4× memory at >×/4 speedup ⇒ decode cost rises with spec
+        assert!(c2.remote_decode > c1.remote_decode);
+    }
+
+    #[test]
+    fn offloading_reduces_main_min_cpu() {
+        let (cm, _, p) = setup();
+        let local = DeploymentPlan::all_local(4, 8, 2000.0);
+        let remote = remote_plan(4, 1000.0);
+        assert!(cm.main_min_cpu_mb(&remote, p.n_out) < cm.main_min_cpu_mb(&local, p.n_out));
+        assert!(cm.remote_min_mb(&remote, &p, 0) > 0.0);
+        assert_eq!(cm.remote_min_mb(&local, &p, 0), 0.0);
+    }
+
+    #[test]
+    fn cost_components_sum() {
+        let (cm, lm, p) = setup();
+        let plan = remote_plan(3, 800.0);
+        let lb = lm.evaluate(&plan, &p, 0.0);
+        let cb = cm.evaluate(&plan, &p, &lb, &lm);
+        assert!((cb.total() - (cb.main() + cb.remote())).abs() < 1e-12);
+        assert!(cb.remote_prefill > 0.0 && cb.remote_decode > 0.0);
+    }
+}

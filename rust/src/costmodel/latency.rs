@@ -1,0 +1,253 @@
+//! Inference latency of Remoe: eqs. (1)–(5) plus TTFT/TPOT (§III-B).
+
+use crate::config::{CostDims, PlatformConfig};
+use crate::serverless::{NetworkModel, PerfModel};
+
+use super::{DeploymentPlan, RequestProfile};
+
+/// Full latency decomposition of one request under a deployment plan.
+#[derive(Debug, Clone)]
+pub struct LatencyBreakdown {
+    /// PT — total prefilling time (eq. 1).
+    pub prefill_s: f64,
+    /// GT — total decoding time (eq. 4).
+    pub decode_s: f64,
+    /// Per-layer replica runtimes during prefill: ZT_{l,j} (eq. 3).
+    pub replica_times: Vec<Vec<f64>>,
+    /// Per-decode-token expert phase times GT^e_{l,i} summed over l.
+    pub decode_expert_s: f64,
+    /// Cold start component of TTFT.
+    pub cold_start_s: f64,
+}
+
+impl LatencyBreakdown {
+    /// T^ttft = PT + T^cold.
+    pub fn ttft(&self) -> f64 {
+        self.prefill_s + self.cold_start_s
+    }
+
+    /// T^tpot = GT / N^out.
+    pub fn tpot(&self, n_out: usize) -> f64 {
+        if n_out == 0 {
+            0.0
+        } else {
+            self.decode_s / n_out as f64
+        }
+    }
+}
+
+/// Evaluates eqs. (1)–(5) for a (plan, request) pair.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    pub perf: PerfModel,
+    pub net: NetworkModel,
+    pub dims: CostDims,
+    /// E[t^rem] used in planning mode; the platform simulator samples
+    /// the lognormal instead.
+    pub t_rem_s: f64,
+}
+
+impl LatencyModel {
+    pub fn new(dims: &CostDims, platform: &PlatformConfig) -> Self {
+        let net = NetworkModel::from_platform(platform);
+        LatencyModel {
+            perf: PerfModel::from_dims(dims, platform),
+            t_rem_s: net.invoke_overhead_expected(),
+            net,
+            dims: dims.clone(),
+        }
+    }
+
+    /// ZT_{l,j} (eq. 3): one replica's prefill work =
+    /// Σ_{k ∈ R_{l,j}} (PT^rem_{l,k} + 2·N^pre_{l,k}·D/B) + t^rem.
+    pub fn replica_time(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+        l: usize,
+        part: &[usize],
+    ) -> f64 {
+        let mem = plan.remote_mem_mb[l];
+        let mut t = self.t_rem_s;
+        for &k in part {
+            let n_pre = profile.prefill_counts[l][k];
+            t += self.perf.expert_time(n_pre, mem)
+                + 2.0 * self.net.transfer_time(n_pre * self.dims.token_bytes);
+        }
+        t
+    }
+
+    /// PT^e_l (eq. 2): max(local chain, slowest replica) + 2·τ^sw(N^in).
+    pub fn prefill_expert_time(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+        l: usize,
+    ) -> (f64, Vec<f64>) {
+        let local: f64 = (0..self.dims.experts)
+            .filter(|&k| !plan.remote[l][k])
+            .map(|k| self.perf.expert_time(profile.prefill_counts[l][k], plan.main_mem_mb))
+            .sum();
+        let replica_times: Vec<f64> = plan.partitions[l]
+            .iter()
+            .map(|part| self.replica_time(plan, profile, l, part))
+            .collect();
+        let remote = replica_times.iter().cloned().fold(0.0, f64::max);
+        let t = local.max(remote) + 2.0 * self.perf.swap_time(profile.n_in as f64);
+        (t, replica_times)
+    }
+
+    /// PT (eq. 1): Σ_l (PT^f_l + PT^e_l).
+    pub fn prefill_time(&self, plan: &DeploymentPlan, profile: &RequestProfile) -> (f64, Vec<Vec<f64>>) {
+        let mut total = 0.0;
+        let mut all_replicas = Vec::with_capacity(profile.layers());
+        for l in 0..profile.layers() {
+            let pt_f = self.perf.nonexpert_time(profile.n_in as f64);
+            let (pt_e, reps) = self.prefill_expert_time(plan, profile, l);
+            total += pt_f + pt_e;
+            all_replicas.push(reps);
+        }
+        (total, all_replicas)
+    }
+
+    /// GT^e_{l,i} (eq. 5): 2·τ^sw(topk) + max(local mass · t^loc,
+    /// remote mass · (t^rem_expert + 2D/B + t^rem)).
+    pub fn decode_expert_time(
+        &self,
+        plan: &DeploymentPlan,
+        l: usize,
+        routing: &[(usize, f64)],
+    ) -> f64 {
+        let mut local = 0.0;
+        let mut remote = 0.0;
+        for &(k, mass) in routing {
+            if plan.remote[l][k] {
+                remote += mass
+                    * (self.perf.expert_token_time(plan.remote_mem_mb[l])
+                        + 2.0 * self.net.transfer_time(self.dims.token_bytes)
+                        + self.t_rem_s);
+            } else {
+                local += mass * self.perf.expert_token_time(plan.main_mem_mb);
+            }
+        }
+        2.0 * self.perf.swap_time(self.dims.topk as f64) + local.max(remote)
+    }
+
+    /// GT (eq. 4): Σ_i Σ_l (t^f_l + GT^e_{l,i}).
+    pub fn decode_time(&self, plan: &DeploymentPlan, profile: &RequestProfile) -> (f64, f64) {
+        let mut total = 0.0;
+        let mut expert_total = 0.0;
+        for step in &profile.decode_routing {
+            for (l, routing) in step.iter().enumerate() {
+                let t_f = self.perf.nonexpert_time(1.0);
+                let t_e = self.decode_expert_time(plan, l, routing);
+                total += t_f + t_e;
+                expert_total += t_e;
+            }
+        }
+        (total, expert_total)
+    }
+
+    /// Full breakdown. `cold_start_s` is supplied by the caller (it
+    /// depends on the deployment strategy; see serverless::coldstart).
+    pub fn evaluate(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+        cold_start_s: f64,
+    ) -> LatencyBreakdown {
+        let (prefill_s, replica_times) = self.prefill_time(plan, profile);
+        let (decode_s, decode_expert_s) = self.decode_time(plan, profile);
+        LatencyBreakdown { prefill_s, decode_s, replica_times, decode_expert_s, cold_start_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (LatencyModel, RequestProfile) {
+        let dims = CostDims::gpt2_moe(4);
+        let model = LatencyModel::new(&dims, &PlatformConfig::default());
+        // uniform distribution over 8 experts
+        let dist = vec![vec![1.0 / 8.0; 8]; 4];
+        let profile = RequestProfile::from_distribution(&dist, 64, 16, 2);
+        (model, profile)
+    }
+
+    fn remote_plan(b: usize) -> DeploymentPlan {
+        // first b experts of each layer remote, one replica
+        let mut plan = DeploymentPlan::all_local(4, 8, 3000.0);
+        for l in 0..4 {
+            for k in 0..b {
+                plan.remote[l][k] = true;
+            }
+            if b > 0 {
+                plan.remote_mem_mb[l] = 1000.0;
+                plan.replicas[l] = 1;
+                plan.partitions[l] = vec![(0..b).collect()];
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn all_local_has_no_replica_times() {
+        let (m, p) = setup();
+        let plan = DeploymentPlan::all_local(4, 8, 3000.0);
+        let lb = m.evaluate(&plan, &p, 0.0);
+        assert!(lb.replica_times.iter().all(Vec::is_empty));
+        assert!(lb.prefill_s > 0.0 && lb.decode_s > 0.0);
+    }
+
+    #[test]
+    fn more_replicas_reduce_prefill() {
+        let (m, p) = setup();
+        let mut one = remote_plan(4);
+        let lb1 = m.evaluate(&one, &p, 0.0);
+        // split the same remote set over 2 replicas
+        one.replicas = vec![2; 4];
+        one.partitions = (0..4).map(|_| vec![vec![0, 1], vec![2, 3]]).collect();
+        let lb2 = m.evaluate(&one, &p, 0.0);
+        assert!(lb2.prefill_s < lb1.prefill_s, "{} vs {}", lb2.prefill_s, lb1.prefill_s);
+    }
+
+    #[test]
+    fn remote_decode_pays_network_and_invoke() {
+        let (m, p) = setup();
+        let local = m.evaluate(&DeploymentPlan::all_local(4, 8, 3000.0), &p, 0.0);
+        // same memory on both sides ⇒ remote path strictly slower in decode
+        let mut plan = remote_plan(4);
+        plan.remote_mem_mb = vec![3000.0; 4];
+        let remote = m.evaluate(&plan, &p, 0.0);
+        assert!(remote.decode_s > local.decode_s);
+    }
+
+    #[test]
+    fn ttft_tpot_definitions() {
+        let (m, p) = setup();
+        let plan = DeploymentPlan::all_local(4, 8, 3000.0);
+        let lb = m.evaluate(&plan, &p, 2.5);
+        assert!((lb.ttft() - (lb.prefill_s + 2.5)).abs() < 1e-12);
+        assert!((lb.tpot(16) - lb.decode_s / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replica_time_includes_invoke_overhead() {
+        let (m, p) = setup();
+        let plan = remote_plan(2);
+        let zt = m.replica_time(&plan, &p, 0, &[]);
+        assert!((zt - m.t_rem_s).abs() < 1e-12); // empty set still pays t_rem
+        let zt2 = m.replica_time(&plan, &p, 0, &[0, 1]);
+        assert!(zt2 > zt);
+    }
+
+    #[test]
+    fn bigger_main_memory_speeds_local_experts() {
+        let (m, p) = setup();
+        let small = m.evaluate(&DeploymentPlan::all_local(4, 8, 1000.0), &p, 0.0);
+        let big = m.evaluate(&DeploymentPlan::all_local(4, 8, 8000.0), &p, 0.0);
+        assert!(big.prefill_s < small.prefill_s);
+        assert!(big.decode_s < small.decode_s);
+    }
+}

@@ -1,0 +1,225 @@
+//! The paper's analytic model: inference latency (eqs. 1–5) and cost
+//! (eqs. 6–9), plus the shared deployment/request types every
+//! algorithm manipulates.
+
+pub mod cost;
+pub mod latency;
+
+pub use cost::{CostBreakdown, CostModel};
+pub use latency::{LatencyBreakdown, LatencyModel};
+
+/// Routing *mass* of one token at one layer: (expert, s_{l,k,i} mass).
+/// Measured routing puts mass 1.0 on each selected expert; expectation
+/// profiles spread fractional mass topk·s̃_{l,k} (§IV-D).
+pub type RoutingMass = Vec<(usize, f64)>;
+
+/// The four decision variables of problem (10):
+/// x_{l,k} (remote flags), y_l (remote memory), z_l (replicas),
+/// w (main-model memory) — plus the LPT partition R_{l,j}.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    /// x_{l,k}: true ⇒ expert k of layer l is remote.
+    pub remote: Vec<Vec<bool>>,
+    /// Memory specification of layer l's remote-expert function, MB
+    /// (snapped to the remote spec catalog).
+    pub remote_mem_mb: Vec<f64>,
+    /// z_l: replica count per layer.
+    pub replicas: Vec<usize>,
+    /// R_{l,j}: expert ids assigned to replica j of layer l.
+    pub partitions: Vec<Vec<Vec<usize>>>,
+    /// w: main-model CPU memory specification, MB.
+    pub main_mem_mb: f64,
+}
+
+impl DeploymentPlan {
+    /// All experts local (the MIX/CPU/GPU baselines' shape).
+    pub fn all_local(layers: usize, experts: usize, main_mem_mb: f64) -> Self {
+        DeploymentPlan {
+            remote: vec![vec![false; experts]; layers],
+            remote_mem_mb: vec![0.0; layers],
+            replicas: vec![0; layers],
+            partitions: vec![Vec::new(); layers],
+            main_mem_mb,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.remote.len()
+    }
+
+    pub fn remote_set(&self, l: usize) -> Vec<usize> {
+        self.remote[l]
+            .iter()
+            .enumerate()
+            .filter_map(|(k, &r)| r.then_some(k))
+            .collect()
+    }
+
+    pub fn remote_count(&self, l: usize) -> usize {
+        self.remote[l].iter().filter(|&&r| r).count()
+    }
+
+    pub fn has_remote(&self) -> bool {
+        self.remote.iter().any(|row| row.iter().any(|&r| r))
+    }
+
+    /// Invariant check: every remote expert appears in exactly one
+    /// partition of its layer, and no local expert appears anywhere.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for l in 0..self.layers() {
+            let mut seen = vec![0usize; self.remote[l].len()];
+            for part in &self.partitions[l] {
+                for &k in part {
+                    seen[k] += 1;
+                }
+            }
+            for (k, &is_remote) in self.remote[l].iter().enumerate() {
+                let expect = usize::from(is_remote);
+                if seen[k] != expect {
+                    anyhow::bail!(
+                        "layer {l} expert {k}: remote={is_remote} but appears {}× in partitions",
+                        seen[k]
+                    );
+                }
+            }
+            if self.remote_count(l) > 0 {
+                if self.partitions[l].is_empty() || self.replicas[l] == 0 {
+                    anyhow::bail!("layer {l} has remote experts but no replicas");
+                }
+                if self.partitions[l].len() > self.replicas[l] {
+                    anyhow::bail!("layer {l}: more partitions than replicas");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Token-level demand of one request: what the cost/latency model
+/// consumes. Built either from *measured* routing (engine output) or
+/// from *predicted* distributions (planning).
+#[derive(Debug, Clone)]
+pub struct RequestProfile {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// N^pre_{l,k}: prefill tokens routed to each expert.
+    pub prefill_counts: Vec<Vec<f64>>,
+    /// Per decoded token per layer: s_{l,k,i} indicator mass (eq. 5).
+    pub decode_routing: Vec<Vec<RoutingMass>>,
+}
+
+impl RequestProfile {
+    /// From measured engine output (each selected expert gets
+    /// indicator mass 1, regardless of its gate weight).
+    pub fn from_generation(out: &crate::model::GenerateOutput) -> Self {
+        let decode_routing = out
+            .decode_routing
+            .iter()
+            .map(|step| {
+                step.iter()
+                    .map(|layer| layer.iter().map(|&(k, _w)| (k, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        RequestProfile {
+            n_in: out.prompt_len,
+            n_out: out.tokens.len(),
+            prefill_counts: out.prefill_activations.counts.clone(),
+            decode_routing,
+        }
+    }
+
+    /// From a predicted distribution matrix S̃ (rows sum to 1): the
+    /// expectation profile of §IV-D. Decode routing becomes one
+    /// "expected token" per step whose indicator mass is spread as
+    /// topk·s̃_{l,k}.
+    pub fn from_distribution(
+        dist: &[Vec<f64>],
+        n_in: usize,
+        n_out: usize,
+        topk: usize,
+    ) -> Self {
+        let prefill_counts = dist
+            .iter()
+            .map(|row| row.iter().map(|&p| p * n_in as f64 * topk as f64).collect())
+            .collect();
+        // expected routing of one decode token at layer l: fractional
+        // indicator mass p·topk on each expert.
+        let one_step: Vec<RoutingMass> = dist
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .filter(|(_, &p)| p > 0.0)
+                    .map(|(k, &p)| (k, p * topk as f64))
+                    .collect()
+            })
+            .collect();
+        RequestProfile {
+            n_in,
+            n_out,
+            prefill_counts,
+            decode_routing: vec![one_step; n_out],
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.prefill_counts.len()
+    }
+
+    /// Σ_i s_{l,k,i} over all decode steps.
+    pub fn decode_counts(&self) -> Vec<Vec<f64>> {
+        let layers = self.layers();
+        let experts = self.prefill_counts[0].len();
+        let mut out = vec![vec![0.0; experts]; layers];
+        for step in &self.decode_routing {
+            for (l, routing) in step.iter().enumerate() {
+                for &(k, mass) in routing {
+                    out[l][k] += mass;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_local_plan_validates() {
+        let p = DeploymentPlan::all_local(3, 8, 1000.0);
+        p.validate().unwrap();
+        assert!(!p.has_remote());
+        assert_eq!(p.remote_set(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn partition_mismatch_detected() {
+        let mut p = DeploymentPlan::all_local(2, 4, 1000.0);
+        p.remote[0][1] = true;
+        p.replicas[0] = 1;
+        // expert 1 remote but not partitioned → invalid
+        assert!(p.validate().is_err());
+        p.partitions[0] = vec![vec![1]];
+        p.validate().unwrap();
+        // a local expert in a partition → invalid
+        p.partitions[0] = vec![vec![1, 2]];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn profile_from_distribution_mass() {
+        let dist = vec![vec![0.5, 0.5], vec![1.0, 0.0]];
+        let p = RequestProfile::from_distribution(&dist, 10, 4, 2);
+        // layer 0: 10 tokens × topk 2 × 0.5 = 10 each
+        assert!((p.prefill_counts[0][0] - 10.0).abs() < 1e-9);
+        assert!((p.prefill_counts[1][0] - 20.0).abs() < 1e-9);
+        assert_eq!(p.decode_routing.len(), 4);
+        // expected decode counts: 4 steps × 2·0.5 = 4 per expert in l0
+        let dc = p.decode_counts();
+        assert!((dc[0][0] - 4.0).abs() < 1e-6);
+        assert!((dc[1][0] - 8.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,135 @@
+//! Shared setup for the experiment harness: engines, corpora splits,
+//! predictor construction, measured request profiles, CSV output.
+
+use anyhow::Result;
+
+use crate::config::{CostDims, SlaConfig, SystemConfig};
+use crate::coordinator::{build_history, prompt_ids, Planner};
+use crate::costmodel::RequestProfile;
+use crate::model::{self, Engine, NativeBackend};
+use crate::prediction::History;
+use crate::runtime::ModelHyper;
+use crate::util::rng::Rng;
+use crate::workload::corpus::{standard_corpora, Corpus, Prompt};
+
+/// Experiment scale knobs (paper scale ÷ ~8 by default so the full
+/// suite runs in minutes; crank with REMOE_SCALE=paper).
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub train: usize,
+    pub test: usize,
+    pub requests: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub alpha: usize,
+    pub beta: usize,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("REMOE_SCALE").as_deref() {
+            Ok("paper") => Scale {
+                // §V-B: 5000 train / 500 test, α=15, β=150; §V-C: 50
+                // requests, 500-char prompts, 200 output tokens.
+                train: 5000,
+                test: 500,
+                requests: 50,
+                n_in: 128,
+                n_out: 48,
+                alpha: 15,
+                beta: 150,
+            },
+            Ok("tiny") => Scale {
+                train: 60,
+                test: 10,
+                requests: 6,
+                n_in: 96,
+                n_out: 16,
+                alpha: 5,
+                beta: 20,
+            },
+            _ => Scale {
+                train: 600,
+                test: 60,
+                requests: 50,
+                n_in: 128,
+                n_out: 48,
+                alpha: 15,
+                beta: 60,
+            },
+        }
+    }
+}
+
+/// One model's full experiment context.
+pub struct ModelCtx {
+    pub hyper: ModelHyper,
+    pub dims: CostDims,
+    pub sla: SlaConfig,
+    pub engine: Engine<NativeBackend>,
+}
+
+impl ModelCtx {
+    pub fn gpt2(seed: u64) -> ModelCtx {
+        let hyper = model::gpt2_moe_mini();
+        let dims = CostDims::gpt2_moe(hyper.layers);
+        ModelCtx {
+            sla: SlaConfig::for_dims(&dims),
+            engine: Engine::native(hyper.clone(), seed),
+            hyper,
+            dims,
+        }
+    }
+
+    pub fn dsv2(seed: u64) -> ModelCtx {
+        let hyper = model::dsv2_mini();
+        let dims = CostDims::dsv2_lite(hyper.layers, hyper.experts, hyper.topk);
+        ModelCtx {
+            sla: SlaConfig::for_dims(&dims),
+            engine: Engine::native(hyper.clone(), seed),
+            hyper,
+            dims,
+        }
+    }
+
+    pub fn planner(&self, cfg: &SystemConfig) -> Planner {
+        Planner::new(&self.dims, cfg, &self.sla)
+    }
+
+    /// Measured request profile: real generation, real routing.
+    pub fn measured_profile(&mut self, prompt: &Prompt, n_out: usize) -> Result<RequestProfile> {
+        let ids = prompt_ids(&self.engine, &prompt.text);
+        let gen = self.engine.generate(&ids, n_out)?;
+        Ok(RequestProfile::from_generation(&gen))
+    }
+}
+
+/// Train/test split + recorded history for one corpus.
+pub struct CorpusData {
+    pub corpus: Corpus,
+    pub train: Vec<Prompt>,
+    pub test: Vec<Prompt>,
+    pub history: History,
+}
+
+pub fn corpus_data(ctx: &mut ModelCtx, corpus_idx: usize, scale: Scale, seed: u64) -> Result<CorpusData> {
+    let spec = standard_corpora()[corpus_idx].clone();
+    let corpus = Corpus::new(spec);
+    let (train, test) = corpus.split(scale.train, scale.test, seed);
+    let history = build_history(&mut ctx.engine, &train)?;
+    Ok(CorpusData { corpus, train, test, history })
+}
+
+/// Deterministic per-experiment RNG.
+pub fn exp_rng(tag: u64) -> Rng {
+    Rng::new(0xE1_9E_44 ^ tag)
+}
+
+/// Write a results CSV under results/.
+pub fn write_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.csv");
+    std::fs::write(&path, crate::metrics::to_csv(headers, rows))?;
+    println!("  [csv] {path}");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Experiment harness: one entry per paper table/figure (DESIGN.md §6).
+//!
+//! `remoe exp <id>` runs one; `remoe exp all` runs the full suite.
+//! Every experiment prints the paper's rows/series and writes a CSV
+//! under `results/`.
+
+pub mod common;
+pub mod overall_exps;
+pub mod prediction_exps;
+pub mod profile_exps;
+
+pub use common::Scale;
+
+use anyhow::{bail, Result};
+
+pub const ALL: &[&str] =
+    &["table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "summary"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, scale: Scale) -> Result<()> {
+    match id {
+        "table1" => profile_exps::table1(),
+        "fig1" => profile_exps::fig1(),
+        "fig3" => prediction_exps::fig3(scale),
+        "fig4" => profile_exps::fig4(),
+        "fig5" => profile_exps::fig5(),
+        "fig6" => profile_exps::fig6(),
+        "fig8" => prediction_exps::fig8(scale),
+        "fig9" => overall_exps::fig9(scale),
+        "fig10" => overall_exps::fig10(scale),
+        "fig11" => overall_exps::fig11(scale),
+        "summary" => overall_exps::summary(scale),
+        "all" => {
+            for id in ALL {
+                run(id, scale)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,221 @@
+//! Profiling/motivation experiments: Table I (token sizes), Fig. 1
+//! (charged duration by deployment), Fig. 4 (expert time vs remote
+//! ratio at 5/10 cores), Fig. 5 (prefill vs decode time), Fig. 6
+//! (latency-vs-memory profile + fitted exponential).
+
+use anyhow::Result;
+
+use crate::config::{CostDims, PlatformConfig};
+use crate::costmodel::{DeploymentPlan, LatencyModel, RequestProfile};
+use crate::metrics::{fmt_f, Table};
+use crate::optimizer::fit_exp_curve;
+use crate::serverless::PerfModel;
+
+use super::common::write_csv;
+
+/// Table I: token embedding size (bf16) for the paper's six models.
+pub fn table1() -> Result<()> {
+    println!("\n== Table I — token size for MoE models (bf16) ==");
+    let models: [(&str, &str, usize); 6] = [
+        ("Mixtral-8x7B", "47B", 4096),
+        ("Mixtral-8x22B", "141B", 6144),
+        ("Qwen2-57B-A14B", "57B", 3584),
+        ("DeepSeek-V2", "236B", 5120),
+        ("DeepSeek-V3", "671B", 7168),
+        ("Phi-4", "14.7B", 5120),
+    ];
+    let mut t = Table::new(&["Model", "Parameters", "Hidden Size", "Token Size"]);
+    let mut rows = Vec::new();
+    for (name, params, hidden) in models {
+        let kb = (hidden * 2) as f64 / 1024.0;
+        let row = vec![
+            name.to_string(),
+            params.to_string(),
+            hidden.to_string(),
+            format!("{kb:.0} KB"),
+        ];
+        t.row(row.clone());
+        rows.push(row);
+        // every token fits the 6 MB payload limit (§II)
+        assert!(((hidden * 2) as f64) < 6.0 * 1024.0 * 1024.0);
+    }
+    t.print();
+    write_csv("table1_token_sizes", &["model", "params", "hidden", "token_kb"], &rows)?;
+    Ok(())
+}
+
+/// Fig. 1 (motivation): charged memory·duration of CPU / GPU /
+/// expert-offload deployments vs what the request actually uses.
+pub fn fig1() -> Result<()> {
+    println!("\n== Fig. 1 — charged duration by deployment method ==");
+    let dims = CostDims::gpt2_moe(4);
+    let platform = PlatformConfig::default();
+    let lat = LatencyModel::new(&dims, &platform);
+    let dist = vec![vec![1.0 / 8.0; 8]; 4];
+    let profile = RequestProfile::from_distribution(&dist, 64, 32, 2);
+    let plan = DeploymentPlan::all_local(4, 8, dims.total_expert_mb());
+    let lb = lat.evaluate(&plan, &profile, 0.0);
+    let duration = lb.prefill_s + lb.decode_s;
+
+    // activated expert-seconds vs charged expert-seconds
+    let total_expert_mem = dims.total_expert_mb();
+    let charged = total_expert_mem * duration;
+    // actually active: each token touches topk experts; an expert is
+    // "in use" only while computing
+    let active_s: f64 = profile
+        .prefill_counts
+        .iter()
+        .flatten()
+        .map(|&n| lat.perf.expert_time(n, plan.main_mem_mb))
+        .sum::<f64>()
+        + profile.n_out as f64
+            * dims.layers as f64
+            * dims.topk as f64
+            * lat.perf.expert_token_time(plan.main_mem_mb);
+    let used = dims.expert_mb * dims.topk as f64 * dims.layers as f64 * duration
+        + dims.expert_mb * active_s;
+
+    let mut t = Table::new(&["quantity", "MB·s", "share"]);
+    t.row(vec!["charged (all experts resident)".into(), fmt_f(charged, 1), "100%".into()]);
+    t.row(vec![
+        "actually used (active experts)".into(),
+        fmt_f(used, 1),
+        format!("{:.0}%", used / charged * 100.0),
+    ]);
+    t.print();
+    println!("(the paper's motivation: most expert memory is billed but idle)");
+    anyhow::ensure!(used < 0.7 * charged);
+    Ok(())
+}
+
+/// Fig. 4: expert inference time vs remote-expert ratio with 5 and 10
+/// vCPUs on the main model — near-linear growth, remote dominates.
+pub fn fig4() -> Result<()> {
+    println!("\n== Fig. 4 — expert inference time vs remote ratio (5 / 10 cores) ==");
+    let dims = CostDims::gpt2_moe(4);
+    let platform = PlatformConfig::default();
+    let lat = LatencyModel::new(&dims, &platform);
+    let dist = vec![vec![1.0 / 8.0; 8]; 4];
+    let profile = RequestProfile::from_distribution(&dist, 128, 48, 2);
+
+    let mut t = Table::new(&["remote ratio", "time @5 vCPU (s)", "time @10 vCPU (s)"]);
+    let mut rows = Vec::new();
+    let mut prev5 = 0.0;
+    for i in 0..=8 {
+        let b = i as f64 / 8.0;
+        let m_remote = (b * 8.0).round() as usize;
+        let mut times = Vec::new();
+        for vcpus in [5.0, 10.0] {
+            let mut plan =
+                DeploymentPlan::all_local(4, 8, vcpus * platform.mem_per_vcpu_mb);
+            for l in 0..4 {
+                for k in 0..m_remote {
+                    plan.remote[l][k] = true;
+                }
+                if m_remote > 0 {
+                    plan.remote_mem_mb[l] = dims.remote_specs.min_mb;
+                    plan.replicas[l] = 1;
+                    plan.partitions[l] = vec![(0..m_remote).collect()];
+                }
+            }
+            // expert phase only: decode expert time per token summed
+            let (decode, expert_decode) = lat.decode_time(&plan, &profile);
+            let _ = decode;
+            times.push(expert_decode);
+        }
+        let row = vec![fmt_f(b, 3), fmt_f(times[0], 3), fmt_f(times[1], 3)];
+        t.row(row.clone());
+        rows.push(row);
+        if i == 8 {
+            prev5 = times[0];
+        }
+    }
+    t.print();
+    println!("(paper: time grows ~linearly with the remote ratio; remote path dominates)");
+    write_csv("fig4_remote_ratio", &["ratio", "t_5vcpu", "t_10vcpu"], &rows)?;
+    anyhow::ensure!(prev5 > 0.0);
+    Ok(())
+}
+
+/// Fig. 5: prefill vs decode time across token counts — decode
+/// dominates (justifies η ≤ 0.1 in the §IV-E reformulation).
+pub fn fig5() -> Result<()> {
+    println!("\n== Fig. 5 — prefill vs decode time ==");
+    let dims = CostDims::gpt2_moe(4);
+    let platform = PlatformConfig::default();
+    let lat = LatencyModel::new(&dims, &platform);
+    let dist = vec![vec![1.0 / 8.0; 8]; 4];
+    let plan = DeploymentPlan::all_local(4, 8, 2000.0);
+
+    let mut t = Table::new(&["tokens", "prefill PT (s)", "decode GT (s)", "PT/GT"]);
+    let mut rows = Vec::new();
+    let mut last_ratio;
+    for n in [32usize, 64, 128] {
+        let profile = RequestProfile::from_distribution(&dist, n, 4 * n, 2);
+        let lb = lat.evaluate(&plan, &profile, 0.0);
+        last_ratio = lb.prefill_s / lb.decode_s;
+        let row = vec![
+            n.to_string(),
+            fmt_f(lb.prefill_s, 3),
+            fmt_f(lb.decode_s, 3),
+            fmt_f(last_ratio, 3),
+        ];
+        t.row(row.clone());
+        rows.push(row);
+    }
+    t.print();
+    println!("(paper: prefill ≤ ~0.1 of decode in the common N_out ≫ N_in regime)");
+    write_csv("fig5_prefill_decode", &["tokens", "pt", "gt", "ratio"], &rows)?;
+    Ok(())
+}
+
+/// Fig. 6: the latency-vs-memory profile of both models and the
+/// fitted exponential T̃(y) = θ1·e^(−θ2·y) + θ3 (reported per GB like
+/// the paper's θ2 values).
+pub fn fig6() -> Result<()> {
+    println!("\n== Fig. 6 — CPU resources vs inference time, fitted curves ==");
+    let platform = PlatformConfig::default();
+    let mut csv_rows = Vec::new();
+    for dims in [CostDims::gpt2_moe(4), CostDims::dsv2_lite(6, 16, 4)] {
+        let perf = PerfModel::from_dims(&dims, &platform);
+        let profile = perf.profile_decode_latency(dims.topk, &dims.remote_specs.specs());
+        let fit = fit_exp_curve(&profile);
+        println!(
+            "{:10} θ1={:.4}  θ2={:.4}/GB  θ3={:.4}  R²={:.4}",
+            dims.name,
+            fit.theta1,
+            fit.theta2 * 1024.0,
+            fit.theta3,
+            fit.r2(&profile)
+        );
+        let mut t = Table::new(&["mem (MB)", "measured (s)", "fitted (s)"]);
+        for &(m, v) in profile.iter().step_by(profile.len() / 6 + 1) {
+            let row = vec![fmt_f(m, 0), fmt_f(v, 4), fmt_f(fit.eval(m), 4)];
+            t.row(row.clone());
+            csv_rows.push({
+                let mut r = vec![dims.name.clone()];
+                r.extend(row);
+                r
+            });
+        }
+        t.print();
+        anyhow::ensure!(fit.r2(&profile) > 0.85, "{}: poor fit", dims.name);
+    }
+    println!("(paper fits: θ2 = 11.87/GB for GPT2-moe, 2.44/GB for Deepseek-v2-lite)");
+    write_csv("fig6_fitted_curves", &["model", "mem_mb", "measured", "fitted"], &csv_rows)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profile_experiments_run() {
+        table1().unwrap();
+        fig1().unwrap();
+        fig4().unwrap();
+        fig5().unwrap();
+        fig6().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! # Remoe — efficient and low-cost MoE inference in serverless computing
+//!
+//! Reproduction of *"Remoe: Towards Efficient and Low-Cost MoE Inference
+//! in Serverless Computing"* (CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas expert-FFN and attention
+//!   kernels, lowered AOT with `interpret=True`.
+//! - **L2** (`python/compile/model.py`): MoE model entry points in jax,
+//!   exported as HLO-text artifacts with weights as runtime arguments.
+//! - **L3** (this crate): the Remoe coordinator — activation prediction
+//!   (SPS), main-model pre-allocation (MMP), remote-expert selection,
+//!   Lagrangian memory optimization, LPT multi-replica partitioning —
+//!   plus the serverless-platform substrate it runs on and a PJRT
+//!   runtime that executes the artifacts on the request path.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod util;
+
+pub mod config;
+pub mod runtime;
+pub mod model;
+pub mod serverless;
+pub mod costmodel;
+pub mod prediction;
+pub mod allocation;
+pub mod selection;
+pub mod optimizer;
+pub mod partition;
+pub mod coordinator;
+pub mod baselines;
+pub mod workload;
+pub mod metrics;
+pub mod experiments;

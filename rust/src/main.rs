@@ -1,0 +1,218 @@
+//! Remoe CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! remoe exp <id|all> [--scale tiny|default|paper]   reproduce a paper figure/table
+//! remoe serve [--model M] [--requests N] [--rate R] serve a Poisson trace end-to-end
+//! remoe plan  [--model M]                           plan one request, print the deployment
+//! remoe info                                        artifact + model inventory
+//! ```
+//!
+//! `serve` executes the AOT artifacts through PJRT (python never runs
+//! on the request path); experiments use the numerically-identical
+//! native backend for bulk sweeps (equivalence proven by the
+//! integration_runtime tests).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use remoe::baselines::Strategy;
+use remoe::config::{CostDims, SlaConfig, SystemConfig};
+use remoe::coordinator::{build_history, serve_remoe, Planner};
+use remoe::experiments::{self, Scale};
+use remoe::metrics::{fmt_f, Table};
+use remoe::model::{self, Engine};
+use remoe::prediction::{SpsPredictor, TreeParams};
+use remoe::runtime::ArtifactStore;
+use remoe::util::cli::Args;
+use remoe::util::logger;
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+use remoe::workload::trace::{poisson_trace, TraceSpec};
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: remoe <exp|serve|plan|info> [flags]  (see README)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn scale_from(args: &Args) -> Scale {
+    if let Some(s) = args.flag("scale") {
+        std::env::set_var("REMOE_SCALE", s);
+    }
+    Scale::from_env()
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.positionals.first().map(String::as_str).unwrap_or("all");
+    experiments::run(id, scale_from(args))
+}
+
+fn dims_for(model_name: &str) -> Result<(remoe::runtime::ModelHyper, CostDims)> {
+    match model_name {
+        "gpt2_moe_mini" => {
+            let h = model::gpt2_moe_mini();
+            let d = CostDims::gpt2_moe(h.layers);
+            Ok((h, d))
+        }
+        "dsv2_mini" => {
+            let h = model::dsv2_mini();
+            let d = CostDims::dsv2_lite(h.layers, h.experts, h.topk);
+            Ok((h, d))
+        }
+        other => bail!("unknown model {other}; use gpt2_moe_mini or dsv2_mini"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_name = args.flag_or("model", "gpt2_moe_mini");
+    let n_requests = args.usize_or("requests", 10);
+    let rate = args.f64_or("rate", 0.05);
+    let n_out = args.usize_or("n-out", 32);
+    let seed = args.u64_or("seed", 7);
+    let (_hyper, dims) = dims_for(model_name)?;
+
+    let cfg = SystemConfig::default();
+    let sla = SlaConfig::for_dims(&dims);
+    let planner = Planner::new(&dims, &cfg, &sla);
+
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, _) = corpus.split(120, 0, seed);
+
+    println!("loading artifacts + building SPS history ({} prompts)…", train.len());
+    let store = Rc::new(ArtifactStore::open("artifacts")?);
+    let mut engine = Engine::pjrt(store, model_name, seed)?;
+    let history = build_history(&mut engine, &train)?;
+    let params = TreeParams { beta: 40, fanout: 4, ..TreeParams::default() };
+    let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
+
+    let trace = poisson_trace(
+        &corpus,
+        &TraceSpec { rate_per_s: rate, n_requests, n_out, seed },
+    );
+    println!("serving {n_requests} requests (Poisson rate {rate}/s) through Remoe on PJRT…");
+    let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0)?;
+
+    let mut t = Table::new(&[
+        "req", "n_in", "ttft (s)", "tpot (s)", "cost", "cold (s)", "calc (s)", "engine (s)",
+    ]);
+    for r in &agg.records {
+        t.row(vec![
+            r.id.to_string(),
+            r.n_in.to_string(),
+            fmt_f(r.ttft_s, 2),
+            fmt_f(r.tpot_s, 4),
+            fmt_f(r.cost, 1),
+            fmt_f(r.cold_start_s, 2),
+            fmt_f(r.calc_time_s, 3),
+            fmt_f(r.engine_wall_s, 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "totals: cost={:.1}  mean ttft={:.2}s  mean tpot={:.4}s  engine throughput={:.2} req/s ({:.0} tok/s)",
+        agg.total_cost(),
+        agg.ttft_summary().mean,
+        agg.tpot_summary().mean,
+        agg.engine_throughput(),
+        agg.token_throughput(),
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model_name = args.flag_or("model", "gpt2_moe_mini");
+    let (hyper, dims) = dims_for(model_name)?;
+    let cfg = SystemConfig::default();
+    let sla = SlaConfig::for_dims(&dims);
+    let planner = Planner::new(&dims, &cfg, &sla);
+
+    // skewed example distribution (zipf-ish)
+    let dist: Vec<Vec<f64>> = (0..hyper.layers)
+        .map(|l| {
+            let mut row: Vec<f64> = (0..hyper.experts)
+                .map(|k| 1.0 / (((k + l) % hyper.experts) + 1) as f64)
+                .collect();
+            let s: f64 = row.iter().sum();
+            row.iter_mut().for_each(|v| *v /= s);
+            row
+        })
+        .collect();
+    let out = planner.plan(&dist, args.usize_or("n-in", 128), args.usize_or("n-out", 48));
+    println!("model: {model_name}  (SLO: TTFT ≤ {:.1}s, TPOT ≤ {:.3}s)", sla.ttft_s, sla.tpot_s);
+    println!(
+        "MMP:   b = {:.2}  ({} remote experts/layer), main = {:.0} MB",
+        out.mmp.remote_ratio, out.mmp.remote_per_layer, out.plan.main_mem_mb
+    );
+    println!("worst-case: TTFT {:.2}s  TPOT {:.4}s", out.mmp.worst_ttft_s, out.mmp.worst_tpot_s);
+    for l in 0..out.plan.layers() {
+        println!(
+            "  layer {l}: remote {:?}  mem {:.0} MB  z = {}  partitions {:?}",
+            out.plan.remote_set(l),
+            out.plan.remote_mem_mb[l],
+            out.plan.replicas[l],
+            out.plan.partitions[l]
+        );
+    }
+    println!(
+        "expected: cost {:.1}  TTFT {:.2}s  TPOT {:.4}s  cold {:.2}s  calc {:.4}s",
+        out.expected_cost, out.expected_ttft_s, out.expected_tpot_s, out.cold_start_s,
+        out.calc_time_s
+    );
+    println!(
+        "candidates tried: {:?}",
+        out.candidates.iter().map(|(b, c)| format!("b={b:.2}→{c:.0}")).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("Remoe — serverless MoE inference (paper reproduction)");
+    for (hyper, dims) in [
+        (model::gpt2_moe_mini(), CostDims::gpt2_moe(4)),
+        (model::dsv2_mini(), CostDims::dsv2_lite(6, 16, 4)),
+    ] {
+        println!(
+            "\nmodel {}: H={} L={} K={} top-{} ffn={} shared={}",
+            hyper.name, hyper.hidden, hyper.layers, hyper.experts, hyper.topk, hyper.ffn,
+            hyper.shared_experts
+        );
+        println!(
+            "  cost dims ({}): expert {:.1} MB ×{}×{} = {:.0} MB; non-expert {:.0} MB; D = {:.0} B",
+            dims.name,
+            dims.expert_mb,
+            dims.layers,
+            dims.experts,
+            dims.total_expert_mb(),
+            dims.total_nonexpert_mb(),
+            dims.token_bytes
+        );
+    }
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let m = remoe::runtime::Manifest::load("artifacts")?;
+        println!(
+            "\nartifacts: {} entries, seq buckets {:?}, expert buckets {:?}",
+            m.artifacts.len(),
+            m.seq_buckets,
+            m.expert_buckets
+        );
+    } else {
+        println!("\nartifacts: not built (run `make artifacts`)");
+    }
+    let names: Vec<&str> = Strategy::all_baselines().iter().map(|s| s.name()).collect();
+    println!("baselines: {} + Remoe", names.join(" "));
+    Ok(())
+}

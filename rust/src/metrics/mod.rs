@@ -1,0 +1,204 @@
+//! Per-request records, aggregation and report printing (markdown
+//! tables + CSV) for the experiment harness and the serving loop.
+
+use crate::util::stats::{summarize, Summary};
+
+/// One served request's outcome.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub strategy: &'static str,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    pub cost: f64,
+    pub cold_start_s: f64,
+    pub calc_time_s: f64,
+    /// Wall time of the real engine computation (PJRT path), if run.
+    pub engine_wall_s: f64,
+}
+
+/// Aggregation over a run.
+#[derive(Debug, Default)]
+pub struct Aggregator {
+    pub records: Vec<RequestRecord>,
+}
+
+impl Aggregator {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    fn field(&self, f: impl Fn(&RequestRecord) -> f64) -> Vec<f64> {
+        self.records.iter().map(f).collect()
+    }
+
+    pub fn cost_summary(&self) -> Summary {
+        summarize(&self.field(|r| r.cost))
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        summarize(&self.field(|r| r.ttft_s))
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        summarize(&self.field(|r| r.tpot_s))
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.records.iter().map(|r| r.cost).sum()
+    }
+
+    /// Requests per second of real engine compute.
+    pub fn engine_throughput(&self) -> f64 {
+        let wall: f64 = self.records.iter().map(|r| r.engine_wall_s).sum();
+        if wall <= 0.0 {
+            0.0
+        } else {
+            self.records.len() as f64 / wall
+        }
+    }
+
+    /// Tokens (in+out) per second of real engine compute.
+    pub fn token_throughput(&self) -> f64 {
+        let wall: f64 = self.records.iter().map(|r| r.engine_wall_s).sum();
+        let toks: usize = self.records.iter().map(|r| r.n_in + r.n_out).sum();
+        if wall <= 0.0 {
+            0.0
+        } else {
+            toks as f64 / wall
+        }
+    }
+}
+
+/// Markdown table printer (fixed column widths for terminal reading).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        let _ = ncols;
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// CSV writer for downstream plotting.
+pub fn to_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, cost: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            strategy: "Remoe",
+            n_in: 100,
+            n_out: 50,
+            ttft_s: 1.0 + id as f64,
+            tpot_s: 0.1,
+            cost,
+            cold_start_s: 2.0,
+            calc_time_s: 0.001,
+            engine_wall_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn aggregation() {
+        let mut a = Aggregator::default();
+        a.push(rec(0, 10.0));
+        a.push(rec(1, 30.0));
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.total_cost(), 40.0);
+        assert_eq!(a.cost_summary().mean, 20.0);
+        assert!((a.engine_throughput() - 2.0).abs() < 1e-12);
+        assert!((a.token_throughput() - 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1.00".into()]);
+        t.row(vec!["longer-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| name "));
+        assert!(s.contains("| longer-name |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn csv_format() {
+        let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(csv, "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["one"]);
+        t.row(vec!["a".into(), "b".into()]);
+    }
+}

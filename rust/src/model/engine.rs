@@ -1,0 +1,665 @@
+//! The inference engine: prefill/decode over a pluggable compute
+//! backend, KV-cache management, gate readback and expert dispatch.
+//!
+//! Two backends implement the same block-level contract:
+//! - [`PjrtBackend`] executes the AOT artifacts through the PJRT
+//!   runtime — the production path (python never runs here).
+//! - [`NativeBackend`] runs the pure-rust reference math — used for
+//!   bulk activation-recording sweeps and as an independent oracle in
+//!   the integration tests.
+//!
+//! The engine records, for every request, the **expert activation
+//! matrix** (per-layer × per-expert token counts) and the full routing
+//! trace — the raw material of the paper's SPS predictor and of the
+//! cost model's `s_{l,k,i}` terms.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{
+    ArtifactKind, ArtifactStore, HostTensor, HostTensorI32, ModelHyper,
+};
+
+use super::reference as native;
+use super::weights::{ExpertWeights, LayerWeights, ModelWeights};
+
+/// Per-request activation record: counts[l][k] = tokens routed to
+/// expert k in layer l (prefill + decode separately retrievable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivationMatrix {
+    pub counts: Vec<Vec<f64>>,
+}
+
+impl ActivationMatrix {
+    pub fn zeros(layers: usize, experts: usize) -> Self {
+        ActivationMatrix { counts: vec![vec![0.0; experts]; layers] }
+    }
+
+    pub fn add(&mut self, layer: usize, expert: usize, n: f64) {
+        self.counts[layer][expert] += n;
+    }
+
+    pub fn merge(&mut self, other: &ActivationMatrix) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Row-normalised distribution matrix S̃ (per layer sums to 1).
+    pub fn normalized(&self) -> Vec<Vec<f64>> {
+        self.counts
+            .iter()
+            .map(|row| {
+                let total: f64 = row.iter().sum();
+                if total <= 0.0 {
+                    vec![1.0 / row.len() as f64; row.len()]
+                } else {
+                    row.iter().map(|&c| c / total).collect()
+                }
+            })
+            .collect()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.counts.iter().flatten().sum()
+    }
+}
+
+/// Routing of one token at one layer: (expert, gate weight).
+pub type TokenRouting = Vec<(usize, f32)>;
+
+/// Compute backend: the five block-level operations every deployment
+/// shape needs. All tensors are unpadded logical shapes; backends that
+/// require bucketed shapes (PJRT) pad internally and slice back.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    fn embed(&self, w: &ModelWeights, ids: &[i32], pos0: usize) -> Result<HostTensor>;
+
+    #[allow(clippy::too_many_arguments)]
+    fn attn(
+        &self,
+        lw: &LayerWeights,
+        h: &HostTensor,
+        k_cache: &HostTensor,
+        v_cache: &HostTensor,
+        pos0: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)>;
+
+    /// Returns (xln, weights [S,topk], indices per token).
+    fn gate(
+        &self,
+        lw: &LayerWeights,
+        h: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, Vec<Vec<usize>>)>;
+
+    /// Run one expert FFN on `x` rows.
+    fn expert(&self, ew: &ExpertWeights, x: &HostTensor, act: &str) -> Result<HostTensor>;
+
+    fn lm_head(&self, w: &ModelWeights, h: &HostTensor) -> Result<HostTensor>;
+}
+
+/// Pure-rust backend (reference math).
+pub struct NativeBackend {
+    pub heads: usize,
+    pub topk: usize,
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn embed(&self, w: &ModelWeights, ids: &[i32], pos0: usize) -> Result<HostTensor> {
+        Ok(native::embed(ids, &w.wte, &w.wpe, pos0))
+    }
+
+    fn attn(
+        &self,
+        lw: &LayerWeights,
+        h: &HostTensor,
+        k_cache: &HostTensor,
+        v_cache: &HostTensor,
+        pos0: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        Ok(native::attention_block(
+            h, &lw.ln1_g, &lw.ln1_b, &lw.wqkv, &lw.bqkv, &lw.wo, &lw.bo, k_cache, v_cache,
+            pos0, self.heads,
+        ))
+    }
+
+    fn gate(
+        &self,
+        lw: &LayerWeights,
+        h: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, Vec<Vec<usize>>)> {
+        Ok(native::gate_block(h, &lw.ln2_g, &lw.ln2_b, &lw.wg, self.topk))
+    }
+
+    fn expert(&self, ew: &ExpertWeights, x: &HostTensor, act: &str) -> Result<HostTensor> {
+        Ok(native::expert_ffn(x, &ew.w1, &ew.b1, &ew.w2, &ew.b2, act))
+    }
+
+    fn lm_head(&self, w: &ModelWeights, h: &HostTensor) -> Result<HostTensor> {
+        Ok(native::lm_head(h, &w.lnf_g, &w.lnf_b, &w.wte))
+    }
+}
+
+/// PJRT backend: pads to buckets, executes artifacts, slices back.
+///
+/// **Hot-path optimization (EXPERIMENTS.md §Perf):** weights are staged
+/// into device-resident `PjRtBuffer`s once and reused across calls
+/// (keyed by the host tensor's storage address — weights are immutable
+/// for the engine's lifetime). Only per-call data (activations, KV
+/// caches, positions) is re-staged each execution.
+pub struct PjrtBackend {
+    pub store: Rc<ArtifactStore>,
+    pub model: String,
+    hyper: ModelHyper,
+    weight_bufs: std::cell::RefCell<std::collections::HashMap<usize, Rc<xla::PjRtBuffer>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(store: Rc<ArtifactStore>, model: &str) -> Result<PjrtBackend> {
+        let hyper = store.manifest.model(model)?.clone();
+        Ok(PjrtBackend {
+            store,
+            model: model.to_string(),
+            hyper,
+            weight_bufs: std::cell::RefCell::new(std::collections::HashMap::new()),
+        })
+    }
+
+    fn seq_bucket(&self, s: usize) -> Result<usize> {
+        self.store.manifest.seq_bucket_for(s)
+    }
+
+    fn slice_rows(t: &HostTensor, s: usize) -> HostTensor {
+        if t.shape[0] == s {
+            return t.clone();
+        }
+        let w = t.shape[1];
+        HostTensor::new(vec![s, w], t.data[..s * w].to_vec())
+    }
+
+    /// Device buffer for an immutable weight tensor (staged once).
+    fn weight(&self, t: &HostTensor) -> Result<Rc<xla::PjRtBuffer>> {
+        let key = t.data.as_ptr() as usize;
+        if let Some(buf) = self.weight_bufs.borrow().get(&key) {
+            return Ok(buf.clone());
+        }
+        let buf = Rc::new(self.store.runtime.stage_f32(&t.data, &t.shape)?);
+        self.weight_bufs.borrow_mut().insert(key, buf.clone());
+        Ok(buf)
+    }
+
+    /// Stage per-call (mutable) data.
+    fn fresh(&self, t: &HostTensor) -> Result<Rc<xla::PjRtBuffer>> {
+        Ok(Rc::new(self.store.runtime.stage_f32(&t.data, &t.shape)?))
+    }
+
+    fn fresh_i32(&self, data: &[i32], dims: &[usize]) -> Result<Rc<xla::PjRtBuffer>> {
+        Ok(Rc::new(self.store.runtime.stage_i32(data, dims)?))
+    }
+
+    fn scalar_i32(&self, v: i32) -> Result<Rc<xla::PjRtBuffer>> {
+        Ok(Rc::new(self.store.runtime.stage_i32(&[v], &[])?))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn embed(&self, w: &ModelWeights, ids: &[i32], pos0: usize) -> Result<HostTensor> {
+        let s = ids.len();
+        let bucket = self.seq_bucket(s)?;
+        let mut padded = ids.to_vec();
+        padded.resize(bucket, 0);
+        let exe = self.store.get(&self.model, ArtifactKind::Embed, bucket)?;
+        let args = vec![
+            self.fresh_i32(&padded, &[bucket])?,
+            self.weight(&w.wte)?,
+            self.weight(&w.wpe)?,
+            self.scalar_i32(pos0 as i32)?,
+        ];
+        let outs = exe.run_buffers(&args)?;
+        let h = HostTensor::from_literal(&outs[0])?;
+        Ok(Self::slice_rows(&h, s))
+    }
+
+    fn attn(
+        &self,
+        lw: &LayerWeights,
+        h: &HostTensor,
+        k_cache: &HostTensor,
+        v_cache: &HostTensor,
+        pos0: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let s = h.shape[0];
+        let bucket = self.seq_bucket(s)?;
+        let exe = self.store.get(&self.model, ArtifactKind::Attn, bucket)?;
+        // KV caches mutate in place between calls → always re-staged.
+        let args: Vec<Rc<xla::PjRtBuffer>> = vec![
+            self.fresh(&h.pad_rows_to(bucket))?,
+            self.weight(&lw.ln1_g)?,
+            self.weight(&lw.ln1_b)?,
+            self.weight(&lw.wqkv)?,
+            self.weight(&lw.bqkv)?,
+            self.weight(&lw.wo)?,
+            self.weight(&lw.bo)?,
+            self.fresh(k_cache)?,
+            self.fresh(v_cache)?,
+            self.scalar_i32(pos0 as i32)?,
+        ];
+        let outs = exe.run_buffers(&args)?;
+        let h_out = Self::slice_rows(&HostTensor::from_literal(&outs[0])?, s);
+        let k_new = Self::slice_rows(&HostTensor::from_literal(&outs[1])?, s);
+        let v_new = Self::slice_rows(&HostTensor::from_literal(&outs[2])?, s);
+        Ok((h_out, k_new, v_new))
+    }
+
+    fn gate(
+        &self,
+        lw: &LayerWeights,
+        h: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, Vec<Vec<usize>>)> {
+        let s = h.shape[0];
+        let bucket = self.seq_bucket(s)?;
+        let exe = self.store.get(&self.model, ArtifactKind::Gate, bucket)?;
+        let args = vec![
+            self.fresh(&h.pad_rows_to(bucket))?,
+            self.weight(&lw.ln2_g)?,
+            self.weight(&lw.ln2_b)?,
+            self.weight(&lw.wg)?,
+        ];
+        let outs = exe.run_buffers(&args)?;
+        let xln = Self::slice_rows(&HostTensor::from_literal(&outs[0])?, s);
+        let w = Self::slice_rows(&HostTensor::from_literal(&outs[1])?, s);
+        let idx_t = HostTensorI32::from_literal(&outs[2])?;
+        let topk = idx_t.shape[1];
+        let idx = (0..s)
+            .map(|i| (0..topk).map(|j| idx_t.data[i * topk + j] as usize).collect())
+            .collect();
+        Ok((xln, w, idx))
+    }
+
+    fn expert(&self, ew: &ExpertWeights, x: &HostTensor, act: &str) -> Result<HostTensor> {
+        let _ = act; // baked into the artifact at lowering time
+        let n = x.shape[0];
+        let bucket = self.store.manifest.expert_bucket_for(n)?;
+        let xp = x.pad_rows_to(bucket);
+        // Shared experts have a different FFN width → separate artifact.
+        let kind = if ew.w1.shape[1] == self.hyper.ffn {
+            ArtifactKind::Expert
+        } else {
+            ArtifactKind::Shared
+        };
+        let exe = self.store.get(&self.model, kind, bucket)?;
+        let args = vec![
+            self.fresh(&xp)?,
+            self.weight(&ew.w1)?,
+            self.weight(&ew.b1)?,
+            self.weight(&ew.w2)?,
+            self.weight(&ew.b2)?,
+        ];
+        let outs = exe.run_buffers(&args)?;
+        Ok(Self::slice_rows(&HostTensor::from_literal(&outs[0])?, n))
+    }
+
+    fn lm_head(&self, w: &ModelWeights, h: &HostTensor) -> Result<HostTensor> {
+        let s = h.shape[0];
+        let bucket = self.seq_bucket(s)?;
+        let exe = self.store.get(&self.model, ArtifactKind::LmHead, bucket)?;
+        let args = vec![
+            self.fresh(&h.pad_rows_to(bucket))?,
+            self.weight(&w.lnf_g)?,
+            self.weight(&w.lnf_b)?,
+            self.weight(&w.wte)?,
+        ];
+        let outs = exe.run_buffers(&args)?;
+        Ok(Self::slice_rows(&HostTensor::from_literal(&outs[0])?, s))
+    }
+}
+
+/// Wall-clock stage timings of one request (seconds) — feeds the
+/// performance-model calibration and the §Perf profiles.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    pub embed_s: f64,
+    pub attn_s: f64,
+    pub gate_s: f64,
+    pub expert_s: f64,
+    pub shared_s: f64,
+    pub head_s: f64,
+    pub expert_calls: usize,
+    pub expert_tokens: usize,
+}
+
+impl StageTimings {
+    pub fn total(&self) -> f64 {
+        self.embed_s + self.attn_s + self.gate_s + self.expert_s + self.shared_s + self.head_s
+    }
+}
+
+/// Output of a full generate() call.
+#[derive(Debug, Clone)]
+pub struct GenerateOutput {
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Activation counts over the prefill only (the S̃ source).
+    pub prefill_activations: ActivationMatrix,
+    /// Activation counts over the decode steps.
+    pub decode_activations: ActivationMatrix,
+    /// routing[step? no: layer][token] — prefill routing per layer.
+    pub prefill_routing: Vec<Vec<TokenRouting>>,
+    /// decode routing per generated token: [token][layer] → TokenRouting.
+    pub decode_routing: Vec<Vec<TokenRouting>>,
+    pub timings: StageTimings,
+}
+
+/// The engine. Owns weights + KV caches; generic over the backend.
+pub struct Engine<B: Backend> {
+    pub hyper: ModelHyper,
+    pub weights: ModelWeights,
+    pub backend: B,
+    k_cache: Vec<HostTensor>,
+    v_cache: Vec<HostTensor>,
+    pos: usize,
+}
+
+impl Engine<NativeBackend> {
+    pub fn native(hyper: ModelHyper, seed: u64) -> Self {
+        let weights = ModelWeights::generate(&hyper, seed);
+        let backend = NativeBackend { heads: hyper.heads, topk: hyper.topk };
+        Self::with_weights(hyper, weights, backend)
+    }
+}
+
+impl Engine<PjrtBackend> {
+    pub fn pjrt(store: Rc<ArtifactStore>, model: &str, seed: u64) -> Result<Self> {
+        let hyper = store.manifest.model(model)?.clone();
+        let weights = ModelWeights::generate(&hyper, seed);
+        let backend = PjrtBackend::new(store, model)?;
+        Ok(Self::with_weights(hyper, weights, backend))
+    }
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn with_weights(hyper: ModelHyper, weights: ModelWeights, backend: B) -> Self {
+        let caches = (0..hyper.layers)
+            .map(|_| HostTensor::zeros(vec![hyper.max_seq, hyper.hidden]))
+            .collect::<Vec<_>>();
+        Engine {
+            hyper,
+            weights,
+            backend,
+            k_cache: caches.clone(),
+            v_cache: caches,
+            pos: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for c in self.k_cache.iter_mut().chain(self.v_cache.iter_mut()) {
+            c.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.pos = 0;
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// One transformer step over `ids` at the current position.
+    /// Returns (hidden after all layers, routing per layer, activations).
+    fn forward(
+        &mut self,
+        ids: &[i32],
+        acts: &mut ActivationMatrix,
+        routing_out: &mut Vec<Vec<TokenRouting>>,
+        tim: &mut StageTimings,
+    ) -> Result<HostTensor> {
+        let s = ids.len();
+        if self.pos + s > self.hyper.max_seq {
+            return Err(anyhow!(
+                "sequence overflow: pos {} + {} > max_seq {}",
+                self.pos,
+                s,
+                self.hyper.max_seq
+            ));
+        }
+        let t0 = Instant::now();
+        let mut h = self.backend.embed(&self.weights, ids, self.pos)?;
+        tim.embed_s += t0.elapsed().as_secs_f64();
+
+        for l in 0..self.hyper.layers {
+            let t0 = Instant::now();
+            let (h_attn, k_new, v_new) = self.backend.attn(
+                &self.weights.layers[l],
+                &h,
+                &self.k_cache[l],
+                &self.v_cache[l],
+                self.pos,
+            )?;
+            // scatter fresh K/V rows into the cache at pos
+            for i in 0..s {
+                self.k_cache[l].row_mut(self.pos + i).copy_from_slice(k_new.row(i));
+                self.v_cache[l].row_mut(self.pos + i).copy_from_slice(v_new.row(i));
+            }
+            tim.attn_s += t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let (xln, gate_w, gate_idx) = self.backend.gate(&self.weights.layers[l], &h_attn)?;
+            tim.gate_s += t0.elapsed().as_secs_f64();
+
+            // Group tokens by expert (the router's dispatch plan).
+            let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); self.hyper.experts];
+            let mut layer_routing: Vec<TokenRouting> = Vec::with_capacity(s);
+            for (tok, idxs) in gate_idx.iter().enumerate() {
+                let mut r = TokenRouting::new();
+                for (slot, &k) in idxs.iter().enumerate() {
+                    let wv = gate_w.row(tok)[slot];
+                    groups[k].push((tok, wv));
+                    acts.add(l, k, 1.0);
+                    r.push((k, wv));
+                }
+                layer_routing.push(r);
+            }
+            routing_out.push(layer_routing);
+
+            // Expert execution: gather → FFN → weighted scatter-add.
+            let t0 = Instant::now();
+            let mut moe_out = HostTensor::zeros(vec![s, self.hyper.hidden]);
+            for (k, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let rows: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
+                let x = xln.gather_rows(&rows);
+                let y = self.backend.expert(&self.weights.layers[l].experts[k], &x, &self.hyper.act)?;
+                for (j, &(tok, wv)) in group.iter().enumerate() {
+                    let yr = y.row(j);
+                    let out = moe_out.row_mut(tok);
+                    for (o, &v) in out.iter_mut().zip(yr) {
+                        *o += wv * v;
+                    }
+                }
+                tim.expert_calls += 1;
+                tim.expert_tokens += rows.len();
+            }
+            tim.expert_s += t0.elapsed().as_secs_f64();
+
+            // Shared expert (always-on, part of F_l).
+            if let Some(shared) = &self.weights.layers[l].shared {
+                let t0 = Instant::now();
+                let y = self.backend.expert(shared, &xln, &self.hyper.act)?;
+                for (out, &v) in moe_out.data.iter_mut().zip(&y.data) {
+                    *out += v;
+                }
+                tim.shared_s += t0.elapsed().as_secs_f64();
+            }
+
+            // residual: h = h_attn + moe_out
+            for ((hv, &a), &m) in h.data.iter_mut().zip(&h_attn.data).zip(&moe_out.data) {
+                *hv = a + m;
+            }
+        }
+        self.pos += s;
+        Ok(h)
+    }
+
+    /// Greedy next token from the last row of `h`.
+    fn next_token(&self, h: &HostTensor, tim: &mut StageTimings) -> Result<i32> {
+        let t0 = Instant::now();
+        let last = HostTensor::new(
+            vec![1, self.hyper.hidden],
+            h.row(h.shape[0] - 1).to_vec(),
+        );
+        let logits = self.backend.lm_head(&self.weights, &last)?;
+        tim.head_s += t0.elapsed().as_secs_f64();
+        Ok(native::argmax(logits.row(0)) as i32)
+    }
+
+    /// Prefill + decode `n_out` tokens (greedy).
+    pub fn generate(&mut self, prompt_ids: &[i32], n_out: usize) -> Result<GenerateOutput> {
+        self.reset();
+        let max_prompt = self.hyper.max_seq.saturating_sub(n_out + 1);
+        let ids: Vec<i32> = prompt_ids.iter().copied().take(max_prompt).collect();
+        let mut tim = StageTimings::default();
+
+        let mut prefill_acts = ActivationMatrix::zeros(self.hyper.layers, self.hyper.experts);
+        let mut prefill_routing = Vec::new();
+        let h = self.forward(&ids, &mut prefill_acts, &mut prefill_routing, &mut tim)?;
+        let first = self.next_token(&h, &mut tim)?;
+
+        let mut decode_acts = ActivationMatrix::zeros(self.hyper.layers, self.hyper.experts);
+        let mut decode_routing = Vec::new();
+        let mut tokens = vec![first];
+        let mut cur = first;
+        for _ in 0..n_out.saturating_sub(1) {
+            let mut routing = Vec::new();
+            let h = self.forward(&[cur], &mut decode_acts, &mut routing, &mut tim)?;
+            // routing here is [layer][1 token]
+            decode_routing.push(routing.into_iter().map(|mut l| l.remove(0)).collect());
+            cur = self.next_token(&h, &mut tim)?;
+            tokens.push(cur);
+        }
+
+        Ok(GenerateOutput {
+            prompt_len: ids.len(),
+            tokens,
+            prefill_activations: prefill_acts,
+            decode_activations: decode_acts,
+            prefill_routing,
+            decode_routing,
+            timings: tim,
+        })
+    }
+
+    /// Prefill only — used by the activation-recording sweeps.
+    pub fn prefill_activations(&mut self, prompt_ids: &[i32]) -> Result<ActivationMatrix> {
+        self.reset();
+        let max_prompt = self.hyper.max_seq.saturating_sub(1);
+        let ids: Vec<i32> = prompt_ids.iter().copied().take(max_prompt).collect();
+        let mut acts = ActivationMatrix::zeros(self.hyper.layers, self.hyper.experts);
+        let mut routing = Vec::new();
+        let mut tim = StageTimings::default();
+        self.forward(&ids, &mut acts, &mut routing, &mut tim)?;
+        Ok(acts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_hyper() -> ModelHyper {
+        ModelHyper {
+            name: "tiny".into(),
+            hidden: 16,
+            layers: 2,
+            experts: 4,
+            topk: 2,
+            ffn: 32,
+            shared_experts: 1,
+            shared_ffn: 24,
+            heads: 2,
+            vocab: 64,
+            max_seq: 32,
+            act: "gelu".into(),
+        }
+    }
+
+    #[test]
+    fn generate_produces_tokens_and_activations() {
+        let mut e = Engine::native(tiny_hyper(), 3);
+        let prompt: Vec<i32> = (0..10).collect();
+        let out = e.generate(&prompt, 5).unwrap();
+        assert_eq!(out.tokens.len(), 5);
+        assert_eq!(out.prompt_len, 10);
+        // prefill: 10 tokens × 2 layers × top-2 = 40 activations
+        assert_eq!(out.prefill_activations.total(), 40.0);
+        // decode: 4 steps (first token comes from prefill) × 2 × 2
+        assert_eq!(out.decode_activations.total(), 16.0);
+        assert!((0..64).contains(&out.tokens[0]));
+        assert_eq!(out.decode_routing.len(), 4);
+        assert_eq!(out.decode_routing[0].len(), 2); // layers
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut a = Engine::native(tiny_hyper(), 3);
+        let mut b = Engine::native(tiny_hyper(), 3);
+        let p: Vec<i32> = (5..25).collect();
+        assert_eq!(a.generate(&p, 6).unwrap().tokens, b.generate(&p, 6).unwrap().tokens);
+    }
+
+    #[test]
+    fn different_prompts_route_differently() {
+        let mut e = Engine::native(tiny_hyper(), 3);
+        let a = e.prefill_activations(&(0..20).collect::<Vec<i32>>()).unwrap();
+        let b = e.prefill_activations(&(30..50).collect::<Vec<i32>>()).unwrap();
+        assert_ne!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn normalized_rows_sum_to_one() {
+        let mut e = Engine::native(tiny_hyper(), 3);
+        let acts = e.prefill_activations(&(0..12).collect::<Vec<i32>>()).unwrap();
+        for row in acts.normalized() {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sequence_overflow_is_error() {
+        let mut e = Engine::native(tiny_hyper(), 3);
+        let p: Vec<i32> = (0..31).collect();
+        // prompt clipped to max_seq - n_out - 1, so this succeeds:
+        assert!(e.generate(&p, 2).is_ok());
+        // but a raw forward beyond max_seq fails:
+        e.reset();
+        let mut acts = ActivationMatrix::zeros(2, 4);
+        let mut routing = Vec::new();
+        let mut tim = StageTimings::default();
+        let ids: Vec<i32> = (0..30).collect();
+        e.forward(&ids, &mut acts, &mut routing, &mut tim).unwrap();
+        assert!(e.forward(&ids, &mut acts, &mut routing, &mut tim).is_err());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut e = Engine::native(tiny_hyper(), 3);
+        let p: Vec<i32> = (0..8).collect();
+        let a = e.generate(&p, 4).unwrap();
+        let b = e.generate(&p, 4).unwrap(); // generate resets internally
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(e.position() > 0, true);
+    }
+}

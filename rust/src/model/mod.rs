@@ -1,0 +1,53 @@
+//! The MoE model layer: weights, tokenizer, inference engine over a
+//! pluggable backend (PJRT artifacts or the pure-rust reference), and
+//! memory accounting used by the cost model.
+
+pub mod engine;
+pub mod reference;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::{
+    ActivationMatrix, Backend, Engine, GenerateOutput, NativeBackend, PjrtBackend,
+    StageTimings, TokenRouting,
+};
+pub use weights::{ExpertWeights, LayerWeights, ModelWeights};
+
+use crate::runtime::ModelHyper;
+
+/// Presets mirroring python/compile/specs.py. The manifest remains the
+/// source of truth when artifacts are present; integration tests assert
+/// these stay in sync.
+pub fn gpt2_moe_mini() -> ModelHyper {
+    ModelHyper {
+        name: "gpt2_moe_mini".into(),
+        hidden: 128,
+        layers: 4,
+        experts: 8,
+        topk: 2,
+        ffn: 256,
+        shared_experts: 0,
+        shared_ffn: 0,
+        heads: 4,
+        vocab: 256,
+        max_seq: 192,
+        act: "gelu".into(),
+    }
+}
+
+pub fn dsv2_mini() -> ModelHyper {
+    ModelHyper {
+        name: "dsv2_mini".into(),
+        hidden: 128,
+        layers: 6,
+        experts: 16,
+        topk: 4,
+        ffn: 128,
+        shared_experts: 1,
+        shared_ffn: 256,
+        heads: 4,
+        vocab: 256,
+        max_seq: 192,
+        act: "silu".into(),
+    }
+}

@@ -1,0 +1,50 @@
+//! Byte-level tokenizer (vocab = 256): every UTF-8 byte is a token.
+//! Matches the mini models' `vocab: 256`; no merges, fully reversible.
+
+/// Encode a string to token ids.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids back to a (lossy) string.
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids.iter().map(|&t| (t & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Encode, truncating/padding-free, to at most `max_len` tokens.
+pub fn encode_clipped(text: &str, max_len: usize) -> Vec<i32> {
+    let mut ids = encode(text);
+    ids.truncate(max_len);
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello, serverless MoE!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ✓";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for id in encode("any text Ω") {
+            assert!((0..256).contains(&id));
+        }
+    }
+
+    #[test]
+    fn clipping() {
+        assert_eq!(encode_clipped("abcdef", 3).len(), 3);
+        assert_eq!(encode_clipped("ab", 10).len(), 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Deterministic model weights + parameter accounting.
+//!
+//! Weights are generated from a seeded PCG stream (scaled-normal init);
+//! there is no Python↔rust weight interchange — correctness of the
+//! artifacts is established against the pure-rust reference on the same
+//! tensors, and the paper's experiments depend on gate *statistics*,
+//! not on a particular pretrained checkpoint (DESIGN.md §2).
+
+use crate::runtime::{HostTensor, ModelHyper};
+use crate::util::rng::Rng;
+
+/// One expert FFN's parameters.
+#[derive(Debug, Clone)]
+pub struct ExpertWeights {
+    pub w1: HostTensor, // [H, F]
+    pub b1: HostTensor, // [F]
+    pub w2: HostTensor, // [F, H]
+    pub b2: HostTensor, // [H]
+}
+
+impl ExpertWeights {
+    pub fn param_count(&self) -> usize {
+        self.w1.numel() + self.b1.numel() + self.w2.numel() + self.b2.numel()
+    }
+}
+
+/// One transformer block's parameters.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln1_g: HostTensor,
+    pub ln1_b: HostTensor,
+    pub wqkv: HostTensor, // [H, 3H]
+    pub bqkv: HostTensor, // [3H]
+    pub wo: HostTensor,   // [H, H]
+    pub bo: HostTensor,   // [H]
+    pub ln2_g: HostTensor,
+    pub ln2_b: HostTensor,
+    pub wg: HostTensor, // [H, K]
+    pub experts: Vec<ExpertWeights>,
+    pub shared: Option<ExpertWeights>,
+}
+
+impl LayerWeights {
+    /// Non-expert parameter count (attention + gate + shared experts —
+    /// the paper counts shared experts in F_l since they see all tokens).
+    pub fn nonexpert_param_count(&self) -> usize {
+        let attn = self.ln1_g.numel()
+            + self.ln1_b.numel()
+            + self.wqkv.numel()
+            + self.bqkv.numel()
+            + self.wo.numel()
+            + self.bo.numel()
+            + self.ln2_g.numel()
+            + self.ln2_b.numel()
+            + self.wg.numel();
+        attn + self.shared.as_ref().map_or(0, ExpertWeights::param_count)
+    }
+}
+
+/// Full model parameters.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub wte: HostTensor, // [V, H]
+    pub wpe: HostTensor, // [T, H]
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: HostTensor,
+    pub lnf_b: HostTensor,
+}
+
+fn randn(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+    HostTensor::new(shape, data)
+}
+
+fn ones(shape: Vec<usize>) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::new(shape, vec![1.0; n])
+}
+
+fn zeros(shape: Vec<usize>) -> HostTensor {
+    HostTensor::zeros(shape)
+}
+
+impl ModelWeights {
+    /// Deterministic init. Gate weights get a larger scale so routing
+    /// is decisively non-uniform — the expert-specialisation regime the
+    /// paper's prediction pipeline exploits.
+    pub fn generate(hyper: &ModelHyper, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed ^ 0x5745_4947_4854_53); // "WEIGHTS"
+        let h = hyper.hidden;
+        let w_scale = 0.08 / (h as f32).sqrt() * 4.0;
+        let mut expert_rng = rng.fork(1);
+        let mut gate_rng = rng.fork(2);
+
+        let layers = (0..hyper.layers)
+            .map(|_| {
+                let experts = (0..hyper.experts)
+                    .map(|_| ExpertWeights {
+                        w1: randn(&mut expert_rng, vec![h, hyper.ffn], w_scale),
+                        b1: randn(&mut expert_rng, vec![hyper.ffn], 0.01),
+                        w2: randn(&mut expert_rng, vec![hyper.ffn, h], w_scale),
+                        b2: randn(&mut expert_rng, vec![h], 0.01),
+                    })
+                    .collect();
+                let shared = (hyper.shared_experts > 0).then(|| ExpertWeights {
+                    w1: randn(&mut expert_rng, vec![h, hyper.shared_ffn], w_scale),
+                    b1: randn(&mut expert_rng, vec![hyper.shared_ffn], 0.01),
+                    w2: randn(&mut expert_rng, vec![hyper.shared_ffn, h], w_scale),
+                    b2: randn(&mut expert_rng, vec![h], 0.01),
+                });
+                LayerWeights {
+                    ln1_g: ones(vec![h]),
+                    ln1_b: zeros(vec![h]),
+                    wqkv: randn(&mut rng, vec![h, 3 * h], w_scale),
+                    bqkv: randn(&mut rng, vec![3 * h], 0.01),
+                    wo: randn(&mut rng, vec![h, h], w_scale),
+                    bo: randn(&mut rng, vec![h], 0.01),
+                    ln2_g: ones(vec![h]),
+                    ln2_b: zeros(vec![h]),
+                    // stronger gate → decisive, input-dependent routing
+                    wg: randn(&mut gate_rng, vec![h, hyper.experts], 0.6),
+                    experts,
+                    shared,
+                }
+            })
+            .collect();
+
+        ModelWeights {
+            wte: randn(&mut rng, vec![hyper.vocab, h], 0.6),
+            wpe: randn(&mut rng, vec![hyper.max_seq, h], 0.1),
+            layers,
+            lnf_g: ones(vec![h]),
+            lnf_b: zeros(vec![h]),
+        }
+    }
+
+    pub fn expert_param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(ExpertWeights::param_count)
+            .sum()
+    }
+
+    pub fn nonexpert_param_count(&self) -> usize {
+        let embed = self.wte.numel() + self.wpe.numel() + self.lnf_g.numel() + self.lnf_b.numel();
+        embed + self.layers.iter().map(LayerWeights::nonexpert_param_count).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper() -> ModelHyper {
+        ModelHyper {
+            name: "t".into(),
+            hidden: 32,
+            layers: 2,
+            experts: 4,
+            topk: 2,
+            ffn: 64,
+            shared_experts: 1,
+            shared_ffn: 48,
+            heads: 4,
+            vocab: 64,
+            max_seq: 40,
+            act: "gelu".into(),
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let h = hyper();
+        let a = ModelWeights::generate(&h, 7);
+        let b = ModelWeights::generate(&h, 7);
+        assert_eq!(a.wte.data, b.wte.data);
+        assert_eq!(a.layers[1].experts[3].w2.data, b.layers[1].experts[3].w2.data);
+        let c = ModelWeights::generate(&h, 8);
+        assert_ne!(a.wte.data, c.wte.data);
+    }
+
+    #[test]
+    fn shapes_match_hyper() {
+        let h = hyper();
+        let w = ModelWeights::generate(&h, 1);
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.layers[0].experts.len(), 4);
+        assert_eq!(w.layers[0].experts[0].w1.shape, vec![32, 64]);
+        assert_eq!(w.layers[0].wg.shape, vec![32, 4]);
+        assert!(w.layers[0].shared.is_some());
+        assert_eq!(w.layers[0].shared.as_ref().unwrap().w1.shape, vec![32, 48]);
+    }
+
+    #[test]
+    fn param_accounting() {
+        let h = hyper();
+        let w = ModelWeights::generate(&h, 1);
+        // one expert: H*F + F + F*H + H = 32*64*2 + 64 + 32
+        let per_expert = 32 * 64 + 64 + 64 * 32 + 32;
+        assert_eq!(w.expert_param_count(), 2 * 4 * per_expert);
+        assert!(w.nonexpert_param_count() > 0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Convexity analysis (Theorem 2, §IV-E).
+//!
+//! g(ỹ) = (T̃(ỹ) + t^rem/s̃)·(H^w + c^c·ỹ) with T̃ the fitted
+//! exponential. g″(ỹ) = c^c·θ1·θ2²·e^{−θ2 ỹ}·[ỹ − (2/θ2 − H^w/c^c)],
+//! so g is strictly convex on [2/θ2 − H^w/c^c, ∞); when
+//! θ2 ≥ 2c^c/H^w the threshold is ≤ 0 and g is convex on (0, ∞).
+
+use super::fitting::ExpCurve;
+
+/// The per-layer objective term g(ỹ) of problem P2.
+#[derive(Debug, Clone, Copy)]
+pub struct GTerm {
+    pub curve: ExpCurve,
+    /// H^w — main-model cost per unit time (c^g·M^g + c^c·Σw·m).
+    pub h_w: f64,
+    /// c^c — CPU memory rate.
+    pub c_c: f64,
+    /// t^rem / s̃_l — normalised invoke overhead.
+    pub t_rem_over_s: f64,
+}
+
+impl GTerm {
+    pub fn eval(&self, y: f64) -> f64 {
+        (self.curve.eval(y) + self.t_rem_over_s) * (self.h_w + self.c_c * y)
+    }
+
+    /// g′(ỹ) (closed form, matching the Appendix-B derivation).
+    pub fn deriv(&self, y: f64) -> f64 {
+        let ExpCurve { theta1, theta2, theta3 } = self.curve;
+        let e = (-theta2 * y).exp();
+        (self.c_c * theta1 - self.c_c * theta1 * theta2 * y - self.h_w * theta1 * theta2) * e
+            + self.c_c * (theta3 + self.t_rem_over_s)
+    }
+
+    /// g″(ỹ) (closed form).
+    pub fn second_deriv(&self, y: f64) -> f64 {
+        let ExpCurve { theta1, theta2, .. } = self.curve;
+        self.c_c * theta1 * theta2 * theta2 * (-theta2 * y).exp()
+            * (y - self.convexity_threshold())
+    }
+
+    /// 2/θ2 − H^w/c^c — below this, g may be concave.
+    pub fn convexity_threshold(&self) -> f64 {
+        2.0 / self.curve.theta2 - self.h_w / self.c_c
+    }
+
+    /// Theorem 2's global-convexity condition θ2 ≥ 2c^c/H^w.
+    pub fn globally_convex(&self) -> bool {
+        self.curve.theta2 >= 2.0 * self.c_c / self.h_w
+    }
+
+    /// Strict convexity on an interval (used to certify the feasible
+    /// region before the Lagrangian solve).
+    pub fn convex_on(&self, lo: f64, hi: f64) -> bool {
+        lo >= self.convexity_threshold() - 1e-12 || {
+            // numeric fallback: sample g″ across [lo, hi]
+            (0..=50).all(|i| {
+                let y = lo + (hi - lo) * i as f64 / 50.0;
+                self.second_deriv(y) >= -1e-12
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn term() -> GTerm {
+        GTerm {
+            curve: ExpCurve { theta1: 0.5, theta2: 0.005, theta3: 0.05 },
+            h_w: 5000.0,
+            c_c: 1.0,
+            t_rem_over_s: 0.02,
+        }
+    }
+
+    #[test]
+    fn closed_form_derivatives_match_numeric() {
+        let g = term();
+        for y in [100.0, 500.0, 1500.0, 4000.0] {
+            let h = 1e-4;
+            let num1 = (g.eval(y + h) - g.eval(y - h)) / (2.0 * h);
+            assert!((g.deriv(y) - num1).abs() / num1.abs().max(1.0) < 1e-5,
+                    "g' at {y}: {} vs {num1}", g.deriv(y));
+            let num2 = (g.eval(y + h) - 2.0 * g.eval(y) + g.eval(y - h)) / (h * h);
+            assert!((g.second_deriv(y) - num2).abs() < 1e-2 * num2.abs().max(1.0),
+                    "g'' at {y}: {} vs {num2}", g.second_deriv(y));
+        }
+    }
+
+    #[test]
+    fn theorem2_threshold_sign() {
+        let g = term();
+        let thr = g.convexity_threshold();
+        // 2/0.005 − 5000/1 = 400 − 5000 < 0 ⇒ globally convex
+        assert!(thr < 0.0);
+        assert!(g.globally_convex());
+        assert!(g.second_deriv(10.0) > 0.0);
+        assert!(g.convex_on(10.0, 5000.0));
+    }
+
+    #[test]
+    fn non_global_case_concave_below_threshold() {
+        // small θ2 & small H^w → positive threshold
+        let g = GTerm {
+            curve: ExpCurve { theta1: 1.0, theta2: 0.001, theta3: 0.0 },
+            h_w: 100.0,
+            c_c: 1.0,
+            t_rem_over_s: 0.0,
+        };
+        let thr = g.convexity_threshold(); // 2000 − 100 = 1900
+        assert!(thr > 0.0);
+        assert!(!g.globally_convex());
+        assert!(g.second_deriv(thr - 500.0) < 0.0);
+        assert!(g.second_deriv(thr + 500.0) > 0.0);
+        assert!(g.convex_on(thr, thr + 4000.0));
+        assert!(!g.convex_on(100.0, thr));
+    }
+
+    #[test]
+    fn paper_scale_check_dsv2() {
+        // §IV-E: Deepseek-v2-lite θ2 = 2.4363 per GB = 0.0023793/MB,
+        // H^w with 3 GB main model ⇒ 2c^c/H^w ≈ 0.25 per GB — convex.
+        let g = GTerm {
+            curve: ExpCurve { theta1: 1.0, theta2: 2.4363 / 1024.0, theta3: 0.01 },
+            h_w: 3.0 * 1024.0 * 2.7, // ~c^g M^g/c^c + w·m
+            c_c: 1.0,
+            t_rem_over_s: 0.01,
+        };
+        assert!(g.globally_convex());
+    }
+}

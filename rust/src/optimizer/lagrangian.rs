@@ -1,0 +1,269 @@
+//! Lagrangian-duality solve of the remote-memory problem P2 (§IV-E,
+//! Theorem 3).
+//!
+//! min_y  (1+η)·Σ_l s̃_l·g_l(ỹ_l)
+//! s.t.   Σ_l r_l(ỹ_l) + C₀ ≤ TPOT      (q_{l,1}, the TPOT constraint)
+//!        m_lo_l ≤ ỹ_l ≤ m_hi           (box constraints q_{l,2..4})
+//!
+//! where r_l(y) = s̃_l·topk·(T̃_l(y)/topk + 2D/B + t_rem) is layer l's
+//! expected remote decode contribution. Every g_l is convex on the box
+//! (certified by `GTerm::convex_on` before solving; Lemma 1 ⇒ strong
+//! duality), so:
+//!   inner: for fixed λ ≥ 0, min over y is separable → per-layer
+//!          golden-section on the convex φ_l(y) = s̃_l·g_l(y) + λ·r_l(y);
+//!   outer: bisection on λ for the complementary-slackness point.
+//! KKT residuals are returned so tests (Theorem 3) can verify ε-optimality.
+
+use super::convexity::GTerm;
+
+/// One layer's data for the solve.
+#[derive(Debug, Clone)]
+pub struct LayerTerm {
+    pub g: GTerm,
+    /// s̃_l — total routed probability mass of the remote set.
+    pub s_tilde: f64,
+    /// Remote decode time per token excluding the memory-dependent
+    /// kernel term: topk·s̃·(2D/B + t_rem).
+    pub fixed_decode_s: f64,
+    /// Multiplier applied to T̃(y) in the TPOT constraint:
+    /// topk·s̃ (expected remote activations per token).
+    pub kernel_mass: f64,
+    /// Box constraints from the spec catalog + constraint (10e).
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl LayerTerm {
+    /// r_l(y): expected per-token remote decode time of this layer.
+    /// T̃ is fitted on the *per-activation* kernel time.
+    pub fn decode_time(&self, y: f64) -> f64 {
+        self.kernel_mass * self.g.curve.eval(y) + self.fixed_decode_s
+    }
+
+    fn phi(&self, y: f64, lambda: f64) -> f64 {
+        self.s_tilde * self.g.eval(y) + lambda * self.decode_time(y)
+    }
+
+    /// Golden-section minimisation of the convex φ on [lo, hi].
+    fn minimize(&self, lambda: f64) -> f64 {
+        let phi = 0.5 * (5.0f64.sqrt() - 1.0);
+        let (mut lo, mut hi) = (self.lo, self.hi);
+        if hi - lo < 1e-9 {
+            return lo;
+        }
+        let mut c = hi - phi * (hi - lo);
+        let mut d = lo + phi * (hi - lo);
+        for _ in 0..80 {
+            if self.phi(c, lambda) < self.phi(d, lambda) {
+                hi = d;
+            } else {
+                lo = c;
+            }
+            c = hi - phi * (hi - lo);
+            d = lo + phi * (hi - lo);
+        }
+        0.5 * (lo + hi)
+    }
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone)]
+pub struct DualSolution {
+    /// ỹ* per layer (continuous; snap to the catalog afterwards).
+    pub y: Vec<f64>,
+    /// λ* of the TPOT constraint.
+    pub lambda: f64,
+    /// Objective (1+η)·Σ s̃·g at y*.
+    pub objective: f64,
+    /// Constraint slack: TPOT − Σ r_l(y*) − C₀ (≥ 0 when feasible).
+    pub slack: f64,
+    /// |λ·slack| — complementary-slackness residual (≈0 at KKT).
+    pub kkt_residual: f64,
+    pub feasible: bool,
+}
+
+/// Solve P2. `tpot_budget` is TPOT − C₀ (everything in the constraint
+/// that does not depend on y: non-expert time, swaps, local path).
+pub fn solve(layers: &[LayerTerm], eta: f64, tpot_budget: f64) -> DualSolution {
+    assert!(!layers.is_empty());
+    let objective = |y: &[f64]| -> f64 {
+        (1.0 + eta)
+            * layers.iter().zip(y).map(|(l, &yi)| l.s_tilde * l.g.eval(yi)).sum::<f64>()
+    };
+    let decode_total =
+        |y: &[f64]| -> f64 { layers.iter().zip(y).map(|(l, &yi)| l.decode_time(yi)).sum() };
+
+    // λ = 0: unconstrained minimum.
+    let y0: Vec<f64> = layers.iter().map(|l| l.minimize(0.0)).collect();
+    let slack0 = tpot_budget - decode_total(&y0);
+    if slack0 >= 0.0 {
+        return DualSolution {
+            objective: objective(&y0),
+            slack: slack0,
+            kkt_residual: 0.0,
+            lambda: 0.0,
+            feasible: true,
+            y: y0,
+        };
+    }
+
+    // Feasibility check at max memory (decode time is minimal there).
+    let y_max: Vec<f64> = layers.iter().map(|l| l.hi).collect();
+    let best_possible = decode_total(&y_max);
+    if best_possible > tpot_budget {
+        // infeasible: return the fastest configuration with a flag —
+        // the coordinator reacts by lowering b (more local experts).
+        let slack = tpot_budget - best_possible;
+        return DualSolution {
+            objective: objective(&y_max),
+            slack,
+            kkt_residual: 0.0,
+            lambda: f64::INFINITY,
+            feasible: false,
+            y: y_max,
+        };
+    }
+
+    // Bisection on λ: decode_total(y*(λ)) is non-increasing in λ.
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    for _ in 0..60 {
+        let y: Vec<f64> = layers.iter().map(|l| l.minimize(hi)).collect();
+        if decode_total(&y) <= tpot_budget {
+            break;
+        }
+        hi *= 4.0;
+    }
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        let y: Vec<f64> = layers.iter().map(|l| l.minimize(mid)).collect();
+        if decode_total(&y) <= tpot_budget {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let lambda = hi;
+    let y: Vec<f64> = layers.iter().map(|l| l.minimize(lambda)).collect();
+    let slack = tpot_budget - decode_total(&y);
+    DualSolution {
+        objective: objective(&y),
+        kkt_residual: (lambda * slack).abs(),
+        lambda,
+        slack,
+        feasible: slack >= -1e-6,
+        y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::fitting::ExpCurve;
+
+    fn layer(s_tilde: f64, h_w: f64) -> LayerTerm {
+        LayerTerm {
+            g: GTerm {
+                curve: ExpCurve { theta1: 0.4, theta2: 0.004, theta3: 0.03 },
+                h_w,
+                c_c: 1.0,
+                t_rem_over_s: 0.02 / s_tilde,
+            },
+            s_tilde,
+            fixed_decode_s: 2.0 * s_tilde * (0.001 + 0.007),
+            kernel_mass: 2.0 * s_tilde,
+            lo: 200.0,
+            hi: 2000.0,
+        }
+    }
+
+    #[test]
+    fn unconstrained_when_budget_loose() {
+        let layers = vec![layer(0.3, 5000.0), layer(0.5, 5000.0)];
+        let sol = solve(&layers, 0.1, 100.0);
+        assert!(sol.feasible);
+        assert_eq!(sol.lambda, 0.0);
+        assert_eq!(sol.kkt_residual, 0.0);
+        // each y minimises its own g (check first-order stationarity
+        // or a boundary)
+        for (l, &y) in layers.iter().zip(&sol.y) {
+            let interior = y > l.lo + 1.0 && y < l.hi - 1.0;
+            if interior {
+                assert!(l.g.deriv(y).abs() < 2e-2 * l.g.eval(y).abs().max(1.0),
+                        "stationarity at {y}: g'={}", l.g.deriv(y));
+            }
+        }
+    }
+
+    #[test]
+    fn tight_budget_activates_constraint_with_kkt() {
+        let layers = vec![layer(0.4, 5000.0), layer(0.6, 5000.0)];
+        // budget between best and unconstrained decode times
+        let loose = solve(&layers, 0.1, 100.0);
+        let loose_decode: f64 =
+            layers.iter().zip(&loose.y).map(|(l, &y)| l.decode_time(y)).sum();
+        let y_max: Vec<f64> = layers.iter().map(|l| l.hi).collect();
+        let best: f64 = layers.iter().zip(&y_max).map(|(l, &y)| l.decode_time(y)).sum();
+        let budget = 0.5 * (loose_decode + best);
+        let sol = solve(&layers, 0.1, budget);
+        assert!(sol.feasible);
+        assert!(sol.lambda > 0.0);
+        // constraint is (near-)binding and KKT residual tiny
+        assert!(sol.slack.abs() < 1e-3 * budget, "slack={}", sol.slack);
+        assert!(sol.kkt_residual < 1e-3, "kkt={}", sol.kkt_residual);
+        // objective is worse than unconstrained (duality)
+        assert!(sol.objective >= loose.objective - 1e-9);
+        // memory increased to meet the budget
+        assert!(sol.y.iter().zip(&loose.y).all(|(a, b)| a >= b));
+    }
+
+    #[test]
+    fn infeasible_reported() {
+        let layers = vec![layer(0.9, 5000.0)];
+        let sol = solve(&layers, 0.1, 1e-6);
+        assert!(!sol.feasible);
+        assert!(sol.slack < 0.0);
+        assert_eq!(sol.y[0], layers[0].hi);
+    }
+
+    #[test]
+    fn solution_within_box() {
+        let layers = vec![layer(0.2, 3000.0), layer(0.7, 3000.0), layer(0.5, 3000.0)];
+        for budget in [0.05, 0.2, 1.0, 50.0] {
+            let sol = solve(&layers, 0.1, budget);
+            for (l, &y) in layers.iter().zip(&sol.y) {
+                assert!(y >= l.lo - 1e-9 && y <= l.hi + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_grid_search_optimum() {
+        // 2 layers, coarse grid over the box — dual solve must be ≤
+        // any feasible grid point's objective (ε-optimality).
+        let layers = vec![layer(0.4, 4000.0), layer(0.6, 4000.0)];
+        let budget = 0.09;
+        let sol = solve(&layers, 0.0, budget);
+        assert!(sol.feasible);
+        let mut best_grid = f64::INFINITY;
+        let steps = 60;
+        for i in 0..=steps {
+            for j in 0..=steps {
+                let y0 = 200.0 + 1800.0 * i as f64 / steps as f64;
+                let y1 = 200.0 + 1800.0 * j as f64 / steps as f64;
+                let decode = layers[0].decode_time(y0) + layers[1].decode_time(y1);
+                if decode <= budget {
+                    let obj = layers[0].s_tilde * layers[0].g.eval(y0)
+                        + layers[1].s_tilde * layers[1].g.eval(y1);
+                    best_grid = best_grid.min(obj);
+                }
+            }
+        }
+        assert!(
+            sol.objective <= best_grid * 1.01 + 1e-9,
+            "dual {} vs grid {}",
+            sol.objective,
+            best_grid
+        );
+    }
+}

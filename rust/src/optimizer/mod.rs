@@ -1,0 +1,14 @@
+//! Remote-experts memory & replica optimization (§IV-E, §IV-F):
+//! exponential curve fitting, Theorem-2 convexity certification, the
+//! Lagrangian-dual/KKT solve of P2, and the replica-potential loop
+//! under the Theorem-4 bound.
+
+pub mod convexity;
+pub mod fitting;
+pub mod lagrangian;
+pub mod replicas;
+
+pub use convexity::GTerm;
+pub use fitting::{fit_exp_curve, ExpCurve};
+pub use lagrangian::{solve, DualSolution, LayerTerm};
+pub use replicas::{decide_replicas, theorem4_bound, LayerReplicaInput, ReplicaDecision};

@@ -1,0 +1,233 @@
+//! Remote-expert replica decision (§IV-F-2) with the Theorem-4
+//! worst-case makespan bound and the replica-potential greedy loop
+//! (eq. 15).
+
+use crate::partition::lpt;
+
+/// Theorem 4: with z replicas, the LPT makespan over the remote set is
+/// at most ((z−1)/z)·max_task + total/z + t_rem, where `max_task` is
+/// the Corollary-1 single-expert worst task (τ(N_up) + 2D·N_up/B) and
+/// `total` is T_l^rem = Σ_k (PT^rem + 2D·N^pre_k/B).
+pub fn theorem4_bound(z: usize, max_task_s: f64, total_s: f64, t_rem_s: f64) -> f64 {
+    assert!(z >= 1);
+    let zf = z as f64;
+    (zf - 1.0) / zf * max_task_s + total_s / zf + t_rem_s
+}
+
+/// Outcome of the replica loop.
+#[derive(Debug, Clone)]
+pub struct ReplicaDecision {
+    pub z: Vec<usize>,
+    /// per-layer LPT partitions of remote-expert indices.
+    pub partitions: Vec<Vec<Vec<usize>>>,
+    pub iterations: usize,
+}
+
+/// Inputs per layer: the remote experts' prefill task weights (seconds,
+/// including their transfer terms), their ids, and the payload-driven
+/// replica floor z_min (constraint 10g).
+#[derive(Debug, Clone)]
+pub struct LayerReplicaInput {
+    pub expert_ids: Vec<usize>,
+    pub task_seconds: Vec<f64>,
+    pub z_min: usize,
+}
+
+/// The §IV-F-2 procedure.
+///
+/// 1. start from the payload floors;
+/// 2. while the worst-case TTFT (via the cost callback's latency) is
+///    violated, add a replica to the layer with the greatest potential;
+/// 3. keep adding replicas while some potential ϖ(l, Z) > 0 (adding
+///    one replica still *reduces* total cost), capped at z_max.
+///
+/// `cost_of(z) → (total_cost, ttft)` evaluates a candidate replica
+/// vector through the full cost/latency model (the closure carries the
+/// plan and profile).
+pub fn decide_replicas<F>(
+    inputs: &[LayerReplicaInput],
+    z_max: usize,
+    ttft_slo: f64,
+    mut cost_of: F,
+) -> ReplicaDecision
+where
+    F: FnMut(&[usize]) -> (f64, f64),
+{
+    let layers = inputs.len();
+    let mut z: Vec<usize> = inputs.iter().map(|i| i.z_min.clamp(1, z_max)).collect();
+    // layers with no remote experts keep z implicitly irrelevant; mark 0
+    for (l, inp) in inputs.iter().enumerate() {
+        if inp.expert_ids.is_empty() {
+            z[l] = 0;
+        }
+    }
+    let mut iterations = 0;
+
+    // potential of adding one replica to layer l (eq. 15)
+    let potential = |z: &[usize], l: usize, cost_of: &mut F| -> f64 {
+        let (cur, _) = cost_of(z);
+        let mut plus = z.to_vec();
+        plus[l] += 1;
+        let (next, _) = cost_of(&plus);
+        cur - next
+    };
+
+    // Phase A: satisfy the TTFT SLO.
+    loop {
+        iterations += 1;
+        let (_, ttft) = cost_of(&z);
+        if ttft <= ttft_slo {
+            break;
+        }
+        // pick the best layer to add a replica to
+        let candidates: Vec<usize> = (0..layers)
+            .filter(|&l| !inputs[l].expert_ids.is_empty() && z[l] < z_max)
+            .collect();
+        if candidates.is_empty() {
+            break; // cannot improve further
+        }
+        let best = candidates
+            .into_iter()
+            .max_by(|&a, &b| {
+                potential(&z, a, &mut cost_of)
+                    .partial_cmp(&potential(&z, b, &mut cost_of))
+                    .unwrap()
+            })
+            .unwrap();
+        z[best] += 1;
+        if iterations > layers * z_max + 8 {
+            break;
+        }
+    }
+
+    // Phase B: keep adding while it reduces cost (ϖ > 0).
+    loop {
+        iterations += 1;
+        let mut best: Option<(usize, f64)> = None;
+        for l in 0..layers {
+            if inputs[l].expert_ids.is_empty() || z[l] >= z_max {
+                continue;
+            }
+            let p = potential(&z, l, &mut cost_of);
+            if p > 1e-12 && best.map_or(true, |(_, bp)| p > bp) {
+                best = Some((l, p));
+            }
+        }
+        match best {
+            Some((l, _)) => z[l] += 1,
+            None => break,
+        }
+        if iterations > 4 * layers * z_max + 16 {
+            break;
+        }
+    }
+
+    // Final LPT partitions at the chosen z.
+    let partitions = inputs
+        .iter()
+        .zip(&z)
+        .map(|(inp, &zl)| {
+            if inp.expert_ids.is_empty() || zl == 0 {
+                Vec::new()
+            } else {
+                let p = lpt(&inp.task_seconds, zl);
+                p.groups
+                    .iter()
+                    .filter(|g| !g.is_empty())
+                    .map(|g| g.iter().map(|&slot| inp.expert_ids[slot]).collect())
+                    .collect()
+            }
+        })
+        .collect();
+
+    ReplicaDecision { z, partitions, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem4_monotone_in_z() {
+        let mut last = f64::INFINITY;
+        for z in 1..=8 {
+            let b = theorem4_bound(z, 0.5, 4.0, 0.01);
+            assert!(b < last, "z={z}");
+            last = b;
+        }
+        // z→∞ limit is max_task + t_rem
+        assert!(theorem4_bound(1000, 0.5, 4.0, 0.01) < 0.52);
+    }
+
+    #[test]
+    fn theorem4_upper_bounds_lpt_makespan() {
+        // random-ish tasks: LPT makespan ≤ bound with max_task as the
+        // largest weight and total as the sum
+        let tasks = [0.4, 0.35, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05];
+        let total: f64 = tasks.iter().sum();
+        for z in 1..=4 {
+            let p = lpt(&tasks, z);
+            let bound = theorem4_bound(z, 0.4, total, 0.0);
+            assert!(p.makespan() <= bound + 1e-9, "z={z} {} vs {bound}", p.makespan());
+        }
+    }
+
+    fn toy_inputs() -> Vec<LayerReplicaInput> {
+        vec![
+            LayerReplicaInput {
+                expert_ids: vec![2, 5, 7],
+                task_seconds: vec![0.4, 0.3, 0.2],
+                z_min: 1,
+            },
+            LayerReplicaInput { expert_ids: vec![], task_seconds: vec![], z_min: 1 },
+        ]
+    }
+
+    #[test]
+    fn adds_replicas_until_ttft_met() {
+        let inputs = toy_inputs();
+        // synthetic cost model: ttft = 2/z0, cost = z0 as deployment cost
+        let d = decide_replicas(&inputs, 8, 0.6, |z| {
+            let z0 = z[0].max(1) as f64;
+            (z0, 2.0 / z0)
+        });
+        assert!(d.z[0] >= 4, "{:?}", d.z); // 2/z ≤ 0.6 → z ≥ 4 (z=4: 0.5)
+        assert_eq!(d.z[1], 0); // no remote experts
+        // partitions cover all experts exactly once
+        let all: Vec<usize> = d.partitions[0].iter().flatten().copied().collect();
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![2, 5, 7]);
+    }
+
+    #[test]
+    fn keeps_adding_while_cost_drops() {
+        let inputs = toy_inputs();
+        // cost strictly decreasing in z up to 5, then increasing
+        let d = decide_replicas(&inputs, 8, 100.0, |z| {
+            let z0 = z[0].max(1) as f64;
+            let cost = (z0 - 5.0) * (z0 - 5.0);
+            (cost, 0.0)
+        });
+        assert_eq!(d.z[0], 5, "{:?}", d.z);
+    }
+
+    #[test]
+    fn respects_z_max() {
+        let inputs = toy_inputs();
+        let d = decide_replicas(&inputs, 3, 0.0001, |z| {
+            let z0 = z[0].max(1) as f64;
+            (z0, 1.0 / z0)
+        });
+        assert!(d.z[0] <= 3);
+    }
+
+    #[test]
+    fn payload_floor_respected() {
+        let mut inputs = toy_inputs();
+        inputs[0].z_min = 2;
+        let d = decide_replicas(&inputs, 8, 100.0, |z| (z[0] as f64, 0.0));
+        assert!(d.z[0] >= 2);
+        assert!(d.partitions[0].len() <= d.z[0]);
+    }
+}

@@ -1,0 +1,399 @@
+//! Fig. 8 prediction baselines: VarPAM, VarED, DOP, Fate, EF, BF.
+
+use crate::util::rng::Rng;
+
+use super::predictor::{weighted_prediction, ActivationPredictor, History, SpsPredictor};
+use super::scs::{scs_distance, Signature};
+use super::tree::{ClusterTree, Splitter, TreeParams};
+
+/// BF: brute-force top-α semantic search (the quality ceiling SPS
+/// approximates at >10× the search cost, §V-B).
+pub struct BfPredictor {
+    pub history: History,
+    pub alpha: usize,
+}
+
+impl BfPredictor {
+    pub fn search(&self, query: &Signature) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.history.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scs_distance(query, &self.history.signatures[a])
+                .partial_cmp(&scs_distance(query, &self.history.signatures[b]))
+                .unwrap()
+        });
+        idx.truncate(self.alpha);
+        idx
+    }
+}
+
+impl ActivationPredictor for BfPredictor {
+    fn name(&self) -> &'static str {
+        "BF"
+    }
+
+    fn predict(&self, query: &Signature) -> Vec<Vec<f64>> {
+        let cands = self.search(query);
+        weighted_prediction(&self.history, &cands, query)
+    }
+}
+
+/// VarPAM: the SPS pipeline with classic PAM as the tree splitter.
+pub struct VarPamPredictor(pub SpsPredictor);
+
+impl VarPamPredictor {
+    pub fn build(history: History, alpha: usize, mut params: TreeParams, rng: &mut Rng) -> Self {
+        params.splitter = Splitter::Pam;
+        VarPamPredictor(SpsPredictor::build(history, alpha, params, rng))
+    }
+}
+
+impl ActivationPredictor for VarPamPredictor {
+    fn name(&self) -> &'static str {
+        "VarPAM"
+    }
+
+    fn predict(&self, query: &Signature) -> Vec<Vec<f64>> {
+        self.0.predict(query)
+    }
+}
+
+/// VarED: the clustering distance is the Euclidean distance between
+/// expert-activation matrices instead of semantic similarity. Descent
+/// for a *new* prompt still has to use SCS (its activations are
+/// unknown) — the metric mismatch is exactly the noise the paper
+/// blames for VarED's gap (§V-B).
+pub struct VarEdPredictor {
+    pub history: History,
+    pub tree: ClusterTree,
+    pub alpha: usize,
+}
+
+impl VarEdPredictor {
+    pub fn build(history: History, alpha: usize, params: TreeParams, rng: &mut Rng) -> Self {
+        let dists = &history.distributions;
+        let ed = |a: usize, b: usize| -> f64 {
+            let mut acc = 0.0;
+            for (ra, rb) in dists[a].iter().zip(&dists[b]) {
+                for (&x, &y) in ra.iter().zip(rb) {
+                    acc += (x - y) * (x - y);
+                }
+            }
+            acc.sqrt()
+        };
+        let tree = ClusterTree::build(history.len(), &ed, params, rng);
+        VarEdPredictor { history, tree, alpha }
+    }
+}
+
+impl ActivationPredictor for VarEdPredictor {
+    fn name(&self) -> &'static str {
+        "VarED"
+    }
+
+    fn predict(&self, query: &Signature) -> Vec<Vec<f64>> {
+        let q_dist = |i: usize| scs_distance(query, &self.history.signatures[i]);
+        let cands = self.tree.search(&q_dist, self.alpha);
+        weighted_prediction(&self.history, &cands, query)
+    }
+}
+
+/// DOP (Distribution-Only Prediction): the historical mean activation,
+/// independent of the query.
+pub struct DopPredictor {
+    pub mean: Vec<Vec<f64>>,
+}
+
+impl DopPredictor {
+    pub fn build(history: &History) -> Self {
+        DopPredictor { mean: history.mean_distribution() }
+    }
+}
+
+impl ActivationPredictor for DopPredictor {
+    fn name(&self) -> &'static str {
+        "DOP"
+    }
+
+    fn predict(&self, _query: &Signature) -> Vec<Vec<f64>> {
+        self.mean.clone()
+    }
+}
+
+/// EF (Equal Frequency): uniform over experts.
+pub struct EfPredictor {
+    pub layers: usize,
+    pub experts: usize,
+}
+
+impl ActivationPredictor for EfPredictor {
+    fn name(&self) -> &'static str {
+        "EF"
+    }
+
+    fn predict(&self, _query: &Signature) -> Vec<Vec<f64>> {
+        vec![vec![1.0 / self.experts as f64; self.experts]; self.layers]
+    }
+}
+
+/// Fate-style predictor: a learned linear map from the prompt
+/// embedding to all layers' activation distributions (ridge
+/// regression), mirroring the paper's adaptation of Fate to
+/// prompt-level prediction ("using the initial prompt embedding to
+/// predict activation across all layers").
+pub struct FatePredictor {
+    /// weights [(H+1) × (L·K)] — column-major per output.
+    w: Vec<Vec<f64>>,
+    layers: usize,
+    experts: usize,
+}
+
+impl FatePredictor {
+    pub fn train(history: &History, ridge: f64) -> Self {
+        let n = history.len();
+        assert!(n > 0);
+        let h = history.signatures[0].v.len();
+        let layers = history.distributions[0].len();
+        let experts = history.distributions[0][0].len();
+        let d = h + 1; // bias column
+
+        // Normal equations: (XᵀX + λI) W = XᵀY.
+        let feat = |i: usize, j: usize| -> f64 {
+            if j < h {
+                // scale-invariant feature: normalised signature
+                let s = &history.signatures[i];
+                if s.norm > 0.0 {
+                    s.v[j] / s.norm
+                } else {
+                    0.0
+                }
+            } else {
+                1.0
+            }
+        };
+        let mut xtx = vec![vec![0.0; d]; d];
+        for i in 0..n {
+            for a in 0..d {
+                let fa = feat(i, a);
+                if fa == 0.0 {
+                    continue;
+                }
+                for b in 0..d {
+                    xtx[a][b] += fa * feat(i, b);
+                }
+            }
+        }
+        for (a, row) in xtx.iter_mut().enumerate() {
+            row[a] += ridge;
+        }
+
+        let outputs = layers * experts;
+        let mut xty = vec![vec![0.0; outputs]; d];
+        for i in 0..n {
+            for a in 0..d {
+                let fa = feat(i, a);
+                if fa == 0.0 {
+                    continue;
+                }
+                for l in 0..layers {
+                    for k in 0..experts {
+                        xty[a][l * experts + k] += fa * history.distributions[i][l][k];
+                    }
+                }
+            }
+        }
+
+        let w = solve_multi(xtx, xty);
+        FatePredictor { w, layers, experts }
+    }
+}
+
+/// Gaussian elimination with partial pivoting, multiple RHS columns.
+fn solve_multi(mut a: Vec<Vec<f64>>, mut b: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+    let n = a.len();
+    let m = b[0].len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let p = a[col][col];
+        assert!(p.abs() > 1e-12, "singular system");
+        for j in col..n {
+            a[col][j] /= p;
+        }
+        for j in 0..m {
+            b[col][j] /= p;
+        }
+        for i in 0..n {
+            if i == col {
+                continue;
+            }
+            let f = a[i][col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                a[i][j] -= f * a[col][j];
+            }
+            for j in 0..m {
+                b[i][j] -= f * b[col][j];
+            }
+        }
+    }
+    b
+}
+
+impl ActivationPredictor for FatePredictor {
+    fn name(&self) -> &'static str {
+        "Fate"
+    }
+
+    fn predict(&self, query: &Signature) -> Vec<Vec<f64>> {
+        let h = query.v.len();
+        let d = h + 1;
+        let feat = |j: usize| -> f64 {
+            if j < h {
+                if query.norm > 0.0 {
+                    query.v[j] / query.norm
+                } else {
+                    0.0
+                }
+            } else {
+                1.0
+            }
+        };
+        let mut out = vec![vec![0.0; self.experts]; self.layers];
+        for l in 0..self.layers {
+            for k in 0..self.experts {
+                let mut v = 0.0;
+                for j in 0..d {
+                    v += feat(j) * self.w[j][l * self.experts + k];
+                }
+                out[l][k] = v.max(1e-9);
+            }
+            let total: f64 = out[l].iter().sum();
+            for v in out[l].iter_mut() {
+                *v /= total;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prediction::jsd::matrix_jsd;
+    use crate::runtime::HostTensor;
+
+    fn wte() -> HostTensor {
+        let mut rng = Rng::new(77);
+        HostTensor::new(vec![64, 16], (0..64 * 16).map(|_| rng.normal() as f32).collect())
+    }
+
+    fn two_group_history(wte: &HostTensor, per_group: usize) -> History {
+        let mut h = History::default();
+        for i in 0..per_group {
+            let ids: Vec<i32> = (0..8).map(|t| (t + (i % 3) as i32) % 8).collect();
+            h.push(Signature::from_tokens(&ids, wte), vec![vec![0.45, 0.45, 0.05, 0.05]; 2]);
+        }
+        for i in 0..per_group {
+            let ids: Vec<i32> = (0..8).map(|t| 40 + (t + (i % 3) as i32) % 8).collect();
+            h.push(Signature::from_tokens(&ids, wte), vec![vec![0.05, 0.05, 0.45, 0.45]; 2]);
+        }
+        h
+    }
+
+    #[test]
+    fn bf_finds_exact_nearest() {
+        let wte = wte();
+        let h = two_group_history(&wte, 20);
+        let bf = BfPredictor { history: h, alpha: 5 };
+        let q = Signature::from_tokens(&[0, 1, 2, 3, 4, 5, 6, 7], &wte);
+        let found = bf.search(&q);
+        assert!(found.iter().all(|&i| i < 20));
+        let pred = bf.predict(&q);
+        assert!(pred[0][0] > 0.3);
+    }
+
+    #[test]
+    fn dop_ignores_query() {
+        let wte = wte();
+        let h = two_group_history(&wte, 10);
+        let dop = DopPredictor::build(&h);
+        let qa = Signature::from_tokens(&[0, 1, 2], &wte);
+        let qb = Signature::from_tokens(&[44, 45, 46], &wte);
+        assert_eq!(dop.predict(&qa), dop.predict(&qb));
+    }
+
+    #[test]
+    fn ef_uniform() {
+        let ef = EfPredictor { layers: 3, experts: 8 };
+        let q = Signature::from_tokens(&[1], &wte());
+        let p = ef.predict(&q);
+        assert_eq!(p.len(), 3);
+        assert!(p.iter().flatten().all(|&v| (v - 0.125).abs() < 1e-12));
+    }
+
+    #[test]
+    fn fate_learns_group_separation() {
+        let wte = wte();
+        let h = two_group_history(&wte, 25);
+        let fate = FatePredictor::train(&h, 1e-3);
+        let qa = Signature::from_tokens(&[0, 1, 2, 3, 4], &wte);
+        let qb = Signature::from_tokens(&[40, 41, 42, 43, 44], &wte);
+        let pa = fate.predict(&qa);
+        let pb = fate.predict(&qb);
+        assert!(pa[0][0] > pa[0][2], "A-group query should favour experts 0/1: {pa:?}");
+        assert!(pb[0][2] > pb[0][0], "B-group query should favour experts 2/3: {pb:?}");
+        for row in pa.iter().chain(pb.iter()) {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn predictor_quality_ordering_on_separable_data() {
+        // Query-aware predictors must beat DOP/EF on two-group data.
+        let wte = wte();
+        let h = two_group_history(&wte, 30);
+        let params = TreeParams { beta: 20, fanout: 2, ..TreeParams::default() };
+        let sps = SpsPredictor::build(h.clone(), 5, params, &mut Rng::new(1));
+        let bf = BfPredictor { history: h.clone(), alpha: 5 };
+        let dop = DopPredictor::build(&h);
+        let ef = EfPredictor { layers: 2, experts: 4 };
+
+        let q = Signature::from_tokens(&[0, 1, 2, 3, 4, 5], &wte);
+        let truth = vec![vec![0.45, 0.45, 0.05, 0.05]; 2];
+        let j_sps = matrix_jsd(&sps.predict(&q), &truth);
+        let j_bf = matrix_jsd(&bf.predict(&q), &truth);
+        let j_dop = matrix_jsd(&dop.predict(&q), &truth);
+        let j_ef = matrix_jsd(&ef.predict(&q), &truth);
+        assert!(j_sps < j_dop && j_sps < j_ef, "sps={j_sps} dop={j_dop} ef={j_ef}");
+        assert!(j_bf <= j_sps + 1e-9, "BF is the ceiling: bf={j_bf} sps={j_sps}");
+    }
+
+    #[test]
+    fn varpam_and_vared_work() {
+        let wte = wte();
+        let h = two_group_history(&wte, 20);
+        let params = TreeParams { beta: 15, fanout: 2, ..TreeParams::default() };
+        let vp = VarPamPredictor::build(h.clone(), 5, params, &mut Rng::new(2));
+        let ve = VarEdPredictor::build(h, 5, params, &mut Rng::new(3));
+        let q = Signature::from_tokens(&[0, 1, 2, 3], &wte);
+        let truth = vec![vec![0.45, 0.45, 0.05, 0.05]; 2];
+        assert!(matrix_jsd(&vp.predict(&q), &truth) < 0.2);
+        assert!(matrix_jsd(&ve.predict(&q), &truth) < 0.4);
+    }
+
+    #[test]
+    fn solve_multi_known_system() {
+        // [[2,0],[0,4]] x = [[2],[8]] → x = [[1],[2]]
+        let a = vec![vec![2.0, 0.0], vec![0.0, 4.0]];
+        let b = vec![vec![2.0], vec![8.0]];
+        let x = solve_multi(a, b);
+        assert!((x[0][0] - 1.0).abs() < 1e-12);
+        assert!((x[1][0] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,76 @@
+//! Jensen–Shannon divergence — the paper's prediction-quality metric
+//! (Figs. 3 and 8).
+
+/// JSD between two discrete distributions (natural log; range
+/// [0, ln 2]). Inputs need not be normalised — they are normalised
+/// here to be robust to count vectors.
+pub fn jsd(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    assert!(sp > 0.0 && sq > 0.0, "JSD of a zero vector");
+    let mut out = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let pi = pi / sp;
+        let qi = qi / sq;
+        let mi = 0.5 * (pi + qi);
+        if pi > 0.0 {
+            out += 0.5 * pi * (pi / mi).ln();
+        }
+        if qi > 0.0 {
+            out += 0.5 * qi * (qi / mi).ln();
+        }
+    }
+    out.max(0.0)
+}
+
+/// Mean per-layer JSD between two activation-distribution matrices —
+/// how Figs. 3/8 score a prediction against the ground truth.
+pub fn matrix_jsd(p: &[Vec<f64>], q: &[Vec<f64>]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    assert!(!p.is_empty());
+    p.iter().zip(q).map(|(a, b)| jsd(a, b)).sum::<f64>() / p.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_distributions_zero() {
+        let p = [0.2, 0.3, 0.5];
+        assert!(jsd(&p, &p) < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_distributions_ln2() {
+        let p = [1.0, 0.0];
+        let q = [0.0, 1.0];
+        assert!((jsd(&p, &q) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_and_bounded() {
+        let p = [0.7, 0.2, 0.1];
+        let q = [0.1, 0.1, 0.8];
+        let a = jsd(&p, &q);
+        let b = jsd(&q, &p);
+        assert!((a - b).abs() < 1e-12);
+        assert!(a > 0.0 && a <= std::f64::consts::LN_2);
+    }
+
+    #[test]
+    fn normalises_count_vectors() {
+        let counts = [20.0, 30.0, 50.0];
+        let probs = [0.2, 0.3, 0.5];
+        assert!(jsd(&counts, &probs) < 1e-12);
+    }
+
+    #[test]
+    fn matrix_mean() {
+        let p = vec![vec![1.0, 0.0], vec![0.5, 0.5]];
+        let q = vec![vec![0.0, 1.0], vec![0.5, 0.5]];
+        let m = matrix_jsd(&p, &q);
+        assert!((m - std::f64::consts::LN_2 / 2.0).abs() < 1e-12);
+    }
+}

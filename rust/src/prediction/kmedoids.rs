@@ -1,0 +1,269 @@
+//! Customized k-medoids (§IV-B): roulette-wheel (k-means++-style)
+//! centroid initialisation + subcluster-level centroid updating.
+//!
+//! Distances are supplied as a closure over point indices, so the same
+//! code clusters by semantic SCS distance (Remoe) or by Euclidean
+//! distance between activation matrices (the VarED ablation). The
+//! VarPAM baseline (classic PAM with full swap search) lives here too.
+
+use crate::util::rng::Rng;
+
+/// Result of one clustering: `assignment[i]` = cluster of point i,
+/// `medoids[c]` = representative point of cluster c.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub medoids: Vec<usize>,
+    pub assignment: Vec<usize>,
+}
+
+impl Clustering {
+    pub fn clusters(&self, k: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); k];
+        for (i, &c) in self.assignment.iter().enumerate() {
+            out[c].push(i);
+        }
+        out
+    }
+
+    pub fn cost<D: Fn(usize, usize) -> f64>(&self, points: &[usize], dist: &D) -> f64 {
+        points
+            .iter()
+            .enumerate()
+            .map(|(slot, &p)| dist(p, points[self.local_medoid(slot)]))
+            .sum()
+    }
+
+    fn local_medoid(&self, slot: usize) -> usize {
+        // medoids are stored as *local slots* into the points array
+        self.medoids[self.assignment[slot]]
+    }
+}
+
+/// Roulette-wheel initialisation: first medoid uniform, then each next
+/// medoid drawn with probability ∝ distance to the nearest chosen one.
+fn roulette_init<D: Fn(usize, usize) -> f64>(
+    points: &[usize],
+    k: usize,
+    dist: &D,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n = points.len();
+    let mut medoids = vec![rng.below(n as u64) as usize];
+    let mut nearest: Vec<f64> =
+        (0..n).map(|i| dist(points[i], points[medoids[0]])).collect();
+    while medoids.len() < k {
+        let next = rng.categorical(&nearest);
+        medoids.push(next);
+        for i in 0..n {
+            nearest[i] = nearest[i].min(dist(points[i], points[next]));
+        }
+    }
+    medoids
+}
+
+/// The customized k-medoids: roulette init, then alternate
+/// (a) assign to nearest medoid, (b) update each cluster's medoid to
+/// the member minimising intra-cluster distance (subcluster-level
+/// centroid updating). O(iters · Σ|cluster|²) — cheap because the tree
+/// only clusters nodes larger than β.
+pub fn kmedoids<D: Fn(usize, usize) -> f64>(
+    points: &[usize],
+    k: usize,
+    dist: &D,
+    rng: &mut Rng,
+    max_iters: usize,
+) -> Clustering {
+    let n = points.len();
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let mut medoids = roulette_init(points, k, dist, rng);
+    let mut assignment = vec![0usize; n];
+    for _ in 0..max_iters {
+        // (a) assignment
+        for i in 0..n {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, &m) in medoids.iter().enumerate() {
+                let d = dist(points[i], points[m]);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            assignment[i] = best;
+        }
+        // (b) medoid update per subcluster
+        let mut changed = false;
+        for c in 0..k {
+            let members: Vec<usize> =
+                (0..n).filter(|&i| assignment[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut best = medoids[c];
+            let mut best_cost = f64::INFINITY;
+            for &cand in &members {
+                let cost: f64 =
+                    members.iter().map(|&m| dist(points[m], points[cand])).sum();
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = cand;
+                }
+            }
+            if best != medoids[c] {
+                medoids[c] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    Clustering { medoids, assignment }
+}
+
+/// Classic PAM (VarPAM baseline): BUILD greedily, then full SWAP
+/// search — O(k·(n−k)²) per iteration, the cost the paper contrasts
+/// with ("hours versus ≤0.5 s").
+pub fn pam<D: Fn(usize, usize) -> f64>(
+    points: &[usize],
+    k: usize,
+    dist: &D,
+    max_iters: usize,
+) -> Clustering {
+    let n = points.len();
+    assert!(k >= 1 && k <= n);
+    // BUILD: first medoid minimises total distance; next ones greedily.
+    let total_dist = |m: usize| -> f64 { (0..n).map(|i| dist(points[i], points[m])).sum() };
+    let mut medoids = vec![(0..n).min_by(|&a, &b| total_dist(a).partial_cmp(&total_dist(b)).unwrap()).unwrap()];
+    while medoids.len() < k {
+        let mut best = None;
+        let mut best_gain = f64::NEG_INFINITY;
+        for cand in 0..n {
+            if medoids.contains(&cand) {
+                continue;
+            }
+            let gain: f64 = (0..n)
+                .map(|i| {
+                    let cur = medoids
+                        .iter()
+                        .map(|&m| dist(points[i], points[m]))
+                        .fold(f64::INFINITY, f64::min);
+                    (cur - dist(points[i], points[cand])).max(0.0)
+                })
+                .sum();
+            if gain > best_gain {
+                best_gain = gain;
+                best = Some(cand);
+            }
+        }
+        medoids.push(best.unwrap());
+    }
+    // SWAP
+    for _ in 0..max_iters {
+        let mut improved = false;
+        let cost_of = |meds: &[usize]| -> f64 {
+            (0..n)
+                .map(|i| meds.iter().map(|&m| dist(points[i], points[m])).fold(f64::INFINITY, f64::min))
+                .sum()
+        };
+        let mut cur_cost = cost_of(&medoids);
+        'swap: for c in 0..k {
+            for cand in 0..n {
+                if medoids.contains(&cand) {
+                    continue;
+                }
+                let mut trial = medoids.clone();
+                trial[c] = cand;
+                let t_cost = cost_of(&trial);
+                if t_cost + 1e-12 < cur_cost {
+                    medoids = trial;
+                    cur_cost = t_cost;
+                    improved = true;
+                    break 'swap;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    let assignment = (0..n)
+        .map(|i| {
+            medoids
+                .iter()
+                .enumerate()
+                .min_by(|(_, &a), (_, &b)| {
+                    dist(points[i], points[a]).partial_cmp(&dist(points[i], points[b])).unwrap()
+                })
+                .unwrap()
+                .0
+        })
+        .collect();
+    Clustering { medoids, assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated 1-D blobs.
+    fn blob_dist() -> (Vec<usize>, impl Fn(usize, usize) -> f64) {
+        let coords: Vec<f64> = vec![0.0, 0.1, 0.2, 0.15, 10.0, 10.1, 10.2, 9.9];
+        let points: Vec<usize> = (0..coords.len()).collect();
+        (points, move |a: usize, b: usize| (coords[a] - coords[b]).abs())
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let (points, dist) = blob_dist();
+        let mut rng = Rng::new(1);
+        let c = kmedoids(&points, 2, &dist, &mut rng, 20);
+        // all of 0..4 in one cluster, 4..8 in the other
+        let first = c.assignment[0];
+        assert!(c.assignment[..4].iter().all(|&a| a == first));
+        let second = c.assignment[4];
+        assert_ne!(first, second);
+        assert!(c.assignment[4..].iter().all(|&a| a == second));
+    }
+
+    #[test]
+    fn pam_matches_on_easy_instance() {
+        let (points, dist) = blob_dist();
+        let c = pam(&points, 2, &dist, 50);
+        let first = c.assignment[0];
+        assert!(c.assignment[..4].iter().all(|&a| a == first));
+        assert!(c.assignment[4..].iter().all(|&a| a != first));
+    }
+
+    #[test]
+    fn medoids_are_members_and_distinct() {
+        let (points, dist) = blob_dist();
+        let mut rng = Rng::new(7);
+        let c = kmedoids(&points, 3, &dist, &mut rng, 20);
+        for &m in &c.medoids {
+            assert!(m < points.len());
+        }
+        // every point assigned to a valid cluster
+        assert!(c.assignment.iter().all(|&a| a < 3));
+    }
+
+    #[test]
+    fn k_equals_n_gives_singletons() {
+        let (points, dist) = blob_dist();
+        let mut rng = Rng::new(3);
+        let c = kmedoids(&points, points.len(), &dist, &mut rng, 10);
+        let mut meds = c.medoids.clone();
+        meds.sort_unstable();
+        meds.dedup();
+        assert_eq!(meds.len(), points.len());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (points, dist) = blob_dist();
+        let a = kmedoids(&points, 2, &dist, &mut Rng::new(5), 20);
+        let b = kmedoids(&points, 2, &dist, &mut Rng::new(5), 20);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.medoids, b.medoids);
+    }
+}

@@ -1,0 +1,20 @@
+//! Expert-activation prediction (§IV-B): Soft Cosine Similarity,
+//! customized k-medoids, the multi-fork clustering tree with SPS
+//! search, the softmax-weighted distribution predictor, the Fig. 8
+//! baselines, and the JSD metric.
+
+pub mod baselines;
+pub mod jsd;
+pub mod kmedoids;
+pub mod predictor;
+pub mod scs;
+pub mod tree;
+
+pub use baselines::{
+    BfPredictor, DopPredictor, EfPredictor, FatePredictor, VarEdPredictor, VarPamPredictor,
+};
+pub use jsd::{jsd, matrix_jsd};
+pub use kmedoids::{kmedoids, pam, Clustering};
+pub use predictor::{ActivationPredictor, History, SpsPredictor};
+pub use scs::{scs, scs_distance, softmax_weights, Signature};
+pub use tree::{ClusterTree, Splitter, TreeParams};

@@ -1,0 +1,199 @@
+//! Activation-distribution prediction: the SPS predictor (§IV-B) and
+//! the shared history container it learns from.
+
+use std::time::Instant;
+
+use crate::util::rng::Rng;
+
+use super::scs::{scs, scs_distance, softmax_weights, Signature};
+use super::tree::{ClusterTree, TreeParams};
+
+/// Historical prompts: signatures + ground-truth prefill activation
+/// distributions S̃ (rows sum to 1).
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub signatures: Vec<Signature>,
+    pub distributions: Vec<Vec<Vec<f64>>>,
+}
+
+impl History {
+    pub fn len(&self) -> usize {
+        self.signatures.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.signatures.is_empty()
+    }
+
+    pub fn push(&mut self, sig: Signature, dist: Vec<Vec<f64>>) {
+        self.signatures.push(sig);
+        self.distributions.push(dist);
+    }
+
+    /// Element-wise mean of all distribution matrices.
+    pub fn mean_distribution(&self) -> Vec<Vec<f64>> {
+        assert!(!self.is_empty());
+        let layers = self.distributions[0].len();
+        let experts = self.distributions[0][0].len();
+        let mut out = vec![vec![0.0; experts]; layers];
+        for d in &self.distributions {
+            for (o, row) in out.iter_mut().zip(d) {
+                for (x, &v) in o.iter_mut().zip(row) {
+                    *x += v;
+                }
+            }
+        }
+        let n = self.len() as f64;
+        for row in &mut out {
+            for x in row.iter_mut() {
+                *x /= n;
+            }
+        }
+        out
+    }
+}
+
+/// Common interface of all Fig. 8 predictors.
+pub trait ActivationPredictor {
+    fn name(&self) -> &'static str;
+    /// Predicted S̃ for a new prompt given its semantic signature.
+    fn predict(&self, query: &Signature) -> Vec<Vec<f64>>;
+}
+
+/// Weighted-sum prediction from a retrieved candidate set: softmax of
+/// SCS scores over the top-α historical prompts (§IV-B).
+pub fn weighted_prediction(
+    history: &History,
+    candidates: &[usize],
+    query: &Signature,
+) -> Vec<Vec<f64>> {
+    assert!(!candidates.is_empty());
+    let sims: Vec<f64> =
+        candidates.iter().map(|&i| scs(query, &history.signatures[i])).collect();
+    let weights = softmax_weights(&sims);
+    let layers = history.distributions[0].len();
+    let experts = history.distributions[0][0].len();
+    let mut out = vec![vec![0.0; experts]; layers];
+    for (&idx, &w) in candidates.iter().zip(&weights) {
+        for (o, row) in out.iter_mut().zip(&history.distributions[idx]) {
+            for (x, &v) in o.iter_mut().zip(row) {
+                *x += w * v;
+            }
+        }
+    }
+    out
+}
+
+/// The Remoe predictor: clustering tree over SCS distance + SPS.
+pub struct SpsPredictor {
+    pub history: History,
+    pub tree: ClusterTree,
+    pub alpha: usize,
+    /// Tree construction time (the §V-B "≤ 0.5 s vs hours" claim).
+    pub build_time_s: f64,
+}
+
+impl SpsPredictor {
+    pub fn build(history: History, alpha: usize, params: TreeParams, rng: &mut Rng) -> Self {
+        let t0 = Instant::now();
+        let sigs = &history.signatures;
+        let dist = |a: usize, b: usize| scs_distance(&sigs[a], &sigs[b]);
+        let tree = ClusterTree::build(history.len(), &dist, params, rng);
+        let build_time_s = t0.elapsed().as_secs_f64();
+        SpsPredictor { history, tree, alpha, build_time_s }
+    }
+
+    /// Top-α similar historical prompt ids for a query (Alg. 1).
+    pub fn search(&self, query: &Signature) -> Vec<usize> {
+        let q_dist = |i: usize| scs_distance(query, &self.history.signatures[i]);
+        self.tree.search(&q_dist, self.alpha)
+    }
+}
+
+impl ActivationPredictor for SpsPredictor {
+    fn name(&self) -> &'static str {
+        "Remoe(SPS)"
+    }
+
+    fn predict(&self, query: &Signature) -> Vec<Vec<f64>> {
+        let candidates = self.search(query);
+        weighted_prediction(&self.history, &candidates, query)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    /// Synthetic history: two semantic groups with distinct activation
+    /// patterns.
+    pub(crate) fn two_group_history(wte: &HostTensor, per_group: usize) -> History {
+        let mut h = History::default();
+        for i in 0..per_group {
+            // group A uses tokens 0..8, prefers experts 0/1
+            let ids: Vec<i32> = (0..8).map(|t| (t + (i % 3) as i32) % 8).collect();
+            h.push(
+                Signature::from_tokens(&ids, wte),
+                vec![vec![0.45, 0.45, 0.05, 0.05]; 2],
+            );
+        }
+        for i in 0..per_group {
+            // group B uses tokens 40..48, prefers experts 2/3
+            let ids: Vec<i32> = (0..8).map(|t| 40 + (t + (i % 3) as i32) % 8).collect();
+            h.push(
+                Signature::from_tokens(&ids, wte),
+                vec![vec![0.05, 0.05, 0.45, 0.45]; 2],
+            );
+        }
+        h
+    }
+
+    fn wte() -> HostTensor {
+        let mut rng = Rng::new(77);
+        HostTensor::new(vec![64, 16], (0..64 * 16).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn sps_retrieves_same_group_and_predicts_its_pattern() {
+        let wte = wte();
+        let history = two_group_history(&wte, 30);
+        let params = TreeParams { beta: 20, fanout: 2, ..TreeParams::default() };
+        let p = SpsPredictor::build(history, 5, params, &mut Rng::new(1));
+
+        let query_a = Signature::from_tokens(&[0, 1, 2, 3, 4, 5, 6, 7], &wte);
+        let found = p.search(&query_a);
+        assert_eq!(found.len(), 5);
+        assert!(found.iter().all(|&i| i < 30), "retrieved from wrong group: {found:?}");
+
+        let pred = p.predict(&query_a);
+        assert!(pred[0][0] > 0.3 && pred[0][2] < 0.2);
+        // prediction rows are distributions
+        for row in &pred {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mean_distribution_normalised() {
+        let wte = wte();
+        let h = two_group_history(&wte, 10);
+        let m = h.mean_distribution();
+        for row in &m {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // balanced groups → symmetric mean
+        assert!((m[0][0] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_prediction_favours_closest_candidate() {
+        let wte = wte();
+        let h = two_group_history(&wte, 5);
+        let query = Signature::from_tokens(&[0, 1, 2, 3], &wte);
+        // candidates: one from each group — the semantically closer
+        // group-A sample must dominate the softmax
+        let pred = weighted_prediction(&h, &[0, 5], &query);
+        assert!(pred[0][0] > pred[0][2]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Soft Cosine Similarity between prompts (eq. 11).
+//!
+//! The paper forms the Gram matrix C of all (normalised) token
+//! embeddings of both prompts and evaluates V₁ᵀCV₂ with binary
+//! ownership vectors. Because C = M·Mᵀ for the stacked normalised
+//! embedding matrix M, the quadratic forms collapse:
+//!
+//!   V₁ᵀCV₂ = (Σ_{i∈ζ₁} ê_i) · (Σ_{j∈ζ₂} ê_j) = s₁·s₂
+//!   V₁ᵀCV₁ = ‖s₁‖²
+//!
+//! so each prompt reduces to a **signature vector** s (the sum of its
+//! normalised token embeddings) and SCS(ζ₁,ζ₂) = s₁·s₂ / (‖s₁‖‖s₂‖+σ).
+//! This turns every pairwise similarity into an O(H) dot product —
+//! the optimisation that makes tree construction ~seconds where
+//! VarPAM's is hours (§V-B). (The paper's eq. 11 nests one sqrt
+//! asymmetrically; we use the standard symmetric normalisation and
+//! note the deviation — it only rescales similarities monotonically.)
+
+use crate::runtime::HostTensor;
+
+/// σ — the division-by-zero guard of eq. 11.
+pub const SIGMA: f64 = 1e-9;
+
+/// A prompt's semantic signature: Σ of its L2-normalised token
+/// embeddings, plus the norm cached for O(1) SCS.
+#[derive(Debug, Clone)]
+pub struct Signature {
+    pub v: Vec<f64>,
+    pub norm: f64,
+}
+
+impl Signature {
+    /// Build from token ids and the model's embedding table [V, H].
+    pub fn from_tokens(ids: &[i32], wte: &HostTensor) -> Signature {
+        let h = wte.shape[1];
+        let mut v = vec![0.0f64; h];
+        for &id in ids {
+            let row = wte.row(id as usize);
+            let norm: f64 = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            if norm < 1e-12 {
+                continue;
+            }
+            for (acc, &x) in v.iter_mut().zip(row) {
+                *acc += x as f64 / norm;
+            }
+        }
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        Signature { v, norm }
+    }
+
+    pub fn dot(&self, other: &Signature) -> f64 {
+        self.v.iter().zip(&other.v).map(|(a, b)| a * b).sum()
+    }
+}
+
+/// SCS(ζ₁, ζ₂) ∈ [-1, 1] (≈ cosine of the signature vectors).
+pub fn scs(a: &Signature, b: &Signature) -> f64 {
+    a.dot(b) / (a.norm * b.norm + SIGMA)
+}
+
+/// Distance used by the clustering tree: 1 − SCS ∈ [0, 2].
+pub fn scs_distance(a: &Signature, b: &Signature) -> f64 {
+    1.0 - scs(a, b)
+}
+
+/// Softmax over similarity scores → prediction weights (§IV-B).
+pub fn softmax_weights(sims: &[f64]) -> Vec<f64> {
+    let m = sims.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = sims.iter().map(|&s| (s - m).exp()).collect();
+    let total: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn table(seed: u64) -> HostTensor {
+        let mut rng = Rng::new(seed);
+        HostTensor::new(vec![64, 16], (0..64 * 16).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn identical_prompts_scs_one() {
+        let wte = table(1);
+        let ids: Vec<i32> = (0..20).collect();
+        let a = Signature::from_tokens(&ids, &wte);
+        let b = Signature::from_tokens(&ids, &wte);
+        assert!((scs(&a, &b) - 1.0).abs() < 1e-9);
+        assert!(scs_distance(&a, &b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetry_and_range() {
+        let wte = table(2);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let n1 = rng.range_u(1, 30);
+            let n2 = rng.range_u(1, 30);
+            let ids1: Vec<i32> = (0..n1).map(|_| rng.below(64) as i32).collect();
+            let ids2: Vec<i32> = (0..n2).map(|_| rng.below(64) as i32).collect();
+            let a = Signature::from_tokens(&ids1, &wte);
+            let b = Signature::from_tokens(&ids2, &wte);
+            let ab = scs(&a, &b);
+            let ba = scs(&b, &a);
+            assert!((ab - ba).abs() < 1e-12);
+            assert!((-1.0001..=1.0001).contains(&ab));
+        }
+    }
+
+    #[test]
+    fn token_order_invariant() {
+        // Signatures are bags of tokens — order must not matter.
+        let wte = table(3);
+        let a = Signature::from_tokens(&[1, 2, 3, 4], &wte);
+        let b = Signature::from_tokens(&[4, 3, 2, 1], &wte);
+        assert!((scs(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlapping_prompts_more_similar_than_disjoint() {
+        let wte = table(4);
+        let base: Vec<i32> = (0..10).collect();
+        let overlap: Vec<i32> = (5..15).collect();
+        let disjoint: Vec<i32> = (40..50).collect();
+        let s0 = Signature::from_tokens(&base, &wte);
+        let s1 = Signature::from_tokens(&overlap, &wte);
+        let s2 = Signature::from_tokens(&disjoint, &wte);
+        assert!(scs(&s0, &s1) > scs(&s0, &s2));
+    }
+
+    #[test]
+    fn softmax_weights_normalised_and_ordered() {
+        let w = softmax_weights(&[0.9, 0.5, 0.1]);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > w[1] && w[1] > w[2]);
+    }
+}

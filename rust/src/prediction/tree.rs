@@ -1,0 +1,307 @@
+//! Multi-fork clustering tree + Similar Prompts Searching (Alg. 1).
+//!
+//! Offline: any node with more than β prompts is recursively
+//! partitioned by the customized k-medoids. Online: descend to a leaf
+//! by picking the semantically-closest subcluster medoid; if the leaf
+//! holds fewer than α prompts, siblings supplement; finally the
+//! collected candidates are brute-force ranked (β > α makes this local
+//! search meaningful).
+
+use crate::util::rng::Rng;
+
+use super::kmedoids::{kmedoids, pam};
+
+/// Which clustering algorithm splits internal nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Splitter {
+    /// The paper's customized k-medoids (roulette init + subcluster
+    /// centroid updates).
+    KMedoids,
+    /// Classic PAM with full SWAP search — the VarPAM baseline.
+    Pam,
+}
+
+#[derive(Debug, Clone)]
+pub enum NodeKind {
+    Internal { children: Vec<usize> },
+    Leaf { members: Vec<usize> },
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Representative prompt (global point id).
+    pub medoid: usize,
+    pub parent: Option<usize>,
+    pub kind: NodeKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    /// β — split threshold (paper: 150).
+    pub beta: usize,
+    /// Branching factor of each split.
+    pub fanout: usize,
+    pub max_iters: usize,
+    pub splitter: Splitter,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { beta: 150, fanout: 4, max_iters: 15, splitter: Splitter::KMedoids }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterTree {
+    pub nodes: Vec<Node>,
+    pub root: usize,
+    pub params: TreeParams,
+}
+
+impl ClusterTree {
+    /// Build over points `0..n` with the given pairwise distance.
+    pub fn build<D: Fn(usize, usize) -> f64>(
+        n: usize,
+        dist: &D,
+        params: TreeParams,
+        rng: &mut Rng,
+    ) -> ClusterTree {
+        assert!(n > 0);
+        let mut tree = ClusterTree { nodes: Vec::new(), root: 0, params };
+        let all: Vec<usize> = (0..n).collect();
+        let root = tree.build_node(all, None, dist, rng);
+        tree.root = root;
+        tree
+    }
+
+    fn build_node<D: Fn(usize, usize) -> f64>(
+        &mut self,
+        members: Vec<usize>,
+        parent: Option<usize>,
+        dist: &D,
+        rng: &mut Rng,
+    ) -> usize {
+        let medoid = members[0];
+        let id = self.nodes.len();
+        self.nodes.push(Node { medoid, parent, kind: NodeKind::Leaf { members: members.clone() } });
+
+        if members.len() <= self.params.beta {
+            self.set_leaf_medoid(id, &members, dist);
+            return id;
+        }
+
+        let k = self.params.fanout.min(members.len());
+        let clustering = match self.params.splitter {
+            Splitter::KMedoids => kmedoids(&members, k, dist, rng, self.params.max_iters),
+            Splitter::Pam => pam(&members, k, dist, self.params.max_iters),
+        };
+        let groups = clustering.clusters(k);
+        let nonempty: Vec<&Vec<usize>> = groups.iter().filter(|g| !g.is_empty()).collect();
+        // Degenerate split (all points identical): keep as leaf.
+        if nonempty.len() < 2 || nonempty.iter().any(|g| g.len() == members.len()) {
+            self.set_leaf_medoid(id, &members, dist);
+            return id;
+        }
+
+        let mut children = Vec::with_capacity(nonempty.len());
+        for (c, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let child_members: Vec<usize> = group.iter().map(|&slot| members[slot]).collect();
+            let child = self.build_node(child_members, Some(id), dist, rng);
+            // Descent representative: the clustering's own medoid for
+            // this subcluster (leaf children recompute the identical
+            // intra-group medoid; internal children would otherwise
+            // inherit an arbitrary grandchild's).
+            if matches!(self.nodes[child].kind, NodeKind::Internal { .. }) {
+                self.nodes[child].medoid = members[clustering.medoids[c]];
+            }
+            children.push(child);
+        }
+        self.nodes[id].medoid = self.nodes[children[0]].medoid;
+        self.nodes[id].kind = NodeKind::Internal { children };
+        id
+    }
+
+    fn set_leaf_medoid<D: Fn(usize, usize) -> f64>(&mut self, id: usize, members: &[usize], dist: &D) {
+        // leaf medoid = member minimising total intra-leaf distance
+        let mut best = members[0];
+        let mut best_cost = f64::INFINITY;
+        for &cand in members {
+            let cost: f64 = members.iter().map(|&m| dist(m, cand)).sum();
+            if cost < best_cost {
+                best_cost = cost;
+                best = cand;
+            }
+        }
+        self.nodes[id].medoid = best;
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.kind, NodeKind::Leaf { .. })).count()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn go(tree: &ClusterTree, id: usize) -> usize {
+            match &tree.nodes[id].kind {
+                NodeKind::Leaf { .. } => 1,
+                NodeKind::Internal { children } => {
+                    1 + children.iter().map(|&c| go(tree, c)).max().unwrap_or(0)
+                }
+            }
+        }
+        go(self, self.root)
+    }
+
+    /// Every point appears in exactly one leaf (tree invariant).
+    pub fn all_members(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            if let NodeKind::Leaf { members } = &n.kind {
+                out.extend_from_slice(members);
+            }
+        }
+        out
+    }
+
+    /// SPS (Alg. 1): `q_dist(point)` is the query's distance to a
+    /// historical prompt. Returns up to α member ids ranked by
+    /// ascending distance (descending SCS).
+    pub fn search<Q: Fn(usize) -> f64>(&self, q_dist: &Q, alpha: usize) -> Vec<usize> {
+        // descend (Alg. 1 lines 2–5)
+        let mut cur = self.root;
+        loop {
+            match &self.nodes[cur].kind {
+                NodeKind::Leaf { .. } => break,
+                NodeKind::Internal { children } => {
+                    cur = *children
+                        .iter()
+                        .min_by(|&&a, &&b| {
+                            q_dist(self.nodes[a].medoid)
+                                .partial_cmp(&q_dist(self.nodes[b].medoid))
+                                .unwrap()
+                        })
+                        .unwrap();
+                }
+            }
+        }
+        let mut candidates: Vec<usize> = match &self.nodes[cur].kind {
+            NodeKind::Leaf { members } => members.clone(),
+            _ => unreachable!(),
+        };
+        // sibling supplement (lines 6–9): walk up until enough
+        let mut node = cur;
+        while candidates.len() < alpha {
+            let Some(parent) = self.nodes[node].parent else { break };
+            if let NodeKind::Internal { children } = &self.nodes[parent].kind {
+                for &sib in children {
+                    if sib == node {
+                        continue;
+                    }
+                    self.collect_members(sib, &mut candidates);
+                }
+            }
+            node = parent;
+        }
+        candidates.sort_by(|&a, &b| q_dist(a).partial_cmp(&q_dist(b)).unwrap());
+        candidates.dedup();
+        candidates.truncate(alpha);
+        candidates
+    }
+
+    fn collect_members(&self, id: usize, out: &mut Vec<usize>) {
+        match &self.nodes[id].kind {
+            NodeKind::Leaf { members } => out.extend_from_slice(members),
+            NodeKind::Internal { children } => {
+                for &c in children {
+                    self.collect_members(c, out);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Clustered 1-D points: c blobs of m points at 100·blob + j.
+    fn blobs(c: usize, m: usize) -> (usize, impl Fn(usize, usize) -> f64 + Clone) {
+        let n = c * m;
+        let coord = move |i: usize| (i / m) as f64 * 100.0 + (i % m) as f64;
+        (n, move |a: usize, b: usize| (coord(a) - coord(b)).abs())
+    }
+
+    #[test]
+    fn tree_partitions_all_points_exactly_once() {
+        let (n, dist) = blobs(6, 40);
+        let params = TreeParams { beta: 50, fanout: 3, max_iters: 10, ..TreeParams::default() };
+        let tree = ClusterTree::build(n, &dist, params, &mut Rng::new(1));
+        let mut members = tree.all_members();
+        members.sort_unstable();
+        assert_eq!(members, (0..n).collect::<Vec<_>>());
+        assert!(tree.leaf_count() >= 4);
+        assert!(tree.depth() >= 2);
+    }
+
+    #[test]
+    fn small_input_stays_single_leaf() {
+        let (_, dist) = blobs(1, 10);
+        let tree = ClusterTree::build(10, &dist, TreeParams::default(), &mut Rng::new(2));
+        assert_eq!(tree.leaf_count(), 1);
+        assert_eq!(tree.depth(), 1);
+    }
+
+    #[test]
+    fn identical_points_dont_recurse_forever() {
+        let dist = |_a: usize, _b: usize| 0.0;
+        let params = TreeParams { beta: 4, fanout: 2, max_iters: 5, ..TreeParams::default() };
+        let tree = ClusterTree::build(100, &dist, params, &mut Rng::new(3));
+        assert_eq!(tree.all_members().len(), 100);
+    }
+
+    #[test]
+    fn search_returns_alpha_nearest() {
+        let (n, dist) = blobs(5, 60);
+        let params = TreeParams { beta: 80, fanout: 5, max_iters: 10, ..TreeParams::default() };
+        let tree = ClusterTree::build(n, &dist, params, &mut Rng::new(4));
+        // query sits in blob 2 (points 120..180, coords 200..259)
+        let coord = |i: usize| (i / 60) as f64 * 100.0 + (i % 60) as f64;
+        let q = 225.0;
+        let q_dist = |i: usize| (coord(i) - q).abs();
+        let got = tree.search(&q_dist, 15);
+        assert_eq!(got.len(), 15);
+        // all results from blob 2, and sorted by distance
+        for &i in &got {
+            assert!((120..180).contains(&i), "point {i} outside the query blob");
+        }
+        for w in got.windows(2) {
+            assert!(q_dist(w[0]) <= q_dist(w[1]) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn sibling_supplement_when_leaf_small() {
+        let (n, dist) = blobs(4, 10); // 40 points, leaves of ~10
+        let params = TreeParams { beta: 12, fanout: 4, max_iters: 10, ..TreeParams::default() };
+        let tree = ClusterTree::build(n, &dist, params, &mut Rng::new(5));
+        let coord = |i: usize| (i / 10) as f64 * 100.0 + (i % 10) as f64;
+        let q_dist = |i: usize| (coord(i) - 105.0).abs();
+        // α=25 exceeds any leaf; siblings must fill in
+        let got = tree.search(&q_dist, 25);
+        assert_eq!(got.len(), 25);
+        // nearest blob (1) fully included
+        for i in 10..20 {
+            assert!(got.contains(&i));
+        }
+    }
+
+    #[test]
+    fn search_never_exceeds_population() {
+        let (_, dist) = blobs(1, 8);
+        let tree = ClusterTree::build(8, &dist, TreeParams::default(), &mut Rng::new(6));
+        let got = tree.search(&|i: usize| i as f64, 50);
+        assert_eq!(got.len(), 8);
+    }
+}

@@ -1,0 +1,289 @@
+//! Manifest-driven artifact registry.
+//!
+//! `artifacts/manifest.json` (written by `python -m compile.aot`)
+//! describes every lowered entry point: model, kind (embed / attn /
+//! gate / lm_head / expert / shared), bucket, and input shapes. The
+//! registry compiles artifacts lazily on first use and caches the
+//! executables; bucket selection rounds a requested size up to the
+//! smallest exported bucket.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::client::{Executable, Runtime};
+
+/// Hyper-parameters of one runtime model, read from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelHyper {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub experts: usize,
+    pub topk: usize,
+    pub ffn: usize,
+    pub shared_experts: usize,
+    pub shared_ffn: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub act: String,
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub kind: ArtifactKind,
+    pub bucket: usize,
+    /// Input shapes (for arity/shape validation in tests).
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Embed,
+    Attn,
+    Gate,
+    LmHead,
+    Expert,
+    Shared,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "embed" => ArtifactKind::Embed,
+            "attn" => ArtifactKind::Attn,
+            "gate" => ArtifactKind::Gate,
+            "lm_head" => ArtifactKind::LmHead,
+            "expert" => ArtifactKind::Expert,
+            "shared" => ArtifactKind::Shared,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seq_buckets: Vec<usize>,
+    pub expert_buckets: Vec<usize>,
+    pub models: BTreeMap<String, ModelHyper>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = PathBuf::from(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let buckets = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest missing {key}"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+                .collect()
+        };
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").as_obj().ok_or_else(|| anyhow!("missing models"))? {
+            let u = |k: &str| -> Result<usize> {
+                m.get(k).as_usize().ok_or_else(|| anyhow!("model {name} missing {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelHyper {
+                    name: name.clone(),
+                    hidden: u("hidden")?,
+                    layers: u("layers")?,
+                    experts: u("experts")?,
+                    topk: u("topk")?,
+                    ffn: u("ffn")?,
+                    shared_experts: u("shared_experts")?,
+                    shared_ffn: u("shared_ffn")?,
+                    heads: u("heads")?,
+                    vocab: u("vocab")?,
+                    max_seq: u("max_seq")?,
+                    act: m.get("act").as_str().unwrap_or("gelu").to_string(),
+                },
+            );
+        }
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").as_arr().ok_or_else(|| anyhow!("missing artifacts"))? {
+            let input_shapes = a
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| {
+                    i.get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect()
+                })
+                .collect();
+            artifacts.push(ArtifactMeta {
+                name: a.get("name").as_str().unwrap_or_default().to_string(),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+                model: a.get("model").as_str().unwrap_or_default().to_string(),
+                kind: ArtifactKind::parse(a.get("kind").as_str().unwrap_or_default())?,
+                bucket: a.get("bucket").as_usize().unwrap_or(0),
+                input_shapes,
+            });
+        }
+        Ok(Manifest {
+            seq_buckets: buckets("seq_buckets")?,
+            expert_buckets: buckets("expert_buckets")?,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelHyper> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model {name}"))
+    }
+
+    /// Smallest exported bucket ≥ n.
+    pub fn seq_bucket_for(&self, n: usize) -> Result<usize> {
+        bucket_for(&self.seq_buckets, n)
+    }
+
+    pub fn expert_bucket_for(&self, n: usize) -> Result<usize> {
+        bucket_for(&self.expert_buckets, n)
+    }
+}
+
+fn bucket_for(buckets: &[usize], n: usize) -> Result<usize> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .ok_or_else(|| anyhow!("no bucket ≥ {n} (have {buckets:?})"))
+}
+
+/// Lazy-compiling artifact store (single-threaded; the engine owns it).
+pub struct ArtifactStore {
+    pub runtime: Rc<Runtime>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<(String, ArtifactKind, usize), Rc<Executable>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: &str) -> Result<ArtifactStore> {
+        let runtime = Rc::new(Runtime::cpu()?);
+        let manifest = Manifest::load(dir)?;
+        Ok(ArtifactStore {
+            runtime,
+            manifest,
+            dir: PathBuf::from(dir),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn with_runtime(runtime: Rc<Runtime>, dir: &str) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(dir)?;
+        Ok(ArtifactStore {
+            runtime,
+            manifest,
+            dir: PathBuf::from(dir),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Fetch (compiling on first use) the artifact for (model, kind,
+    /// bucket). `bucket` must be an exact exported bucket.
+    pub fn get(&self, model: &str, kind: ArtifactKind, bucket: usize) -> Result<Rc<Executable>> {
+        let key = (model.to_string(), kind, bucket);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.model == model && a.kind == kind && a.bucket == bucket)
+            .ok_or_else(|| anyhow!("no artifact: model={model} kind={kind:?} bucket={bucket}"))?;
+        let exe = Rc::new(self.runtime.compile_hlo_file(&self.dir.join(&meta.file))?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of a model (cold-start measurement
+    /// and to keep latency jitter out of the serving loop).
+    pub fn preload_model(&self, model: &str) -> Result<usize> {
+        let metas: Vec<_> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| (a.kind, a.bucket))
+            .collect();
+        for (kind, bucket) in &metas {
+            self.get(model, *kind, *bucket)?;
+        }
+        Ok(metas.len())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "x", "seq_buckets": [1, 128], "expert_buckets": [1, 2, 4],
+      "models": {"m": {"hidden": 128, "layers": 4, "experts": 8, "topk": 2,
+                        "ffn": 256, "shared_experts": 0, "shared_ffn": 0,
+                        "heads": 4, "vocab": 256, "max_seq": 192, "act": "gelu"}},
+      "artifacts": [
+        {"name": "m/embed_s1", "file": "m__embed_s1.hlo.txt", "model": "m",
+         "kind": "embed", "bucket": 1,
+         "inputs": [{"shape": [1], "dtype": "int32"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.seq_buckets, vec![1, 128]);
+        let hyper = m.model("m").unwrap();
+        assert_eq!(hyper.experts, 8);
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::Embed);
+        assert_eq!(m.artifacts[0].input_shapes, vec![vec![1]]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.expert_bucket_for(1).unwrap(), 1);
+        assert_eq!(m.expert_bucket_for(3).unwrap(), 4);
+        assert!(m.expert_bucket_for(5).is_err());
+        assert_eq!(m.seq_bucket_for(100).unwrap(), 128);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute
+//! from the request path.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: artifacts are HLO
+//! *text* (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids). Every artifact is lowered
+//! with `return_tuple=True`, so outputs always arrive as one tuple.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::tensor::Arg;
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        log::debug!("compiled {path:?} in {:?}", t0.elapsed());
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Stage host data into a device-resident buffer (used to keep
+    /// weights on-device across calls on the optimized path).
+    ///
+    /// Uses `BufferFromHostBuffer` with `kImmutableOnlyDuringCall`
+    /// semantics — the runtime copies synchronously during the call,
+    /// so the host slice may be freed immediately afterwards. (Do NOT
+    /// switch this to `BufferFromHostLiteral`: that transfer is
+    /// asynchronous and reads the literal after the call returns.)
+    pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn stage_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host-side args; returns the decomposed output tuple
+    /// as literals.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        let literals: Vec<xla::Literal> = args.iter().map(Arg::to_literal).collect();
+        self.run_literals(&literals)
+    }
+
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute with pre-staged device buffers (zero host→device copies
+    /// for the buffers that are reused across calls).
+    pub fn run_buffers<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute with buffers, returning the raw output buffers without a
+    /// device→host copy (for chaining into the next call).
+    pub fn run_buffers_raw<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute_b(args)?)
+    }
+}

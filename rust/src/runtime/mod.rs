@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! on the request path (python is never invoked at runtime).
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::{ArtifactKind, ArtifactStore, Manifest, ModelHyper};
+pub use client::{Executable, Runtime};
+pub use tensor::{Arg, HostTensor, HostTensorI32};

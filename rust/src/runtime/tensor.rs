@@ -1,0 +1,187 @@
+//! Host-side tensors and conversions to/from PJRT literals.
+//!
+//! The engine keeps all weights and activations as row-major `f32`
+//! `HostTensor`s; conversion into `xla::Literal` happens at the
+//! execution boundary (and, on the optimized path, weights are staged
+//! once into device-resident `PjRtBuffer`s — see `artifact.rs`).
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Size in bytes at a given per-element width (cost accounting).
+    pub fn bytes(&self, elem_bytes: usize) -> usize {
+        self.numel() * elem_bytes
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather rows into a new [idx.len(), W] tensor (expert dispatch).
+    pub fn gather_rows(&self, idx: &[usize]) -> HostTensor {
+        assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        let mut data = Vec::with_capacity(idx.len() * w);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        HostTensor::new(vec![idx.len(), w], data)
+    }
+
+    /// Pad the leading dimension up to `n` rows with zeros.
+    pub fn pad_rows_to(&self, n: usize) -> HostTensor {
+        assert_eq!(self.shape.len(), 2);
+        assert!(n >= self.shape[0]);
+        let w = self.shape[1];
+        let mut data = self.data.clone();
+        data.resize(n * w, 0.0);
+        HostTensor::new(vec![n, w], data)
+    }
+
+    pub fn to_literal(&self) -> xla::Literal {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // () scalar — reshape to rank-0.
+            lit.reshape(&[]).expect("scalar reshape")
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).expect("reshape")
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            other => bail!("expected f32 literal, got {other:?}"),
+        };
+        Ok(HostTensor::new(dims, data))
+    }
+}
+
+/// Row-major i32 tensor (token ids, routing indices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl HostTensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensorI32 { shape, data }
+    }
+
+    pub fn scalar(x: i32) -> Self {
+        HostTensorI32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn to_literal(&self) -> xla::Literal {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            lit.reshape(&[]).expect("scalar reshape")
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).expect("reshape")
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensorI32> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<i32>()?;
+        Ok(HostTensorI32::new(dims, data))
+    }
+}
+
+/// An argument to an artifact execution.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32(HostTensor),
+    I32(HostTensorI32),
+}
+
+impl Arg {
+    pub fn to_literal(&self) -> xla::Literal {
+        match self {
+            Arg::F32(t) => t.to_literal(),
+            Arg::I32(t) => t.to_literal(),
+        }
+    }
+}
+
+impl From<HostTensor> for Arg {
+    fn from(t: HostTensor) -> Self {
+        Arg::F32(t)
+    }
+}
+
+impl From<HostTensorI32> for Arg {
+    fn from(t: HostTensorI32) -> Self {
+        Arg::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_and_pad() {
+        let t = HostTensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+        let p = g.pad_rows_to(4);
+        assert_eq!(p.shape, vec![4, 2]);
+        assert_eq!(&p.data[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn row_access() {
+        let mut t = HostTensor::zeros(vec![2, 3]);
+        t.row_mut(1).copy_from_slice(&[7., 8., 9.]);
+        assert_eq!(t.row(1), &[7., 8., 9.]);
+        assert_eq!(t.row(0), &[0., 0., 0.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 2], vec![1.0]);
+    }
+}

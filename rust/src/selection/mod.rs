@@ -1,0 +1,98 @@
+//! Remote-experts selection (§IV-D): utility-ranked offloading.
+//!
+//! Given the predicted activation matrix S̃ and the MMP ratio b, each
+//! expert's utility is its expected token demand
+//! `u_{l,k} = E[N^pre_{l,k}] + E[N^dec_{l,k}]`; the ⌊b·K⌋ lowest-utility
+//! experts of every layer become remote.
+
+/// Per-layer utility scores.
+pub fn utility_scores(
+    dist: &[Vec<f64>],
+    n_in: usize,
+    n_out: usize,
+    topk: usize,
+) -> Vec<Vec<f64>> {
+    dist.iter()
+        .map(|row| {
+            row.iter()
+                .map(|&s| {
+                    let e_pre = n_in as f64 * topk as f64 * s;
+                    let e_dec = n_out as f64 * topk as f64 * s;
+                    e_pre + e_dec
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The remote flag matrix x_{l,k}: the `remote_per_layer` lowest-utility
+/// experts per layer (ties break to the higher expert index so the
+/// choice is deterministic).
+pub fn select_remote(
+    dist: &[Vec<f64>],
+    n_in: usize,
+    n_out: usize,
+    topk: usize,
+    remote_per_layer: usize,
+) -> Vec<Vec<bool>> {
+    let scores = utility_scores(dist, n_in, n_out, topk);
+    scores
+        .iter()
+        .map(|row| {
+            let k = row.len();
+            let take = remote_per_layer.min(k);
+            let mut order: Vec<usize> = (0..k).collect();
+            order.sort_by(|&a, &b| {
+                row[a].partial_cmp(&row[b]).unwrap().then(b.cmp(&a))
+            });
+            let mut flags = vec![false; k];
+            for &idx in order.iter().take(take) {
+                flags[idx] = true;
+            }
+            flags
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilities_scale_with_demand() {
+        let dist = vec![vec![0.7, 0.2, 0.1]];
+        let u = utility_scores(&dist, 100, 50, 2);
+        // u = (100+50)·2·s
+        assert!((u[0][0] - 210.0).abs() < 1e-9);
+        assert!((u[0][2] - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lowest_utility_goes_remote() {
+        let dist = vec![vec![0.4, 0.3, 0.2, 0.1], vec![0.1, 0.2, 0.3, 0.4]];
+        let flags = select_remote(&dist, 64, 16, 2, 2);
+        assert_eq!(flags[0], vec![false, false, true, true]);
+        assert_eq!(flags[1], vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn zero_remote_keeps_all_local() {
+        let dist = vec![vec![0.5, 0.5]];
+        let flags = select_remote(&dist, 10, 10, 1, 0);
+        assert!(flags[0].iter().all(|&f| !f));
+    }
+
+    #[test]
+    fn full_remote_selects_everything() {
+        let dist = vec![vec![0.25; 4]];
+        let flags = select_remote(&dist, 10, 10, 2, 4);
+        assert!(flags[0].iter().all(|&f| f));
+    }
+
+    #[test]
+    fn count_exact_even_with_ties() {
+        let dist = vec![vec![0.25; 4]];
+        let flags = select_remote(&dist, 10, 10, 2, 2);
+        assert_eq!(flags[0].iter().filter(|&&f| f).count(), 2);
+    }
+}

@@ -1,0 +1,125 @@
+//! Billing meter: serverless pricing is Σ memory × duration × rate.
+//! Entries are tagged so experiment reports can break cost down by
+//! component (main-model GPU / main-model CPU / remote experts / ...).
+
+use std::collections::BTreeMap;
+
+/// What a billing entry pays for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CostComponent {
+    MainGpu,
+    MainCpu,
+    RemoteExpertPrefill,
+    RemoteExpertDecode,
+    ColdStart,
+    Other,
+}
+
+#[derive(Debug, Clone)]
+pub struct BillingEntry {
+    pub component: CostComponent,
+    pub mem_mb: f64,
+    pub duration_s: f64,
+    pub rate_per_mb_s: f64,
+}
+
+impl BillingEntry {
+    pub fn cost(&self) -> f64 {
+        self.mem_mb * self.duration_s * self.rate_per_mb_s
+    }
+}
+
+/// Accumulates billing entries for one request (or one experiment run).
+#[derive(Debug, Clone, Default)]
+pub struct BillingMeter {
+    entries: Vec<BillingEntry>,
+}
+
+impl BillingMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn charge(
+        &mut self,
+        component: CostComponent,
+        mem_mb: f64,
+        duration_s: f64,
+        rate_per_mb_s: f64,
+    ) {
+        debug_assert!(mem_mb >= 0.0 && duration_s >= 0.0 && rate_per_mb_s >= 0.0);
+        self.entries.push(BillingEntry { component, mem_mb, duration_s, rate_per_mb_s });
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(BillingEntry::cost).sum()
+    }
+
+    pub fn by_component(&self) -> BTreeMap<CostComponent, f64> {
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            *out.entry(e.component).or_insert(0.0) += e.cost();
+        }
+        out
+    }
+
+    pub fn component_total(&self, c: CostComponent) -> f64 {
+        self.entries.iter().filter(|e| e.component == c).map(BillingEntry::cost).sum()
+    }
+
+    pub fn entries(&self) -> &[BillingEntry] {
+        &self.entries
+    }
+
+    pub fn merge(&mut self, other: &BillingMeter) {
+        self.entries.extend(other.entries.iter().cloned());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn product_pricing() {
+        let mut m = BillingMeter::new();
+        m.charge(CostComponent::MainCpu, 1000.0, 2.0, 1.0);
+        assert_eq!(m.total(), 2000.0);
+    }
+
+    #[test]
+    fn component_breakdown_sums_to_total() {
+        let mut m = BillingMeter::new();
+        m.charge(CostComponent::MainGpu, 100.0, 1.0, 3.0);
+        m.charge(CostComponent::MainCpu, 100.0, 1.0, 1.0);
+        m.charge(CostComponent::RemoteExpertDecode, 50.0, 2.0, 1.0);
+        let by = m.by_component();
+        let sum: f64 = by.values().sum();
+        assert!((sum - m.total()).abs() < 1e-12);
+        assert_eq!(by[&CostComponent::MainGpu], 300.0);
+        assert_eq!(m.component_total(CostComponent::RemoteExpertDecode), 100.0);
+    }
+
+    #[test]
+    fn cost_monotone_in_memory_and_time() {
+        let mut a = BillingMeter::new();
+        a.charge(CostComponent::Other, 100.0, 1.0, 1.0);
+        let mut b = BillingMeter::new();
+        b.charge(CostComponent::Other, 200.0, 1.0, 1.0);
+        let mut c = BillingMeter::new();
+        c.charge(CostComponent::Other, 100.0, 2.0, 1.0);
+        assert!(b.total() > a.total());
+        assert!(c.total() > a.total());
+    }
+
+    #[test]
+    fn merge_combines_entries() {
+        let mut a = BillingMeter::new();
+        a.charge(CostComponent::Other, 1.0, 1.0, 1.0);
+        let mut b = BillingMeter::new();
+        b.charge(CostComponent::MainGpu, 2.0, 1.0, 1.0);
+        a.merge(&b);
+        assert_eq!(a.entries().len(), 2);
+        assert_eq!(a.total(), 3.0);
+    }
+}

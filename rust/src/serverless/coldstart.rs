@@ -1,0 +1,111 @@
+//! Cold-start model (§V-E): container start (common base image) +
+//! model load from disk, proportional to the function's parameter
+//! footprint. Remote-expert functions start in parallel with the main
+//! model, so the effective cold start is the max across functions —
+//! the overlap that gives Remoe its Fig. 11 win.
+
+use crate::config::PlatformConfig;
+
+/// Cold-start breakdown of one function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColdStart {
+    pub container_s: f64,
+    pub load_s: f64,
+}
+
+impl ColdStart {
+    pub fn total(&self) -> f64 {
+        self.container_s + self.load_s
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ColdStartModel {
+    pub container_start_s: f64,
+    pub disk_bandwidth_mb_s: f64,
+}
+
+impl ColdStartModel {
+    pub fn from_platform(p: &PlatformConfig) -> Self {
+        ColdStartModel {
+            container_start_s: p.container_start_s,
+            disk_bandwidth_mb_s: p.disk_bandwidth_mb_s,
+        }
+    }
+
+    /// Cold start of one function holding `footprint_mb` of parameters.
+    pub fn function(&self, footprint_mb: f64) -> ColdStart {
+        ColdStart {
+            container_s: self.container_start_s,
+            load_s: footprint_mb.max(0.0) / self.disk_bandwidth_mb_s,
+        }
+    }
+
+    /// Effective cold start when the main model and all remote-expert
+    /// functions start **in parallel** (Remoe): max over functions,
+    /// plus the coordinator's optimization overhead (CALCULATE in
+    /// Fig. 11) which runs concurrently with the container phase and
+    /// only adds latency if it exceeds it.
+    pub fn parallel(
+        &self,
+        main_footprint_mb: f64,
+        remote_footprints_mb: &[f64],
+        calculate_s: f64,
+    ) -> f64 {
+        let main = self.function(main_footprint_mb).total();
+        let remote = remote_footprints_mb
+            .iter()
+            .map(|&f| self.function(f).total())
+            .fold(0.0, f64::max);
+        main.max(remote).max(calculate_s)
+    }
+
+    /// Sequential (monolithic) cold start: one function loads
+    /// everything.
+    pub fn monolithic(&self, total_footprint_mb: f64) -> f64 {
+        self.function(total_footprint_mb).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ColdStartModel {
+        ColdStartModel { container_start_s: 2.0, disk_bandwidth_mb_s: 500.0 }
+    }
+
+    #[test]
+    fn function_breakdown() {
+        let cs = model().function(1000.0);
+        assert_eq!(cs.container_s, 2.0);
+        assert_eq!(cs.load_s, 2.0);
+        assert_eq!(cs.total(), 4.0);
+    }
+
+    #[test]
+    fn parallel_beats_monolithic_when_split() {
+        let m = model();
+        // 2000 MB total: monolithic loads all; split loads 1200 + 2×400.
+        let mono = m.monolithic(2000.0);
+        let par = m.parallel(1200.0, &[400.0, 400.0], 0.01);
+        assert!(par < mono, "par={par} mono={mono}");
+        // the max structure: parallel equals the biggest function
+        assert!((par - m.function(1200.0).total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calculate_overhead_hidden_when_small() {
+        let m = model();
+        let base = m.parallel(1000.0, &[], 0.0);
+        let with_calc = m.parallel(1000.0, &[], 0.5);
+        assert_eq!(base, with_calc); // hidden under container start
+        let dominated = m.parallel(1000.0, &[], 100.0);
+        assert_eq!(dominated, 100.0); // pathological calc dominates
+    }
+
+    #[test]
+    fn zero_footprint_is_container_only() {
+        assert_eq!(model().function(0.0).total(), 2.0);
+    }
+}

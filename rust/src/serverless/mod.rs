@@ -1,0 +1,16 @@
+//! The serverless-platform substrate: pricing, memory specs, cold
+//! starts, network/payload limits, invocation overhead, and a
+//! virtual-time function-pool simulator. Everything Remoe's decisions
+//! consume is behind this module's interface (DESIGN.md §2).
+
+pub mod billing;
+pub mod coldstart;
+pub mod network;
+pub mod perfmodel;
+pub mod platform;
+
+pub use billing::{BillingMeter, CostComponent};
+pub use coldstart::{ColdStart, ColdStartModel};
+pub use network::{InvokeOverhead, NetworkModel, PayloadExceeded};
+pub use perfmodel::PerfModel;
+pub use platform::{FunctionSpec, Invocation, Platform};

@@ -1,0 +1,124 @@
+//! Inter-function network: payload-size enforcement (§II "payload
+//! size" motivation), transfer time, and the warm-invoke overhead
+//! `t^rem` (a lognormal random variable per §III-B).
+
+use crate::config::PlatformConfig;
+use crate::util::rng::Rng;
+
+#[derive(Debug, thiserror::Error)]
+#[error("payload {got:.0} B exceeds the {limit:.0} B function payload limit; \
+         requires intermediary storage (violates constraint 10g)")]
+pub struct PayloadExceeded {
+    pub got: f64,
+    pub limit: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    pub payload_limit_bytes: f64,
+    pub bandwidth_mb_s: f64,
+    pub invoke_mu: f64,
+    pub invoke_sigma: f64,
+}
+
+/// How `t^rem` is drawn: its expectation (analytic planning) or a
+/// sample (simulation).
+#[derive(Debug, Clone, Copy)]
+pub enum InvokeOverhead {
+    Expected,
+    Sampled,
+}
+
+impl NetworkModel {
+    pub fn from_platform(p: &PlatformConfig) -> Self {
+        NetworkModel {
+            payload_limit_bytes: p.payload_limit_bytes,
+            bandwidth_mb_s: p.net_bandwidth_mb_s,
+            invoke_mu: p.invoke_mu,
+            invoke_sigma: p.invoke_sigma,
+        }
+    }
+
+    /// Check constraint (10g): the tokens shipped to one replica fit
+    /// the payload limit.
+    pub fn check_payload(&self, bytes: f64) -> Result<(), PayloadExceeded> {
+        if bytes > self.payload_limit_bytes {
+            Err(PayloadExceeded { got: bytes, limit: self.payload_limit_bytes })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// One-way transfer time for `bytes` (the `N·D/B` terms).
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        bytes.max(0.0) / (self.bandwidth_mb_s * 1e6)
+    }
+
+    /// E[t^rem] for a lognormal(μ, σ): exp(μ + σ²/2).
+    pub fn invoke_overhead_expected(&self) -> f64 {
+        (self.invoke_mu + self.invoke_sigma * self.invoke_sigma / 2.0).exp()
+    }
+
+    pub fn invoke_overhead(&self, mode: InvokeOverhead, rng: &mut Rng) -> f64 {
+        match mode {
+            InvokeOverhead::Expected => self.invoke_overhead_expected(),
+            InvokeOverhead::Sampled => rng.lognormal(self.invoke_mu, self.invoke_sigma),
+        }
+    }
+
+    /// Maximum tokens of size `token_bytes` a single replica may
+    /// receive without breaching the payload limit.
+    pub fn max_tokens_per_payload(&self, token_bytes: f64) -> usize {
+        (self.payload_limit_bytes / token_bytes).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkModel {
+        NetworkModel {
+            payload_limit_bytes: 6.0 * 1024.0 * 1024.0,
+            bandwidth_mb_s: 100.0,
+            invoke_mu: -5.0,
+            invoke_sigma: 0.35,
+        }
+    }
+
+    #[test]
+    fn payload_enforcement() {
+        let n = net();
+        assert!(n.check_payload(1024.0).is_ok());
+        assert!(n.check_payload(7.0 * 1024.0 * 1024.0).is_err());
+    }
+
+    #[test]
+    fn table1_token_sizes_fit_payload() {
+        // Table I: every model's token (7–14 KB bf16) is far under 6 MB.
+        let n = net();
+        for token_kb in [8.0, 12.0, 7.0, 10.0, 14.0] {
+            assert!(n.check_payload(token_kb * 1024.0).is_ok());
+            assert!(n.max_tokens_per_payload(token_kb * 1024.0) > 400);
+        }
+    }
+
+    #[test]
+    fn transfer_time_linear() {
+        let n = net();
+        assert!((n.transfer_time(1e6) - 0.01).abs() < 1e-12); // 1 MB @ 100 MB/s
+        assert_eq!(n.transfer_time(0.0), 0.0);
+    }
+
+    #[test]
+    fn expected_invoke_overhead_matches_lognormal_mean() {
+        let n = net();
+        let mut rng = Rng::new(3);
+        let samples: f64 =
+            (0..200_000).map(|_| n.invoke_overhead(InvokeOverhead::Sampled, &mut rng)).sum::<f64>()
+                / 200_000.0;
+        let expected = n.invoke_overhead_expected();
+        assert!((samples - expected).abs() / expected < 0.02,
+                "sampled {samples} vs expected {expected}");
+    }
+}

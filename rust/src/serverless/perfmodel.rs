@@ -1,0 +1,156 @@
+//! Performance model: τ^c_{l,k,v}(n) — expert compute time as a
+//! function of token count and the function's memory specification.
+//!
+//! The paper profiles expert latency against allocated vCPUs and fits
+//! `T̃(ỹ) = θ1·exp(−θ2·ỹ) + θ3` (Fig. 6). We cannot change vCPUs on
+//! this testbed, so the substitution (DESIGN.md §2) is a documented
+//! scaling law: measured per-token kernel time at the reference core
+//! count, scaled by a saturating power law of the vCPUs the spec buys
+//! (1 GB ↔ 1 vCPU). The optimizer then fits the paper's exponential to
+//! *this* profile — same pipeline, calibrated source.
+
+use crate::config::{CostDims, PlatformConfig};
+
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// Per-token, per-expert compute time at 1 vCPU (seconds).
+    pub expert_token_s_ref: f64,
+    /// Saturating power law exponent and knee.
+    pub gamma: f64,
+    pub sat_vcpus: f64,
+    pub mem_per_vcpu_mb: f64,
+    /// Non-expert (attention/gate/embed/head) per-token time on GPU.
+    pub nonexpert_token_s_gpu: f64,
+    /// One-way CPU↔GPU staging time per token (τ^sw is applied twice
+    /// in eqs. 2 and 5).
+    pub swap_s_per_token: f64,
+}
+
+impl PerfModel {
+    pub fn from_dims(dims: &CostDims, platform: &PlatformConfig) -> Self {
+        PerfModel {
+            expert_token_s_ref: dims.expert_token_s_ref,
+            gamma: platform.speedup_gamma,
+            sat_vcpus: platform.speedup_saturation_vcpus,
+            mem_per_vcpu_mb: platform.mem_per_vcpu_mb,
+            nonexpert_token_s_gpu: dims.nonexpert_token_s_gpu,
+            swap_s_per_token: dims.swap_s_per_token,
+        }
+    }
+
+    /// Recalibrate the reference expert time from a measured per-token
+    /// kernel latency (seconds) and the parameter ratio between the
+    /// paper-scale expert and the measured mini expert.
+    pub fn calibrate_expert(&mut self, measured_token_s: f64, param_ratio: f64) {
+        assert!(measured_token_s > 0.0 && param_ratio > 0.0);
+        self.expert_token_s_ref = measured_token_s * param_ratio;
+    }
+
+    fn vcpus(&self, mem_mb: f64) -> f64 {
+        (mem_mb / self.mem_per_vcpu_mb).max(0.125)
+    }
+
+    /// Speedup over the 1-vCPU reference: saturating power law,
+    /// normalised so speedup(1 vCPU) = 1.
+    pub fn speedup(&self, vcpus: f64) -> f64 {
+        vcpus.min(self.sat_vcpus).max(0.125).powf(self.gamma)
+    }
+
+    /// τ^c(n, m): time for one expert to process `n` tokens under
+    /// memory spec `mem_mb`.
+    pub fn expert_time(&self, n_tokens: f64, mem_mb: f64) -> f64 {
+        if n_tokens <= 0.0 {
+            return 0.0;
+        }
+        n_tokens * self.expert_token_s_ref / self.speedup(self.vcpus(mem_mb))
+    }
+
+    /// t^c_{l,k,v}: single-token expert decode time at spec `mem_mb`.
+    pub fn expert_token_time(&self, mem_mb: f64) -> f64 {
+        self.expert_time(1.0, mem_mb)
+    }
+
+    /// τ^f(n): non-expert module prefill time for n tokens (GPU side).
+    pub fn nonexpert_time(&self, n_tokens: f64) -> f64 {
+        n_tokens * self.nonexpert_token_s_gpu
+    }
+
+    /// τ^sw(n): one-way GPU↔CPU staging for n tokens.
+    pub fn swap_time(&self, n_tokens: f64) -> f64 {
+        n_tokens * self.swap_s_per_token
+    }
+
+    /// The Fig. 6 profile: decode-all-topk latency vs memory spec
+    /// (the data the optimizer's exponential fit consumes).
+    pub fn profile_decode_latency(&self, topk: usize, specs: &[f64]) -> Vec<(f64, f64)> {
+        specs
+            .iter()
+            .map(|&m| (m, topk as f64 * self.expert_token_time(m)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PerfModel {
+        PerfModel {
+            expert_token_s_ref: 0.004,
+            gamma: 0.75,
+            sat_vcpus: 16.0,
+            mem_per_vcpu_mb: 1024.0,
+            nonexpert_token_s_gpu: 0.0005,
+            swap_s_per_token: 0.00002,
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_memory() {
+        let m = model();
+        let mut last = f64::INFINITY;
+        for mem in [256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0] {
+            let t = m.expert_time(10.0, mem);
+            assert!(t < last, "mem={mem} t={t} last={last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn saturates_beyond_knee() {
+        let m = model();
+        let t1 = m.expert_time(10.0, 16.0 * 1024.0);
+        let t2 = m.expert_time(10.0, 64.0 * 1024.0);
+        assert!((t1 - t2).abs() < 1e-12, "saturation");
+    }
+
+    #[test]
+    fn linear_in_tokens() {
+        let m = model();
+        let t1 = m.expert_time(1.0, 2048.0);
+        let t8 = m.expert_time(8.0, 2048.0);
+        assert!((t8 - 8.0 * t1).abs() < 1e-12);
+        assert_eq!(m.expert_time(0.0, 2048.0), 0.0);
+    }
+
+    #[test]
+    fn reference_point_is_one_vcpu() {
+        let m = model();
+        assert!((m.expert_time(1.0, 1024.0) - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_scales_reference() {
+        let mut m = model();
+        m.calibrate_expert(0.0001, 50.0);
+        assert!((m.expert_token_s_ref - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_matches_pointwise_queries() {
+        let m = model();
+        let prof = m.profile_decode_latency(2, &[512.0, 1024.0]);
+        assert_eq!(prof.len(), 2);
+        assert!((prof[0].1 - 2.0 * m.expert_token_time(512.0)).abs() < 1e-12);
+    }
+}

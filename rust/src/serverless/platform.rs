@@ -1,0 +1,274 @@
+//! Virtual-time serverless platform: function deployment, warm pools
+//! with keep-alive, cold starts, invocation billing.
+//!
+//! The analytic cost model (costmodel::) evaluates eqs. (1)–(9) in
+//! closed form; this simulator mirrors the same pricing rules over an
+//! event timeline so the serving loop can produce per-request latency
+//! (including queueing and cold starts under a Poisson trace) and an
+//! auditable billing ledger. Requests are single-batch, matching the
+//! paper's low-overhead serving assumption (§II).
+
+use std::collections::BTreeMap;
+
+use crate::config::PlatformConfig;
+use crate::util::rng::Rng;
+
+use super::billing::{BillingMeter, CostComponent};
+use super::coldstart::ColdStartModel;
+use super::network::{InvokeOverhead, NetworkModel};
+
+/// A deployed function blueprint.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// CPU memory specification (billed at c^c).
+    pub mem_mb: f64,
+    /// GPU memory held by this function (billed at c^g; 0 for
+    /// remote-expert functions).
+    pub gpu_mb: f64,
+    /// Parameter bytes to load from disk on cold start, MB.
+    pub footprint_mb: f64,
+    pub component: CostComponent,
+}
+
+#[derive(Debug, Clone)]
+struct Instance {
+    /// Virtual time until which this instance stays warm.
+    warm_until: f64,
+}
+
+/// Result of one invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Invocation {
+    pub queued_at: f64,
+    pub started_at: f64,
+    pub finished_at: f64,
+    pub cold_start_s: f64,
+    pub invoke_overhead_s: f64,
+}
+
+impl Invocation {
+    pub fn latency(&self) -> f64 {
+        self.finished_at - self.queued_at
+    }
+}
+
+/// The platform.
+pub struct Platform {
+    pub clock: f64,
+    pub keepalive_s: f64,
+    cold: ColdStartModel,
+    net: NetworkModel,
+    cpu_rate: f64,
+    gpu_rate: f64,
+    specs: BTreeMap<String, FunctionSpec>,
+    pool: BTreeMap<String, Vec<Instance>>,
+    pub billing: BillingMeter,
+    rng: Rng,
+    pub overhead_mode: InvokeOverhead,
+}
+
+impl Platform {
+    pub fn new(cfg: &PlatformConfig, seed: u64) -> Platform {
+        Platform {
+            clock: 0.0,
+            keepalive_s: 60.0,
+            cold: ColdStartModel::from_platform(cfg),
+            net: NetworkModel::from_platform(cfg),
+            cpu_rate: cfg.cpu_rate_per_mb_s,
+            gpu_rate: cfg.gpu_rate_per_mb_s,
+            specs: BTreeMap::new(),
+            pool: BTreeMap::new(),
+            billing: BillingMeter::new(),
+            rng: Rng::new(seed ^ 0x504c_4154), // "PLAT"
+            overhead_mode: InvokeOverhead::Sampled,
+        }
+    }
+
+    pub fn network(&self) -> &NetworkModel {
+        &self.net
+    }
+
+    pub fn cold_model(&self) -> &ColdStartModel {
+        &self.cold
+    }
+
+    pub fn deploy(&mut self, spec: FunctionSpec) {
+        self.pool.entry(spec.name.clone()).or_default();
+        self.specs.insert(spec.name.clone(), spec);
+    }
+
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// Acquire an instance (warm hit or cold start); returns the cold
+    /// start duration (0 for warm) without advancing the clock.
+    fn acquire(&mut self, name: &str) -> f64 {
+        let spec = self.specs.get(name).expect("function not deployed").clone();
+        let pool = self.pool.get_mut(name).unwrap();
+        // evict expired instances
+        let now = self.clock;
+        pool.retain(|i| i.warm_until >= now);
+        if let Some(_inst) = pool.pop() {
+            0.0
+        } else {
+            self.cold.function(spec.footprint_mb).total()
+        }
+    }
+
+    /// Release an instance back to the warm pool.
+    fn release(&mut self, name: &str, at: f64) {
+        let keep = self.keepalive_s;
+        self.pool.get_mut(name).unwrap().push(Instance { warm_until: at + keep });
+    }
+
+    /// Invoke `name` with `work_s` of compute and an inbound payload.
+    /// Advances the clock to the completion time and bills the
+    /// function's memory for the active duration.
+    pub fn invoke(&mut self, name: &str, work_s: f64, payload_bytes: f64) -> anyhow::Result<Invocation> {
+        self.net.check_payload(payload_bytes)?;
+        let queued_at = self.clock;
+        let cold_start_s = self.acquire(name);
+        let overhead = if cold_start_s > 0.0 {
+            0.0 // cold path already pays container+load; no warm jitter
+        } else {
+            self.net.invoke_overhead(self.overhead_mode, &mut self.rng)
+        };
+        let transfer = self.net.transfer_time(payload_bytes);
+        let started_at = queued_at + cold_start_s + overhead + transfer;
+        let finished_at = started_at + work_s;
+
+        let spec = &self.specs[name];
+        // billed duration: active time incl. cold start (the paper's
+        // Fig. 1: charged for the entire runtime of the function)
+        let billed = finished_at - queued_at;
+        self.billing.charge(spec.component, spec.mem_mb, billed, self.cpu_rate);
+        if spec.gpu_mb > 0.0 {
+            self.billing.charge(CostComponent::MainGpu, spec.gpu_mb, billed, self.gpu_rate);
+        }
+
+        self.clock = finished_at;
+        self.release(name, finished_at);
+        Ok(Invocation { queued_at, started_at, finished_at, cold_start_s, invoke_overhead_s: overhead })
+    }
+
+    /// Invoke several functions in parallel (remote-expert replicas);
+    /// the clock advances to the max completion. Each entry is
+    /// (name, work_s, payload_bytes).
+    pub fn invoke_parallel(
+        &mut self,
+        calls: &[(String, f64, f64)],
+    ) -> anyhow::Result<Vec<Invocation>> {
+        let start = self.clock;
+        let mut results = Vec::with_capacity(calls.len());
+        let mut latest = start;
+        for (name, work_s, payload) in calls {
+            self.clock = start; // each call starts at the same instant
+            let inv = self.invoke(name, *work_s, *payload)?;
+            latest = latest.max(inv.finished_at);
+            results.push(inv);
+        }
+        self.clock = latest;
+        Ok(results)
+    }
+
+    /// Number of currently-warm instances of a function.
+    pub fn warm_count(&mut self, name: &str) -> usize {
+        let now = self.clock;
+        self.pool.get_mut(name).map_or(0, |p| {
+            p.retain(|i| i.warm_until >= now);
+            p.len()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> Platform {
+        let mut p = Platform::new(&PlatformConfig::default(), 1);
+        p.overhead_mode = InvokeOverhead::Expected;
+        p.deploy(FunctionSpec {
+            name: "main".into(),
+            mem_mb: 1000.0,
+            gpu_mb: 500.0,
+            footprint_mb: 1000.0,
+            component: CostComponent::MainCpu,
+        });
+        p.deploy(FunctionSpec {
+            name: "expert0".into(),
+            mem_mb: 400.0,
+            gpu_mb: 0.0,
+            footprint_mb: 200.0,
+            component: CostComponent::RemoteExpertDecode,
+        });
+        p
+    }
+
+    #[test]
+    fn first_invoke_is_cold_second_is_warm() {
+        let mut p = platform();
+        let a = p.invoke("main", 1.0, 0.0).unwrap();
+        assert!(a.cold_start_s > 0.0);
+        let b = p.invoke("main", 1.0, 0.0).unwrap();
+        assert_eq!(b.cold_start_s, 0.0);
+        assert!(b.invoke_overhead_s > 0.0);
+    }
+
+    #[test]
+    fn keepalive_expiry_causes_cold_start() {
+        let mut p = platform();
+        p.invoke("main", 1.0, 0.0).unwrap();
+        p.advance_to(p.clock + p.keepalive_s + 1.0);
+        let again = p.invoke("main", 1.0, 0.0).unwrap();
+        assert!(again.cold_start_s > 0.0);
+    }
+
+    #[test]
+    fn billing_includes_gpu_at_gpu_rate() {
+        let mut p = platform();
+        p.invoke("main", 1.0, 0.0).unwrap();
+        let by = p.billing.by_component();
+        assert!(by[&CostComponent::MainGpu] > 0.0);
+        // GPU is billed at 3× the CPU rate on half the memory → 1.5×
+        let ratio = by[&CostComponent::MainGpu] / by[&CostComponent::MainCpu];
+        assert!((ratio - 1.5).abs() < 1e-9, "ratio={ratio}");
+    }
+
+    #[test]
+    fn payload_violation_rejected() {
+        let mut p = platform();
+        assert!(p.invoke("expert0", 0.1, 10e6 * 1.2).is_err());
+    }
+
+    #[test]
+    fn parallel_invocations_overlap() {
+        let mut p = platform();
+        // warm both functions first
+        p.invoke("main", 0.0, 0.0).unwrap();
+        p.invoke("expert0", 0.0, 0.0).unwrap();
+        let t0 = p.clock;
+        let invs = p
+            .invoke_parallel(&[
+                ("main".to_string(), 1.0, 0.0),
+                ("expert0".to_string(), 2.0, 0.0),
+            ])
+            .unwrap();
+        // wall-clock is the max, not the sum
+        let wall = p.clock - t0;
+        assert!(wall < 2.5, "wall={wall}");
+        assert_eq!(invs.len(), 2);
+    }
+
+    #[test]
+    fn warm_count_tracks_pool() {
+        let mut p = platform();
+        assert_eq!(p.warm_count("main"), 0);
+        p.invoke("main", 0.5, 0.0).unwrap();
+        assert_eq!(p.warm_count("main"), 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Usage from a `harness = false` bench binary:
+//! ```ignore
+//! let mut b = Bench::new("expert_ffn_n64");
+//! b.run(|| exe.execute(&inputs));
+//! b.report();
+//! ```
+//! Warms up, then measures a fixed number of iterations (or until a time
+//! budget), and reports mean/p50/p99 in the familiar one-line format.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::{summarize, Summary};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+pub struct Bench {
+    pub name: String,
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+    samples_ns: Vec<f64>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            min_iters: 10,
+            max_iters: 2000,
+            budget: Duration::from_secs(3),
+            samples_ns: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run the closure repeatedly, recording per-iteration wall time.
+    pub fn run<T, F: FnMut() -> T>(&mut self, mut f: F) -> &mut Self {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let started = Instant::now();
+        while self.samples_ns.len() < self.max_iters
+            && (self.samples_ns.len() < self.min_iters
+                || started.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            self.samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        self
+    }
+
+    pub fn summary(&self) -> Summary {
+        summarize(&self.samples_ns)
+    }
+
+    /// One-line report: `name  mean ± std  [p50 p99]  (n iters)`.
+    pub fn report(&self) -> Summary {
+        let s = self.summary();
+        println!(
+            "{:<40} {:>12} ± {:>10}   p50 {:>12}  p99 {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(s.mean),
+            fmt_ns(s.std),
+            fmt_ns(s.p50),
+            fmt_ns(s.p99),
+            s.n
+        );
+        s
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Section header used by the bench binaries so `cargo bench` output
+/// groups per paper table/figure.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_at_least_min_iters() {
+        let mut b = Bench::new("noop").with_iters(5, 20).with_budget(Duration::from_millis(1));
+        b.run(|| 1 + 1);
+        assert!(b.summary().n >= 5);
+        assert!(b.summary().n <= 20);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn summary_nonzero_for_real_work() {
+        let mut b = Bench::new("spin").with_iters(5, 5);
+        b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(b.summary().mean > 0.0);
+    }
+}

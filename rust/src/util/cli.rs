@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `remoe <subcommand> [positionals] [--flag[=| ]value] [--switch]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("exp fig9 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positionals, vec!["fig9", "extra"]);
+    }
+
+    #[test]
+    fn flags_both_styles() {
+        let a = parse("serve --model gpt2_moe_mini --requests=50 --verbose");
+        assert_eq!(a.flag("model"), Some("gpt2_moe_mini"));
+        assert_eq!(a.usize_or("requests", 0), 50);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn numeric_value_not_a_flag() {
+        // "--alpha 15" consumes 15 as the value even though it is bare.
+        let a = parse("predict --alpha 15");
+        assert_eq!(a.usize_or("alpha", 0), 15);
+        assert!(a.positionals.is_empty());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --json");
+        assert!(a.has("json"));
+        assert_eq!(a.flag("json"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.f64_or("rate", 2.5), 2.5);
+        assert_eq!(a.flag_or("out", "x.csv"), "x.csv");
+    }
+}

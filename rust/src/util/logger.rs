@@ -1,0 +1,64 @@
+//! Minimal `log` backend: level from `REMOE_LOG` (error..trace),
+//! timestamped lines to stderr.
+
+use std::io::Write;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+
+struct Logger {
+    level: LevelFilter,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Level comes from `REMOE_LOG` (default: warn).
+/// Safe to call multiple times (subsequent calls are no-ops).
+pub fn init() {
+    let level = match std::env::var("REMOE_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") | Err(_) => LevelFilter::Warn,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok(_) => LevelFilter::Warn,
+    };
+    let _ = START.set(Instant::now());
+    let _ = log::set_boxed_logger(Box::new(Logger { level }));
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger test line");
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-built substrate: RNG, stats, JSON/TOML parsing, CLI, logging,
+//! bench + property-test harnesses. Nothing here is Remoe-specific; it
+//! exists because the offline crate set has no rand/serde/clap/criterion.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;

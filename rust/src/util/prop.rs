@@ -1,0 +1,107 @@
+//! Mini property-testing runner (proptest is not available offline).
+//!
+//! Each case derives a fresh deterministic RNG from (suite seed, case
+//! index); a failing case's seed is printed so it can be replayed with
+//! `Prop::replay`. No structural shrinking — generators are encouraged
+//! to draw sizes small-biased instead (`Rng::below` on a skewed range).
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub name: &'static str,
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        // REMOE_PROP_CASES to crank coverage locally / in CI.
+        let cases = std::env::var("REMOE_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Prop { name, cases, seed: 0x5EED_0001 }
+    }
+
+    pub fn with_cases(mut self, cases: usize) -> Self {
+        self.cases = cases;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run `check(rng, case_idx)`; panic with replay info on failure.
+    pub fn check<F: FnMut(&mut Rng, usize)>(&self, mut check: F) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(case as u64);
+            let mut rng = Rng::new(case_seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || check(&mut rng, case),
+            ));
+            if let Err(payload) = result {
+                eprintln!(
+                    "property {:?} failed at case {case} (replay seed {case_seed:#x})",
+                    self.name
+                );
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+
+    /// Re-run a single failing case by its printed seed.
+    pub fn replay<F: FnMut(&mut Rng, usize)>(seed: u64, mut check: F) {
+        let mut rng = Rng::new(seed);
+        check(&mut rng, 0);
+    }
+}
+
+/// Small-biased size draw in [lo, hi]: half the mass on the lower third.
+pub fn small_size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(hi >= lo);
+    let span = hi - lo;
+    if span == 0 {
+        return lo;
+    }
+    if rng.bool(0.5) {
+        lo + rng.below((span / 3 + 1) as u64) as usize
+    } else {
+        lo + rng.below((span + 1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new("addition commutes").with_cases(32).check(|rng, _| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failing_case() {
+        Prop::new("always fails for big").with_cases(200).check(|rng, _| {
+            assert!(rng.below(100) < 99);
+        });
+    }
+
+    #[test]
+    fn small_size_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let s = small_size(&mut rng, 2, 50);
+            assert!((2..=50).contains(&s));
+        }
+    }
+}

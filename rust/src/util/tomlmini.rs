@@ -1,0 +1,254 @@
+//! TOML-subset parser for the config system (`configs/*.toml`).
+//!
+//! Supports: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments. That is
+//! the entire surface our config files use; anything else is an error
+//! (better loud than silently misread).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `section.key` → value (root keys have no prefix).
+#[derive(Debug, Clone, Default)]
+pub struct Toml {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.into() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed section"))?;
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.trim().to_string();
+            } else {
+                let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+                let key = key.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                entries.insert(full, value);
+            }
+        }
+        Ok(Toml { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Only strip '#' outside of quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            out.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(out));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas that are not inside quotes (arrays are flat).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(
+            r#"
+            root_key = 7
+            [platform]
+            name = "lambda-like"   # trailing comment
+            cpu_rate = 1.5e-7
+            gpu = true
+            specs = [200, 400, 800]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get("root_key").unwrap().as_i64(), Some(7));
+        assert_eq!(t.str_or("platform.name", ""), "lambda-like");
+        assert!((t.f64_or("platform.cpu_rate", 0.0) - 1.5e-7).abs() < 1e-20);
+        assert!(t.bool_or("platform.gpu", false));
+        let arr = t.get("platform.specs").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_i64(), Some(800));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let t = Toml::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(t.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn nested_section_names() {
+        let t = Toml::parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(t.get("a.b.c").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("k = ").is_err());
+        assert!(Toml::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let t = Toml::parse("").unwrap();
+        assert_eq!(t.usize_or("x", 5), 5);
+        assert_eq!(t.f64_or("y", 2.5), 2.5);
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let t = Toml::parse("big = 1_000_000").unwrap();
+        assert_eq!(t.get("big").unwrap().as_i64(), Some(1_000_000));
+    }
+}

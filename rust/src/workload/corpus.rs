@@ -1,0 +1,170 @@
+//! Synthetic corpora standing in for the paper's four datasets
+//! (LMSYS-Chat-1M, WikiText-2, C4, SlimPajama — DESIGN.md §2).
+//!
+//! Each corpus is a topic mixture: a topic owns a vocabulary of short
+//! phrases; a prompt concatenates phrases from its topic plus
+//! character-level noise. The knobs (topic count, phrase pool size,
+//! noise rate) control how tight the semantic clusters are — which is
+//! what differentiates the datasets' SPS accuracy in Fig. 8. Running
+//! *real gates* over these topic-structured prompts produces the
+//! semantic↔activation correlation the paper exploits (Fig. 3).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub text: String,
+    pub topic: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub name: &'static str,
+    pub topics: usize,
+    /// phrases per topic vocabulary.
+    pub phrases_per_topic: usize,
+    /// phrases concatenated per prompt.
+    pub phrases_per_prompt: usize,
+    /// probability of corrupting a character (cluster looseness).
+    pub noise: f64,
+    /// corpus-level seed offset so corpora differ deterministically.
+    pub seed: u64,
+}
+
+/// The four evaluation corpora. Cluster tightness loosely mirrors the
+/// relative Fig. 8 spreads: chat data is strongly clustered by topic,
+/// web crawl (c4) is noisier, the pretraining mix is the most diffuse.
+pub fn standard_corpora() -> Vec<CorpusSpec> {
+    vec![
+        CorpusSpec { name: "lmsys-chat", topics: 8, phrases_per_topic: 12, phrases_per_prompt: 6, noise: 0.02, seed: 101 },
+        CorpusSpec { name: "wikitext", topics: 6, phrases_per_topic: 16, phrases_per_prompt: 7, noise: 0.05, seed: 202 },
+        CorpusSpec { name: "c4", topics: 12, phrases_per_topic: 20, phrases_per_prompt: 6, noise: 0.10, seed: 303 },
+        CorpusSpec { name: "slimpajama", topics: 16, phrases_per_topic: 24, phrases_per_prompt: 5, noise: 0.16, seed: 404 },
+    ]
+}
+
+/// Generator for one corpus.
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    vocab: Vec<Vec<String>>, // [topic][phrase]
+}
+
+const SYLLABLES: &[&str] = &[
+    "ka", "to", "mi", "ser", "ver", "less", "moe", "gate", "ex", "pert", "chat", "wiki",
+    "net", "data", "laten", "cost", "mem", "ory", "pre", "fill", "de", "code", "rout",
+    "ing", "cloud", "func", "tion", "lam", "bda", "ten", "sor", "form", "er",
+];
+
+impl Corpus {
+    pub fn new(spec: CorpusSpec) -> Corpus {
+        let mut rng = Rng::new(0xC0_87u64 ^ spec.seed);
+        let vocab = (0..spec.topics)
+            .map(|t| {
+                // topic-specific syllable subset → distinct byte stats
+                let mut pool: Vec<&str> = SYLLABLES.to_vec();
+                rng.shuffle(&mut pool);
+                let pool = &pool[..8 + (t % 4)];
+                (0..spec.phrases_per_topic)
+                    .map(|_| {
+                        let words = rng.range_u(2, 4);
+                        (0..words)
+                            .map(|_| {
+                                let sylls = rng.range_u(2, 3);
+                                (0..sylls)
+                                    .map(|_| pool[rng.below(pool.len() as u64) as usize])
+                                    .collect::<String>()
+                            })
+                            .collect::<Vec<_>>()
+                            .join(" ")
+                    })
+                    .collect()
+            })
+            .collect();
+        Corpus { spec, vocab }
+    }
+
+    /// Sample one prompt (topic chosen uniformly unless forced).
+    pub fn sample(&self, rng: &mut Rng, force_topic: Option<usize>) -> Prompt {
+        let topic = force_topic.unwrap_or_else(|| rng.below(self.spec.topics as u64) as usize);
+        let phrases = &self.vocab[topic];
+        let mut parts = Vec::with_capacity(self.spec.phrases_per_prompt);
+        for _ in 0..self.spec.phrases_per_prompt {
+            parts.push(phrases[rng.below(phrases.len() as u64) as usize].clone());
+        }
+        let mut text = parts.join(". ");
+        // character noise
+        if self.spec.noise > 0.0 {
+            let bytes = unsafe { text.as_bytes_mut() };
+            for b in bytes.iter_mut() {
+                if rng.bool(self.spec.noise) && b.is_ascii_lowercase() {
+                    *b = b'a' + rng.below(26) as u8;
+                }
+            }
+        }
+        Prompt { text, topic }
+    }
+
+    /// A deterministic train/test split: `n_train` + `n_test` prompts.
+    pub fn split(&self, n_train: usize, n_test: usize, seed: u64) -> (Vec<Prompt>, Vec<Prompt>) {
+        let mut rng = Rng::new(seed ^ self.spec.seed);
+        let train = (0..n_train).map(|_| self.sample(&mut rng, None)).collect();
+        let test = (0..n_test).map(|_| self.sample(&mut rng, None)).collect();
+        (train, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_standard_corpora() {
+        let specs = standard_corpora();
+        assert_eq!(specs.len(), 4);
+        let names: Vec<_> = specs.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["lmsys-chat", "wikitext", "c4", "slimpajama"]);
+    }
+
+    #[test]
+    fn prompts_are_nonempty_ascii_with_valid_topic() {
+        for spec in standard_corpora() {
+            let topics = spec.topics;
+            let c = Corpus::new(spec);
+            let mut rng = Rng::new(5);
+            for _ in 0..50 {
+                let p = c.sample(&mut rng, None);
+                assert!(!p.text.is_empty());
+                assert!(p.text.is_ascii());
+                assert!(p.topic < topics);
+                assert!(p.text.len() > 20, "{}", p.text);
+            }
+        }
+    }
+
+    #[test]
+    fn same_topic_prompts_share_more_vocabulary() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let mut rng = Rng::new(9);
+        let a1 = c.sample(&mut rng, Some(0)).text;
+        let a2 = c.sample(&mut rng, Some(0)).text;
+        let b = c.sample(&mut rng, Some(5)).text;
+        let bigrams = |s: &str| -> std::collections::HashSet<(u8, u8)> {
+            s.as_bytes().windows(2).map(|w| (w[0], w[1])).collect()
+        };
+        let (s1, s2, sb) = (bigrams(&a1), bigrams(&a2), bigrams(&b));
+        let same: usize = s1.intersection(&s2).count();
+        let cross: usize = s1.intersection(&sb).count();
+        assert!(same > cross, "same-topic overlap {same} ≤ cross-topic {cross}");
+    }
+
+    #[test]
+    fn split_deterministic_and_disjoint_rng() {
+        let c = Corpus::new(standard_corpora()[1].clone());
+        let (tr1, te1) = c.split(20, 5, 7);
+        let (tr2, te2) = c.split(20, 5, 7);
+        assert_eq!(tr1.len(), 20);
+        assert_eq!(te1.len(), 5);
+        assert_eq!(tr1[3].text, tr2[3].text);
+        assert_eq!(te1[4].text, te2[4].text);
+    }
+}

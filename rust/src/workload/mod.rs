@@ -1,0 +1,8 @@
+//! Workloads: synthetic corpora standing in for the paper's datasets,
+//! and Poisson/batch request traces.
+
+pub mod corpus;
+pub mod trace;
+
+pub use corpus::{standard_corpora, Corpus, CorpusSpec, Prompt};
+pub use trace::{batch_trace, poisson_trace, Request, TraceSpec};

@@ -1,0 +1,76 @@
+//! Request traces: Poisson arrivals over corpus prompts (§V-C uses 50
+//! sampled requests; the serving example adds open-loop arrivals).
+
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, Prompt};
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub prompt: Prompt,
+    pub n_out: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// mean arrivals per second (Poisson process).
+    pub rate_per_s: f64,
+    pub n_requests: usize,
+    pub n_out: usize,
+    pub seed: u64,
+}
+
+/// Open-loop Poisson trace over a corpus.
+pub fn poisson_trace(corpus: &Corpus, spec: &TraceSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed ^ 0x7124_CE);
+    let mut t = 0.0;
+    (0..spec.n_requests)
+        .map(|id| {
+            t += rng.exponential(spec.rate_per_s);
+            Request { id, arrival_s: t, prompt: corpus.sample(&mut rng, None), n_out: spec.n_out }
+        })
+        .collect()
+}
+
+/// Closed trace from pre-sampled prompts (Fig. 9's "50 tasks from the
+/// test set", all available immediately).
+pub fn batch_trace(prompts: &[Prompt], n_out: usize) -> Vec<Request> {
+    prompts
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(id, prompt)| Request { id, arrival_s: 0.0, prompt, n_out })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::corpus::standard_corpora;
+
+    #[test]
+    fn poisson_arrivals_increase_and_rate_matches() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let spec = TraceSpec { rate_per_s: 2.0, n_requests: 2000, n_out: 8, seed: 1 };
+        let trace = poisson_trace(&c, &spec);
+        assert_eq!(trace.len(), 2000);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        let span = trace.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 2.0).abs() < 0.2, "rate={rate}");
+    }
+
+    #[test]
+    fn batch_trace_all_at_zero() {
+        let c = Corpus::new(standard_corpora()[1].clone());
+        let (_, test) = c.split(0, 10, 3);
+        let trace = batch_trace(&test, 48);
+        assert_eq!(trace.len(), 10);
+        assert!(trace.iter().all(|r| r.arrival_s == 0.0 && r.n_out == 48));
+        assert_eq!(trace[9].id, 9);
+    }
+}

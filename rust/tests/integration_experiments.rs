@@ -1,0 +1,53 @@
+//! Integration: every experiment in the harness runs end to end at
+//! tiny scale and reproduces its paper-shape assertion (each exp_*
+//! function embeds its own ensure!() on the qualitative claim).
+
+use remoe::experiments::{self, Scale};
+
+fn tiny() -> Scale {
+    Scale { train: 40, test: 6, requests: 3, n_in: 96, n_out: 12, alpha: 5, beta: 15 }
+}
+
+#[test]
+fn table1_and_fig1_motivation() {
+    experiments::run("table1", tiny()).unwrap();
+    experiments::run("fig1", tiny()).unwrap();
+}
+
+#[test]
+fn fig3_semantic_activation_correlation() {
+    experiments::run("fig3", tiny()).unwrap();
+}
+
+#[test]
+fn fig4_fig5_fig6_profiles() {
+    experiments::run("fig4", tiny()).unwrap();
+    experiments::run("fig5", tiny()).unwrap();
+    experiments::run("fig6", tiny()).unwrap();
+}
+
+#[test]
+fn fig8_prediction_quality() {
+    experiments::run("fig8", tiny()).unwrap();
+}
+
+#[test]
+fn fig9_overall_cost_shape() {
+    experiments::run("fig9", tiny()).unwrap();
+}
+
+#[test]
+fn fig10_ratio_sweep() {
+    experiments::run("fig10", tiny()).unwrap();
+}
+
+#[test]
+fn fig11_cold_start_and_summary() {
+    experiments::run("fig11", tiny()).unwrap();
+    experiments::run("summary", tiny()).unwrap();
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    assert!(experiments::run("fig99", tiny()).is_err());
+}

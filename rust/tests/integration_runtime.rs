@@ -1,0 +1,177 @@
+//! Integration: AOT artifacts (L1 Pallas + L2 jax → HLO text) executed
+//! through PJRT must match the pure-rust reference on the same weights.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::rc::Rc;
+
+use remoe::model::{self, Engine, ModelWeights, NativeBackend, PjrtBackend};
+use remoe::model::engine::Backend;
+use remoe::runtime::{ArtifactStore, HostTensor};
+use remoe::util::rng::Rng;
+
+
+/// PJRT CPU clients are not safe to drive from concurrent test threads
+/// (multiple TfrtCpuClient instances share process-global state), so
+/// every test body takes this lock.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn store() -> Option<Rc<ArtifactStore>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Rc::new(ArtifactStore::open("artifacts").expect("open artifacts")))
+}
+
+fn assert_close(a: &HostTensor, b: &HostTensor, tol: f32, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what} shape");
+    let mut worst = 0.0f32;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+#[test]
+fn manifest_matches_rust_presets() {
+    let _guard = serial();
+    let Some(store) = store() else { return };
+    let m = &store.manifest;
+    assert_eq!(m.model("gpt2_moe_mini").unwrap(), &model::gpt2_moe_mini());
+    assert_eq!(m.model("dsv2_mini").unwrap(), &model::dsv2_mini());
+}
+
+#[test]
+fn expert_ffn_artifact_matches_native() {
+    let _guard = serial();
+    let Some(store) = store() else { return };
+    for model_name in ["gpt2_moe_mini", "dsv2_mini"] {
+        let hyper = store.manifest.model(model_name).unwrap().clone();
+        let weights = ModelWeights::generate(&hyper, 11);
+        let pjrt = PjrtBackend::new(store.clone(), model_name).unwrap();
+        let native = NativeBackend { heads: hyper.heads, topk: hyper.topk };
+        let mut rng = Rng::new(5);
+        for n in [1usize, 3, 17, 64] {
+            let x = HostTensor::new(
+                vec![n, hyper.hidden],
+                (0..n * hyper.hidden).map(|_| rng.normal() as f32 * 0.5).collect(),
+            );
+            let ew = &weights.layers[0].experts[2];
+            let a = pjrt.expert(ew, &x, &hyper.act).unwrap();
+            let b = native.expert(ew, &x, &hyper.act).unwrap();
+            assert_close(&a, &b, 2e-4, &format!("{model_name} expert n={n}"));
+            if let Some(shared) = &weights.layers[0].shared {
+                let a = pjrt.expert(shared, &x, &hyper.act).unwrap();
+                let b = native.expert(shared, &x, &hyper.act).unwrap();
+                assert_close(&a, &b, 2e-4, &format!("{model_name} shared n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn attn_and_gate_artifacts_match_native() {
+    let _guard = serial();
+    let Some(store) = store() else { return };
+    let hyper = store.manifest.model("gpt2_moe_mini").unwrap().clone();
+    let weights = ModelWeights::generate(&hyper, 12);
+    let pjrt = PjrtBackend::new(store.clone(), "gpt2_moe_mini").unwrap();
+    let native = NativeBackend { heads: hyper.heads, topk: hyper.topk };
+    let mut rng = Rng::new(6);
+
+    // decode-shaped (S=1) with a warm cache at pos0=9
+    let pos0 = 9usize;
+    let h = HostTensor::new(
+        vec![1, hyper.hidden],
+        (0..hyper.hidden).map(|_| rng.normal() as f32 * 0.5).collect(),
+    );
+    let mut kc = HostTensor::zeros(vec![hyper.max_seq, hyper.hidden]);
+    let mut vc = HostTensor::zeros(vec![hyper.max_seq, hyper.hidden]);
+    for i in 0..pos0 {
+        for j in 0..hyper.hidden {
+            kc.row_mut(i)[j] = rng.normal() as f32 * 0.3;
+            vc.row_mut(i)[j] = rng.normal() as f32 * 0.3;
+        }
+    }
+    let lw = &weights.layers[1];
+    let (ha, ka, va) = pjrt.attn(lw, &h, &kc, &vc, pos0).unwrap();
+    let (hb, kb, vb) = native.attn(lw, &h, &kc, &vc, pos0).unwrap();
+    assert_close(&ha, &hb, 3e-4, "attn h_out");
+    assert_close(&ka, &kb, 3e-4, "attn k_new");
+    assert_close(&va, &vb, 3e-4, "attn v_new");
+
+    let (xa, wa, ia) = pjrt.gate(lw, &h).unwrap();
+    let (xb, wb, ib) = native.gate(lw, &h).unwrap();
+    assert_close(&xa, &xb, 3e-4, "gate xln");
+    assert_close(&wa, &wb, 3e-4, "gate weights");
+    assert_eq!(ia, ib, "gate indices");
+}
+
+#[test]
+fn embed_and_lm_head_artifacts_match_native() {
+    let _guard = serial();
+    let Some(store) = store() else { return };
+    let hyper = store.manifest.model("gpt2_moe_mini").unwrap().clone();
+    let weights = ModelWeights::generate(&hyper, 13);
+    let pjrt = PjrtBackend::new(store.clone(), "gpt2_moe_mini").unwrap();
+    let native = NativeBackend { heads: hyper.heads, topk: hyper.topk };
+
+    let ids: Vec<i32> = (0..40).map(|i| (i * 7) % 256).collect();
+    let a = pjrt.embed(&weights, &ids, 3).unwrap();
+    let b = native.embed(&weights, &ids, 3).unwrap();
+    assert_close(&a, &b, 1e-4, "embed");
+
+    let mut rng = Rng::new(8);
+    let h = HostTensor::new(
+        vec![1, hyper.hidden],
+        (0..hyper.hidden).map(|_| rng.normal() as f32).collect(),
+    );
+    let la = pjrt.lm_head(&weights, &h).unwrap();
+    let lb = native.lm_head(&weights, &h).unwrap();
+    assert_close(&la, &lb, 5e-3, "lm_head logits");
+    // the decision that matters: argmax agreement
+    let am_a = remoe::model::reference::argmax(la.row(0));
+    let am_b = remoe::model::reference::argmax(lb.row(0));
+    assert_eq!(am_a, am_b, "lm_head argmax");
+}
+
+#[test]
+fn end_to_end_generation_pjrt_matches_native() {
+    let _guard = serial();
+    let Some(store) = store() else { return };
+    let model_name = "gpt2_moe_mini";
+    let mut pjrt_engine = Engine::pjrt(store.clone(), model_name, 21).unwrap();
+    let hyper = store.manifest.model(model_name).unwrap().clone();
+    let mut native_engine = Engine::native(hyper, 21);
+
+    let prompt: Vec<i32> = "the quick brown fox jumps over the lazy dog"
+        .bytes()
+        .map(|b| b as i32)
+        .collect();
+    let a = pjrt_engine.generate(&prompt, 8).unwrap();
+    let b = native_engine.generate(&prompt, 8).unwrap();
+    assert_eq!(a.tokens, b.tokens, "generated tokens differ");
+    assert_eq!(a.prefill_activations.counts, b.prefill_activations.counts);
+    assert_eq!(a.decode_activations.counts, b.decode_activations.counts);
+}
+
+#[test]
+fn dsv2_generation_with_shared_experts() {
+    let _guard = serial();
+    let Some(store) = store() else { return };
+    let mut engine = Engine::pjrt(store.clone(), "dsv2_mini", 31).unwrap();
+    let prompt: Vec<i32> = (40..90).collect();
+    let out = engine.generate(&prompt, 4).unwrap();
+    assert_eq!(out.tokens.len(), 4);
+    // every prefill token activates topk experts in every layer
+    let hyper = store.manifest.model("dsv2_mini").unwrap();
+    assert_eq!(
+        out.prefill_activations.total(),
+        (out.prompt_len * hyper.layers * hyper.topk) as f64
+    );
+}

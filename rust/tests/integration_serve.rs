@@ -1,0 +1,144 @@
+//! Integration: the full serving loop on the real PJRT request path,
+//! plus the platform simulator's billing/warm-pool semantics under a
+//! trace. Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use remoe::config::{CostDims, PlatformConfig, SlaConfig, SystemConfig};
+use remoe::coordinator::{build_history, serve_remoe, Planner};
+use remoe::model::Engine;
+use remoe::prediction::{SpsPredictor, TreeParams};
+use remoe::runtime::ArtifactStore;
+use remoe::serverless::{CostComponent, FunctionSpec, InvokeOverhead, Platform};
+use remoe::util::rng::Rng;
+use remoe::workload::corpus::{standard_corpora, Corpus};
+use remoe::workload::trace::{batch_trace, poisson_trace, TraceSpec};
+
+
+/// PJRT CPU clients are not safe to drive from concurrent test threads
+/// (multiple TfrtCpuClient instances share process-global state), so
+/// every test body takes this lock.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn pjrt_serve_loop_end_to_end() {
+    let _guard = serial();
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let store = Rc::new(ArtifactStore::open("artifacts").unwrap());
+    let mut engine = Engine::pjrt(store, "gpt2_moe_mini", 7).unwrap();
+    let dims = CostDims::gpt2_moe(engine.hyper.layers);
+    let cfg = SystemConfig::default();
+    let planner = Planner::new(&dims, &cfg, &SlaConfig::for_dims(&dims));
+
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let (train, test) = corpus.split(25, 3, 5);
+    let history = build_history(&mut engine, &train).unwrap();
+    let sps = SpsPredictor::build(
+        history,
+        5,
+        TreeParams { beta: 15, fanout: 3, ..TreeParams::default() },
+        &mut Rng::new(1),
+    );
+
+    let trace = batch_trace(&test, 8);
+    let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0).unwrap();
+    assert_eq!(agg.len(), 3);
+    assert!(agg.records[0].cold_start_s > 0.0, "first request pays cold start");
+    assert_eq!(agg.records[1].cold_start_s, 0.0, "warm pool hit");
+    for r in &agg.records {
+        assert!(r.cost > 0.0);
+        assert!(r.engine_wall_s > 0.0, "real compute must have happened");
+        assert!(r.tpot_s <= planner.sla.tpot_s * 2.0, "tpot runaway: {}", r.tpot_s);
+    }
+}
+
+#[test]
+fn poisson_trace_with_keepalive_expiry_recolds() {
+    let _guard = serial();
+    if !artifacts_available() {
+        return;
+    }
+    let store = Rc::new(ArtifactStore::open("artifacts").unwrap());
+    let mut engine = Engine::pjrt(store, "gpt2_moe_mini", 9).unwrap();
+    let dims = CostDims::gpt2_moe(engine.hyper.layers);
+    let cfg = SystemConfig::default();
+    let planner = Planner::new(&dims, &cfg, &SlaConfig::for_dims(&dims));
+
+    let corpus = Corpus::new(standard_corpora()[1].clone());
+    let (train, _) = corpus.split(20, 0, 6);
+    let history = build_history(&mut engine, &train).unwrap();
+    let sps = SpsPredictor::build(
+        history,
+        5,
+        TreeParams { beta: 15, fanout: 3, ..TreeParams::default() },
+        &mut Rng::new(2),
+    );
+
+    // ultra-sparse arrivals (mean gap 1000 s) with a 10 s keep-alive:
+    // every request must pay a cold start.
+    let trace = poisson_trace(
+        &corpus,
+        &TraceSpec { rate_per_s: 0.001, n_requests: 3, n_out: 6, seed: 8 },
+    );
+    let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 10.0).unwrap();
+    assert!(agg.records.iter().all(|r| r.cold_start_s > 0.0), "{:?}",
+        agg.records.iter().map(|r| r.cold_start_s).collect::<Vec<_>>());
+}
+
+#[test]
+fn platform_simulator_bills_remoe_topology() {
+    let _guard = serial();
+    let mut p = Platform::new(&PlatformConfig::default(), 5);
+    p.overhead_mode = InvokeOverhead::Expected;
+    p.deploy(FunctionSpec {
+        name: "main".into(),
+        mem_mb: 1000.0,
+        gpu_mb: 200.0,
+        footprint_mb: 700.0,
+        component: CostComponent::MainCpu,
+    });
+    for l in 0..4 {
+        p.deploy(FunctionSpec {
+            name: format!("experts-l{l}"),
+            mem_mb: 300.0,
+            gpu_mb: 0.0,
+            footprint_mb: 120.0,
+            component: CostComponent::RemoteExpertDecode,
+        });
+    }
+    // prefill: main + all expert functions in parallel
+    let calls: Vec<(String, f64, f64)> = std::iter::once(("main".to_string(), 0.8, 0.0))
+        .chain((0..4).map(|l| (format!("experts-l{l}"), 0.3, 64.0 * 1536.0)))
+        .collect();
+    let invs = p.invoke_parallel(&calls).unwrap();
+    assert_eq!(invs.len(), 5);
+    // wall clock = slowest function, not the sum
+    let wall = invs.iter().map(|i| i.finished_at).fold(0.0, f64::max)
+        - invs.iter().map(|i| i.queued_at).fold(f64::INFINITY, f64::min);
+    let sum: f64 = invs.iter().map(|i| i.finished_at - i.queued_at).sum();
+    assert!(wall < sum);
+
+    let by = p.billing.by_component();
+    assert!(by[&CostComponent::MainCpu] > 0.0);
+    assert!(by[&CostComponent::MainGpu] > 0.0);
+    assert!(by[&CostComponent::RemoteExpertDecode] > 0.0);
+
+    // decode: 6 sequential single-token rounds on warm functions
+    let before = p.billing.total();
+    for _ in 0..6 {
+        p.invoke("experts-l0", 0.004, 1536.0).unwrap();
+    }
+    assert!(p.billing.total() > before);
+    assert_eq!(p.warm_count("experts-l0"), 1);
+}

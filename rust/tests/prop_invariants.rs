@@ -1,0 +1,252 @@
+//! Cross-module property tests: randomized invariants over the
+//! algorithms and models (our mini property framework; cases scale
+//! with REMOE_PROP_CASES).
+
+use remoe::allocation::{corollary1_bound, theorem1_bound, Mmp};
+use remoe::config::{CostDims, PlatformConfig, SlaConfig};
+use remoe::costmodel::{CostModel, DeploymentPlan, LatencyModel, RequestProfile};
+use remoe::optimizer::{fit_exp_curve, solve, GTerm, LayerTerm};
+use remoe::partition::{lpt, lpt_ratio_bound, optimal};
+use remoe::prediction::{jsd, kmedoids, scs, scs_distance, Signature};
+use remoe::runtime::HostTensor;
+use remoe::selection::select_remote;
+use remoe::serverless::PerfModel;
+use remoe::util::prop::{small_size, Prop};
+use remoe::util::rng::Rng;
+
+fn random_dist(rng: &mut Rng, layers: usize, experts: usize) -> Vec<Vec<f64>> {
+    (0..layers)
+        .map(|_| {
+            let mut row: Vec<f64> = (0..experts).map(|_| rng.f64() + 0.01).collect();
+            let s: f64 = row.iter().sum();
+            row.iter_mut().for_each(|v| *v /= s);
+            row
+        })
+        .collect()
+}
+
+#[test]
+fn prop_selection_picks_exactly_b_lowest_utility() {
+    Prop::new("selection cardinality + minimality").check(|rng, _| {
+        let layers = small_size(rng, 1, 6);
+        let experts = small_size(rng, 2, 16);
+        let b = rng.range_u(0, experts);
+        let dist = random_dist(rng, layers, experts);
+        let flags = select_remote(&dist, 64, 32, 2, b);
+        for (l, row) in flags.iter().enumerate() {
+            assert_eq!(row.iter().filter(|&&f| f).count(), b);
+            // no local expert has lower mass than a remote one
+            let max_remote =
+                (0..experts).filter(|&k| row[k]).map(|k| dist[l][k]).fold(0.0, f64::max);
+            let min_local = (0..experts)
+                .filter(|&k| !row[k])
+                .map(|k| dist[l][k])
+                .fold(f64::INFINITY, f64::min);
+            assert!(max_remote <= min_local + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_cost_monotone_in_duration_and_memory() {
+    Prop::new("cost monotonicity").check(|rng, _| {
+        let dims = CostDims::gpt2_moe(4);
+        let platform = PlatformConfig::default();
+        let cm = CostModel::new(&dims, &platform);
+        let lm = LatencyModel::new(&dims, &platform);
+        let dist = random_dist(rng, 4, 8);
+        let n_out = small_size(rng, 1, 64);
+        let profile = RequestProfile::from_distribution(&dist, 64, n_out, 2);
+        let mem1 = rng.range_f64(500.0, 2000.0);
+        let plan1 = DeploymentPlan::all_local(4, 8, mem1);
+        let plan2 = DeploymentPlan::all_local(4, 8, mem1 + 500.0);
+        let lb = lm.evaluate(&plan1, &profile, 0.0);
+        let c1 = cm.evaluate(&plan1, &profile, &lb, &lm);
+        // same latency, more memory ⇒ strictly more main cost
+        let c2 = cm.evaluate(&plan2, &profile, &lb, &lm);
+        assert!(c2.main_cpu > c1.main_cpu);
+        // longer decode ⇒ more cost at same plan
+        let mut lb_long = lb.clone();
+        lb_long.decode_s += 1.0;
+        let c3 = cm.evaluate(&plan1, &profile, &lb_long, &lm);
+        assert!(c3.main() > c1.main());
+    });
+}
+
+#[test]
+fn prop_theorem1_bounds_order_and_coverage() {
+    Prop::new("theorem1/corollary1 structure").check(|rng, _| {
+        let n = small_size(rng, 4, 512) as f64;
+        let k = small_size(rng, 2, 64);
+        let m = rng.range_u(1, k);
+        // corollary dominates theorem, both dominate the mean
+        assert!(corollary1_bound(n, m, k) >= theorem1_bound(n, k) - 1e-12);
+        assert!(theorem1_bound(n, k) > n / k as f64);
+        // sub-additivity sanity: bound never exceeds n + slack
+        assert!(corollary1_bound(n, k, k) <= n + (3.0 * n).sqrt());
+    });
+}
+
+#[test]
+fn prop_lpt_validity_and_bound_random_instances() {
+    Prop::new("LPT vs optimal on random instances").with_cases(40).check(|rng, _| {
+        let n = small_size(rng, 1, 11);
+        let bins = rng.range_u(1, 4);
+        let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.01, 5.0)).collect();
+        let l = lpt(&w, bins);
+        let o = optimal(&w, bins);
+        assert!(l.validate(n));
+        assert!(l.makespan() <= lpt_ratio_bound(bins) * o.makespan() + 1e-9);
+        // lower bounds: max weight and mean load
+        let maxw = w.iter().cloned().fold(0.0, f64::max);
+        let mean = w.iter().sum::<f64>() / bins as f64;
+        assert!(o.makespan() >= maxw - 1e-12);
+        assert!(o.makespan() >= mean - 1e-9);
+    });
+}
+
+#[test]
+fn prop_dual_solution_feasible_and_boxed() {
+    Prop::new("Lagrangian solution within box, KKT holds").with_cases(30).check(|rng, _| {
+        let dims = CostDims::gpt2_moe(4);
+        let perf = PerfModel::from_dims(&dims, &PlatformConfig::default());
+        let profile = perf.profile_decode_latency(2, &dims.remote_specs.specs());
+        let curve = fit_exp_curve(&profile);
+        let layers: Vec<LayerTerm> = (0..small_size(rng, 1, 6))
+            .map(|_| {
+                let s = rng.range_f64(0.05, 0.9);
+                LayerTerm {
+                    g: GTerm {
+                        curve,
+                        h_w: rng.range_f64(1000.0, 8000.0),
+                        c_c: 1.0,
+                        t_rem_over_s: 0.007 / s,
+                    },
+                    s_tilde: s,
+                    fixed_decode_s: 2.0 * s * 0.0071,
+                    kernel_mass: 2.0 * s,
+                    lo: 200.0,
+                    hi: 2000.0,
+                }
+            })
+            .collect();
+        let budget = rng.range_f64(0.001, 0.5);
+        let sol = solve(&layers, 0.1, budget);
+        for (l, &y) in layers.iter().zip(&sol.y) {
+            assert!(y >= l.lo - 1e-6 && y <= l.hi + 1e-6);
+        }
+        if sol.feasible {
+            let decode: f64 = layers.iter().zip(&sol.y).map(|(l, &y)| l.decode_time(y)).sum();
+            assert!(decode <= budget + 1e-6);
+            assert!(sol.kkt_residual < 1e-2, "kkt {}", sol.kkt_residual);
+        }
+    });
+}
+
+#[test]
+fn prop_mmp_decision_always_valid() {
+    Prop::new("MMP returns catalog specs + consistent ratio").with_cases(30).check(|rng, _| {
+        let dims = CostDims::gpt2_moe(4);
+        let platform = PlatformConfig::default();
+        let sla = SlaConfig {
+            ttft_s: rng.range_f64(3.0, 30.0),
+            tpot_s: rng.range_f64(0.02, 0.5),
+        };
+        let mmp = Mmp::new(&dims, &platform, &sla, 0.1);
+        let n_in = small_size(rng, 8, 128);
+        let n_out = small_size(rng, 4, 64);
+        let d = mmp.run(n_in, n_out);
+        assert!((0.0..=1.0).contains(&d.remote_ratio));
+        assert!(d.remote_per_layer <= dims.experts);
+        assert!(d.main_mem_mb >= dims.main_specs.min_mb - 1e-9);
+        assert!(d.main_mem_mb <= dims.main_specs.max_mb + 1e-9);
+        // spec grid alignment
+        let steps = (d.main_mem_mb - dims.main_specs.min_mb) / dims.main_specs.step_mb;
+        assert!((steps - steps.round()).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_scs_is_a_similarity_and_jsd_a_divergence() {
+    Prop::new("scs/jsd metric axioms").check(|rng, _| {
+        let h = 16;
+        let wte = HostTensor::new(
+            vec![64, h],
+            (0..64 * h).map(|_| rng.normal() as f32).collect(),
+        );
+        let n1 = small_size(rng, 1, 20);
+        let n2 = small_size(rng, 1, 20);
+        let a: Vec<i32> = (0..n1).map(|_| rng.below(64) as i32).collect();
+        let b: Vec<i32> = (0..n2).map(|_| rng.below(64) as i32).collect();
+        let sa = Signature::from_tokens(&a, &wte);
+        let sb = Signature::from_tokens(&b, &wte);
+        assert!((scs(&sa, &sb) - scs(&sb, &sa)).abs() < 1e-12);
+        assert!((scs(&sa, &sa) - 1.0).abs() < 1e-6);
+        assert!(scs_distance(&sa, &sb) >= -1e-9);
+
+        let k = small_size(rng, 2, 12);
+        let p: Vec<f64> = (0..k).map(|_| rng.f64() + 0.01).collect();
+        let q: Vec<f64> = (0..k).map(|_| rng.f64() + 0.01).collect();
+        let d = jsd(&p, &q);
+        assert!((0.0..=std::f64::consts::LN_2 + 1e-12).contains(&d));
+        assert!((jsd(&p, &q) - jsd(&q, &p)).abs() < 1e-12);
+        assert!(jsd(&p, &p) < 1e-12);
+    });
+}
+
+#[test]
+fn prop_kmedoids_partitions_points() {
+    Prop::new("k-medoids covers all points").check(|rng, case| {
+        let n = small_size(rng, 2, 40);
+        let k = rng.range_u(1, n.min(6));
+        let coords: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 100.0)).collect();
+        let points: Vec<usize> = (0..n).collect();
+        let dist = |a: usize, b: usize| (coords[a] - coords[b]).abs();
+        let c = kmedoids(&points, k, &dist, &mut Rng::new(case as u64), 10);
+        assert_eq!(c.assignment.len(), n);
+        assert!(c.assignment.iter().all(|&a| a < k));
+        assert_eq!(c.medoids.len(), k);
+        // every point's medoid is the nearest one
+        for i in 0..n {
+            let assigned = dist(points[i], points[c.medoids[c.assignment[i]]]);
+            for (cl, &m) in c.medoids.iter().enumerate() {
+                let _ = cl;
+                assert!(assigned <= dist(points[i], points[m]) + 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_deployment_plan_from_planner_always_validates() {
+    Prop::new("planner plans validate + respect catalogs").with_cases(12).check(|rng, _| {
+        use remoe::config::SystemConfig;
+        use remoe::coordinator::Planner;
+        let dims = CostDims::gpt2_moe(4);
+        let sla = SlaConfig::for_dims(&dims);
+        let planner = Planner::new(&dims, &SystemConfig::default(), &sla);
+        let dist = random_dist(rng, 4, 8);
+        let n_in = small_size(rng, 16, 128);
+        let n_out = small_size(rng, 4, 48);
+        let out = planner.plan(&dist, n_in, n_out);
+        out.plan.validate().unwrap();
+        for l in 0..4 {
+            if out.plan.remote_count(l) > 0 {
+                assert!(out.plan.remote_mem_mb[l] >= dims.remote_specs.min_mb - 1e-9);
+                assert!(out.plan.remote_mem_mb[l] <= dims.remote_specs.max_mb + 1e-9);
+                assert!(out.plan.replicas[l] >= 1);
+                assert!(out.plan.replicas[l] <= planner.platform.zmax);
+                // payload constraint (10g): per-replica prefill tokens fit
+                let profile = RequestProfile::from_distribution(&dist, n_in, n_out, 2);
+                for part in &out.plan.partitions[l] {
+                    let tokens: f64 =
+                        part.iter().map(|&k| profile.prefill_counts[l][k]).sum();
+                    assert!(
+                        tokens * dims.token_bytes <= planner.platform.payload_limit_bytes,
+                        "payload violated"
+                    );
+                }
+            }
+        }
+    });
+}
