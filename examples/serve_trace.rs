@@ -1,20 +1,23 @@
-//! End-to-end serving driver (the mandated E2E validation): load the
-//! real gpt2-moe-mini artifacts, serve a batched Poisson trace through
-//! the full Remoe pipeline on the PJRT request path, and report
-//! latency / throughput / cost vs all four baselines.
+//! End-to-end serving driver: serve a concurrent Poisson trace through
+//! the event-driven scheduler — every function lifecycle (main model,
+//! remote experts, replicas) runs on the `serverless::Platform`
+//! simulator, so queueing delay, cold starts and keep-alive emerge
+//! from contention. All four baselines are served through the *same*
+//! scheduler on the *same* trace for a like-for-like comparison.
 //!
-//!     make artifacts && cargo run --release --example serve_trace
+//!     cargo run --release --example serve_trace [n_requests] [rate_per_s]
 //!
-//! Results of this run are recorded in EXPERIMENTS.md.
+//! Executes on PJRT when artifacts are present (`make artifacts`),
+//! otherwise on the numerically-identical native reference backend.
 
 use std::rc::Rc;
 
-use remoe::baselines::{BaselineEvaluator, Strategy};
+use remoe::baselines::{serve_baseline_profiles, BaselineEvaluator, Strategy};
 use remoe::config::{CostDims, SlaConfig, SystemConfig};
-use remoe::coordinator::{build_history, serve_remoe, Planner};
+use remoe::coordinator::{build_history, prompt_ids, serve_remoe_with, Planner, ServeOptions};
 use remoe::costmodel::RequestProfile;
-use remoe::metrics::{fmt_f, Table};
-use remoe::model::Engine;
+use remoe::metrics::{fmt_f, Aggregator, Table};
+use remoe::model::{self, Backend, Engine};
 use remoe::prediction::{SpsPredictor, TreeParams};
 use remoe::runtime::ArtifactStore;
 use remoe::util::rng::Rng;
@@ -24,20 +27,38 @@ use remoe::workload::trace::{poisson_trace, TraceSpec};
 fn main() -> anyhow::Result<()> {
     let model_name = "gpt2_moe_mini";
     let n_requests = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(20);
+    let rate_per_s = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(0.5);
     let n_out = 32;
 
-    let store = Rc::new(ArtifactStore::open("artifacts")?);
-    let mut engine = Engine::pjrt(store, model_name, 7)?;
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let store = Rc::new(ArtifactStore::open("artifacts")?);
+        let mut engine = Engine::pjrt(store, model_name, 7)?;
+        eprintln!("engine: PJRT ({model_name})");
+        run(&mut engine, n_requests, rate_per_s, n_out)
+    } else {
+        let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+        eprintln!("engine: native reference (artifacts not built; run `make artifacts` for PJRT)");
+        run(&mut engine, n_requests, rate_per_s, n_out)
+    }
+}
+
+fn run<B: Backend>(
+    engine: &mut Engine<B>,
+    n_requests: usize,
+    rate_per_s: f64,
+    n_out: usize,
+) -> anyhow::Result<()> {
     let dims = CostDims::gpt2_moe(engine.hyper.layers);
     let cfg = SystemConfig::default();
     let sla = SlaConfig::for_dims(&dims);
     let planner = Planner::new(&dims, &cfg, &sla);
+    let ev = BaselineEvaluator::new(&dims, &cfg.platform);
 
     // offline: history + SPS tree
     let corpus = Corpus::new(standard_corpora()[0].clone());
     let (train, _) = corpus.split(150, 0, 11);
-    eprintln!("building history over {} prompts (real PJRT prefills)…", train.len());
-    let history = build_history(&mut engine, &train)?;
+    eprintln!("building history over {} prompts…", train.len());
+    let history = build_history(engine, &train)?;
     let sps = SpsPredictor::build(
         history,
         10,
@@ -45,55 +66,65 @@ fn main() -> anyhow::Result<()> {
         &mut Rng::new(3),
     );
 
-    // the trace
+    // the open-loop trace: bursty enough that arrivals overlap
     let trace = poisson_trace(
         &corpus,
-        &TraceSpec { rate_per_s: 0.05, n_requests, n_out, seed: 13 },
+        &TraceSpec { rate_per_s, n_requests, n_out, seed: 13 },
     );
-    eprintln!("serving {n_requests} requests through Remoe (PJRT)…");
+    let opts = ServeOptions::default();
+
+    eprintln!("serving {n_requests} requests (Poisson {rate_per_s}/s) through every strategy…");
     let t0 = std::time::Instant::now();
-    let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0)?;
+    let remoe = serve_remoe_with(engine, &planner, &sps, &trace, &opts)?;
     let wall = t0.elapsed().as_secs_f64();
 
-    // baseline comparison on the same measured profiles
-    eprintln!("scoring baselines on the same requests…");
-    let ev = BaselineEvaluator::new(&dims, &cfg.platform);
-    let mut baseline_cost = vec![0.0f64; 4];
-    for req in &trace {
-        let ids = remoe::coordinator::prompt_ids(&engine, &req.prompt.text);
-        let gen = engine.generate(&ids, n_out)?;
-        let profile = RequestProfile::from_generation(&gen);
-        for (i, s) in Strategy::all_baselines().iter().enumerate() {
-            baseline_cost[i] += ev.evaluate(*s, &profile).cost;
-        }
-    }
-
-    let mut t = Table::new(&["strategy", "total cost", "mean ttft (s)", "mean tpot (s)"]);
-    for (i, s) in Strategy::all_baselines().iter().enumerate() {
-        t.row(vec![s.name().into(), fmt_f(baseline_cost[i], 1), "-".into(), "-".into()]);
-    }
-    t.row(vec![
-        "Remoe".into(),
-        fmt_f(agg.total_cost(), 1),
-        fmt_f(agg.ttft_summary().mean, 2),
-        fmt_f(agg.tpot_summary().mean, 4),
+    let mut t = Table::new(&[
+        "strategy", "total cost", "mean ttft (s)", "mean tpot (s)", "mean queue (s)",
+        "cold starts",
     ]);
+    let row = |agg: &Aggregator| -> Vec<String> {
+        vec![
+            agg.records[0].strategy.to_string(),
+            fmt_f(agg.total_cost(), 1),
+            fmt_f(agg.ttft_summary().mean, 2),
+            fmt_f(agg.tpot_summary().mean, 4),
+            fmt_f(agg.queue_delay_summary().mean, 2),
+            agg.cold_paid().to_string(),
+        ]
+    };
+    // measure routing once per request; every baseline scores the
+    // same profiles instead of re-running the engine per strategy
+    let mut profiles = Vec::with_capacity(trace.len());
+    for req in &trace {
+        let ids = prompt_ids(engine, &req.prompt.text);
+        let gen = engine.generate(&ids, req.n_out)?;
+        profiles.push(RequestProfile::from_generation(&gen));
+    }
+    let mut best_baseline = f64::INFINITY;
+    for s in Strategy::all_baselines() {
+        let agg = serve_baseline_profiles(&ev, s, &trace, &profiles, &opts)?;
+        best_baseline = best_baseline.min(agg.total_cost());
+        t.row(row(&agg));
+    }
+    t.row(row(&remoe));
     t.print();
 
     println!(
-        "\nE2E: {} requests in {:.1}s wall  |  engine {:.2} req/s, {:.0} tok/s  |  \
-         mean calc {:.4}s  |  cold starts paid: {}",
-        agg.len(),
+        "\nE2E: {} requests in {:.1}s wall  |  virtual makespan {:.1}s  |  \
+         engine {:.2} req/s, {:.0} tok/s  |  mean calc {:.4}s  |  \
+         mean concurrency {:.1}  |  cold starts paid: {}",
+        remoe.len(),
         wall,
-        agg.engine_throughput(),
-        agg.token_throughput(),
-        agg.records.iter().map(|r| r.calc_time_s).sum::<f64>() / agg.len() as f64,
-        agg.records.iter().filter(|r| r.cold_start_s > 0.0).count(),
+        remoe.makespan_s(),
+        remoe.engine_throughput(),
+        remoe.token_throughput(),
+        remoe.records.iter().map(|r| r.calc_time_s).sum::<f64>() / remoe.len() as f64,
+        remoe.mean_concurrency(),
+        remoe.cold_paid(),
     );
-    let best_baseline = baseline_cost.iter().cloned().fold(f64::INFINITY, f64::min);
     println!(
         "Remoe cost vs best baseline: {:+.1}%",
-        (agg.total_cost() / best_baseline - 1.0) * 100.0
+        (remoe.total_cost() / best_baseline - 1.0) * 100.0
     );
     Ok(())
 }

@@ -3,11 +3,24 @@
 //! Remoe itself for uniform evaluation.
 //!
 //! Each strategy is scored on the same `RequestProfile` through the
-//! paper's pricing rules, so Fig. 9/10/11 compare like for like.
+//! paper's pricing rules, so Fig. 9/10/11 compare like for like. For
+//! serving experiments, [`BaselinePolicy`] adapts each baseline to the
+//! event-driven scheduler (`coordinator::serve`) as one monolithic
+//! function, so Remoe and the baselines queue, cold-start and bill on
+//! the *same* platform simulator under identical contention.
+
+use std::time::Instant;
+
+use anyhow::Result;
 
 use crate::config::{CostDims, PlatformConfig};
+use crate::coordinator::serve::{serve_on_platform, ServeOptions, ServePolicy, ServicePlan};
+use crate::coordinator::prompt_ids;
 use crate::costmodel::{DeploymentPlan, LatencyModel, RequestProfile};
-use crate::serverless::{ColdStartModel, PerfModel};
+use crate::metrics::Aggregator;
+use crate::model::{Backend, Engine};
+use crate::serverless::{ColdStartModel, PerfModel, Platform};
+use crate::workload::trace::Request;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
@@ -251,6 +264,125 @@ impl BaselineEvaluator {
     }
 }
 
+/// A §V-C baseline as a [`ServePolicy`]: the whole model in one
+/// monolithic function whose per-second burn rate reproduces the
+/// strategy's analytic cost on its analytic service time, so the
+/// platform's ledger (including cold-start billing and queueing)
+/// extends the closed-form comparison to concurrent traces.
+pub struct BaselinePolicy<'a, B: Backend> {
+    pub engine: &'a mut Engine<B>,
+    pub ev: &'a BaselineEvaluator,
+    pub strategy: Strategy,
+}
+
+/// Score one measured profile as a monolithic-function service plan.
+fn baseline_service_plan(
+    ev: &BaselineEvaluator,
+    strategy: Strategy,
+    profile: &RequestProfile,
+    engine_wall_s: f64,
+) -> ServicePlan {
+    let o = ev.evaluate(strategy, profile);
+    let duration = o.prefill_s + o.decode_s;
+    // equivalent CPU-rate memory whose duration-proportional bill
+    // equals the strategy's analytic cost
+    let burn_mb = o.cost / (duration * ev.platform.cpu_rate_per_mb_s);
+    ServicePlan {
+        n_in: profile.n_in,
+        n_out: profile.n_out,
+        prefill_s: o.prefill_s,
+        decode_s: o.decode_s,
+        main_mem_mb: burn_mb,
+        main_gpu_mb: 0.0,
+        main_footprint_mb: ev.dims.total_expert_mb() + ev.dims.total_nonexpert_mb(),
+        remote: Vec::new(),
+        calc_time_s: 0.0,
+        engine_wall_s,
+    }
+}
+
+impl<'a, B: Backend> ServePolicy for BaselinePolicy<'a, B> {
+    fn strategy(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    fn plan(&mut self, req: &Request) -> Result<ServicePlan> {
+        let ids = prompt_ids(self.engine, &req.prompt.text);
+        let t0 = Instant::now();
+        let gen = self.engine.generate(&ids, req.n_out)?;
+        let engine_wall_s = t0.elapsed().as_secs_f64();
+        let profile = RequestProfile::from_generation(&gen);
+        Ok(baseline_service_plan(self.ev, self.strategy, &profile, engine_wall_s))
+    }
+}
+
+/// [`BaselinePolicy`] over *precomputed* measured profiles (indexed by
+/// request id): generate once per request, score every strategy from
+/// the shared routing instead of re-running the engine per strategy.
+pub struct BaselineProfilePolicy<'a> {
+    pub ev: &'a BaselineEvaluator,
+    pub strategy: Strategy,
+    pub profiles: &'a [RequestProfile],
+}
+
+impl<'a> ServePolicy for BaselineProfilePolicy<'a> {
+    fn strategy(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    fn plan(&mut self, req: &Request) -> Result<ServicePlan> {
+        let profile = self
+            .profiles
+            .get(req.id)
+            .ok_or_else(|| anyhow::anyhow!("no precomputed profile for request {}", req.id))?;
+        Ok(baseline_service_plan(self.ev, self.strategy, profile, 0.0))
+    }
+}
+
+fn ensure_not_remoe(strategy: Strategy) -> Result<()> {
+    anyhow::ensure!(
+        strategy != Strategy::Remoe,
+        "Remoe is served by coordinator::serve_remoe"
+    );
+    Ok(())
+}
+
+/// Serve a trace with a monolithic baseline strategy through the same
+/// event-driven platform the Remoe scheduler uses.
+pub fn serve_baseline<B: Backend>(
+    engine: &mut Engine<B>,
+    ev: &BaselineEvaluator,
+    strategy: Strategy,
+    trace: &[Request],
+    opts: &ServeOptions,
+) -> Result<Aggregator> {
+    ensure_not_remoe(strategy)?;
+    let mut platform = Platform::new(&ev.platform, opts.seed);
+    let mut policy = BaselinePolicy { engine, ev, strategy };
+    serve_on_platform(&mut policy, trace, &mut platform, opts)
+}
+
+/// Like [`serve_baseline`] but over measured profiles computed once
+/// for the whole trace (`profiles[i]` belongs to request id `i`).
+pub fn serve_baseline_profiles(
+    ev: &BaselineEvaluator,
+    strategy: Strategy,
+    trace: &[Request],
+    profiles: &[RequestProfile],
+    opts: &ServeOptions,
+) -> Result<Aggregator> {
+    ensure_not_remoe(strategy)?;
+    anyhow::ensure!(
+        profiles.len() >= trace.len(),
+        "need one profile per request ({} < {})",
+        profiles.len(),
+        trace.len()
+    );
+    let mut platform = Platform::new(&ev.platform, opts.seed);
+    let mut policy = BaselineProfilePolicy { ev, strategy, profiles };
+    serve_on_platform(&mut policy, trace, &mut platform, opts)
+}
+
 fn outcome(
     strategy: Strategy,
     cost: f64,
@@ -345,6 +477,26 @@ mod tests {
             assert!(o.ttft_s > 0.0 && o.tpot_s > 0.0, "{s:?}");
             assert!(o.cold_start_s > 0.0, "{s:?}");
         }
+    }
+
+    #[test]
+    fn baseline_serving_through_the_scheduler() {
+        use crate::workload::corpus::{standard_corpora, Corpus};
+        use crate::workload::trace::batch_trace;
+        let mut engine = crate::model::Engine::native(crate::model::gpt2_moe_mini(), 7);
+        let dims = CostDims::gpt2_moe(4);
+        let ev = BaselineEvaluator::new(&dims, &PlatformConfig::default());
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = corpus.split(0, 3, 5);
+        let trace = batch_trace(&test, 8);
+        let opts = ServeOptions::default();
+        let agg = serve_baseline(&mut engine, &ev, Strategy::Mix, &trace, &opts).unwrap();
+        assert_eq!(agg.len(), 3);
+        assert!(agg.records[0].cold_start_s > 0.0, "first hit is cold");
+        assert_eq!(agg.records[1].main_cold_s, 0.0, "warm-pool hit");
+        assert!(agg.records[1].queue_delay_s > 0.0, "batch arrivals queue");
+        assert!(agg.records.iter().all(|r| r.cost > 0.0));
+        assert!(serve_baseline(&mut engine, &ev, Strategy::Remoe, &trace, &opts).is_err());
     }
 
     #[test]

@@ -1,7 +1,15 @@
 //! The Remoe coordinator (§IV-A): request lifecycle steps i–v —
 //! activation prediction, resource pre-allocation, remote-expert
 //! selection, memory optimization, multi-replica inference — plus the
-//! serving loop and the offline history builder.
+//! event-driven serving scheduler and the offline history builder.
+//!
+//! Serving runs through [`serve::serve_on_platform`]: a virtual-time
+//! event queue admits requests at their arrival times and drives the
+//! main-model and remote-expert function lifecycles through
+//! `serverless::Platform`, so queueing delay, cold starts, keep-alive
+//! and scale-out emerge from the simulator. Baselines implement the
+//! same [`serve::ServePolicy`] contract (see `baselines`), putting
+//! every strategy under identical contention.
 
 pub mod history;
 pub mod planner;
@@ -9,4 +17,7 @@ pub mod serve;
 
 pub use history::{build_history, ground_truth, prompt_ids, prompt_signature};
 pub use planner::{PlanOutput, Planner};
-pub use serve::{serve_remoe, WarmState};
+pub use serve::{
+    serve_on_platform, serve_remoe, serve_remoe_with, RemoePolicy, RemoteLayerCall,
+    ServeOptions, ServePolicy, ServicePlan,
+};

@@ -13,8 +13,10 @@ pub use common::Scale;
 
 use anyhow::{bail, Result};
 
-pub const ALL: &[&str] =
-    &["table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "summary"];
+pub const ALL: &[&str] = &[
+    "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11",
+    "serving", "summary",
+];
 
 /// Run one experiment by id.
 pub fn run(id: &str, scale: Scale) -> Result<()> {
@@ -29,6 +31,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "fig9" => overall_exps::fig9(scale),
         "fig10" => overall_exps::fig10(scale),
         "fig11" => overall_exps::fig11(scale),
+        "serving" => overall_exps::serving(scale),
         "summary" => overall_exps::summary(scale),
         "all" => {
             for id in ALL {

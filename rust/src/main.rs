@@ -18,10 +18,10 @@ use anyhow::{bail, Result};
 
 use remoe::baselines::Strategy;
 use remoe::config::{CostDims, SlaConfig, SystemConfig};
-use remoe::coordinator::{build_history, serve_remoe, Planner};
+use remoe::coordinator::{build_history, serve_remoe_with, Planner, ServeOptions};
 use remoe::experiments::{self, Scale};
 use remoe::metrics::{fmt_f, Table};
-use remoe::model::{self, Engine};
+use remoe::model::{self, Backend, Engine};
 use remoe::prediction::{SpsPredictor, TreeParams};
 use remoe::runtime::ArtifactStore;
 use remoe::util::cli::Args;
@@ -83,7 +83,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.f64_or("rate", 0.05);
     let n_out = args.usize_or("n-out", 32);
     let seed = args.u64_or("seed", 7);
-    let (_hyper, dims) = dims_for(model_name)?;
+    let (hyper, dims) = dims_for(model_name)?;
+    let opts = ServeOptions {
+        keepalive_s: args.f64_or("keepalive", 60.0),
+        main_instances: args.usize_or("instances", 1),
+        ..ServeOptions::default()
+    };
 
     let cfg = SystemConfig::default();
     let sla = SlaConfig::for_dims(&dims);
@@ -91,28 +96,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let corpus = Corpus::new(standard_corpora()[0].clone());
     let (train, _) = corpus.split(120, 0, seed);
-
-    println!("loading artifacts + building SPS history ({} prompts)…", train.len());
-    let store = Rc::new(ArtifactStore::open("artifacts")?);
-    let mut engine = Engine::pjrt(store, model_name, seed)?;
-    let history = build_history(&mut engine, &train)?;
-    let params = TreeParams { beta: 40, fanout: 4, ..TreeParams::default() };
-    let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
-
     let trace = poisson_trace(
         &corpus,
         &TraceSpec { rate_per_s: rate, n_requests, n_out, seed },
     );
-    println!("serving {n_requests} requests (Poisson rate {rate}/s) through Remoe on PJRT…");
-    let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0)?;
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("loading artifacts + building SPS history ({} prompts)…", train.len());
+        let store = Rc::new(ArtifactStore::open("artifacts")?);
+        let mut engine = Engine::pjrt(store, model_name, seed)?;
+        println!("serving {n_requests} requests (Poisson rate {rate}/s) through Remoe on PJRT…");
+        serve_and_report(&mut engine, &planner, &train, &trace, &opts, seed)
+    } else {
+        println!(
+            "artifacts not built (`make artifacts`) — serving on the native reference backend"
+        );
+        let mut engine = Engine::native(hyper, seed);
+        println!("serving {n_requests} requests (Poisson rate {rate}/s) through Remoe…");
+        serve_and_report(&mut engine, &planner, &train, &trace, &opts, seed)
+    }
+}
+
+fn serve_and_report<B: Backend>(
+    engine: &mut Engine<B>,
+    planner: &Planner,
+    train: &[remoe::workload::corpus::Prompt],
+    trace: &[remoe::workload::trace::Request],
+    opts: &ServeOptions,
+    seed: u64,
+) -> Result<()> {
+    let history = build_history(engine, train)?;
+    let params = TreeParams { beta: 40, fanout: 4, ..TreeParams::default() };
+    let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
+    let agg = serve_remoe_with(engine, planner, &sps, trace, opts)?;
 
     let mut t = Table::new(&[
-        "req", "n_in", "ttft (s)", "tpot (s)", "cost", "cold (s)", "calc (s)", "engine (s)",
+        "req", "n_in", "queue (s)", "ttft (s)", "tpot (s)", "cost", "cold (s)", "calc (s)",
+        "engine (s)",
     ]);
     for r in &agg.records {
         t.row(vec![
             r.id.to_string(),
             r.n_in.to_string(),
+            fmt_f(r.queue_delay_s, 2),
             fmt_f(r.ttft_s, 2),
             fmt_f(r.tpot_s, 4),
             fmt_f(r.cost, 1),
@@ -123,10 +149,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     t.print();
     println!(
-        "totals: cost={:.1}  mean ttft={:.2}s  mean tpot={:.4}s  engine throughput={:.2} req/s ({:.0} tok/s)",
+        "totals: cost={:.1}  mean ttft={:.2}s  mean tpot={:.4}s  mean queue={:.2}s  \
+         cold starts={}  makespan={:.1}s  engine throughput={:.2} req/s ({:.0} tok/s)",
         agg.total_cost(),
         agg.ttft_summary().mean,
         agg.tpot_summary().mean,
+        agg.queue_delay_summary().mean,
+        agg.cold_paid(),
+        agg.makespan_s(),
         agg.engine_throughput(),
         agg.token_throughput(),
     );

@@ -4,6 +4,11 @@
 use crate::util::stats::{summarize, Summary};
 
 /// One served request's outcome.
+///
+/// Virtual-time fields (everything except `calc_time_s` and
+/// `engine_wall_s`) come from the event-driven scheduler over the
+/// platform simulator and are bit-deterministic for a fixed seed —
+/// see [`Aggregator::canonical`].
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: usize,
@@ -13,10 +18,35 @@ pub struct RequestRecord {
     pub ttft_s: f64,
     pub tpot_s: f64,
     pub cost: f64,
+    /// Effective cold start visible to this request: max over the
+    /// main-model and remote-expert functions started for it.
     pub cold_start_s: f64,
     pub calc_time_s: f64,
     /// Wall time of the real engine computation (PJRT path), if run.
     pub engine_wall_s: f64,
+    /// Virtual arrival time (open-loop trace).
+    pub arrival_s: f64,
+    /// Time spent waiting for a free main-model instance.
+    pub queue_delay_s: f64,
+    /// Virtual time the main-model function started executing.
+    pub start_s: f64,
+    /// Virtual completion time.
+    pub finish_s: f64,
+    /// Cold start paid by the main-model function alone (0 on a
+    /// warm-pool hit).
+    pub main_cold_s: f64,
+    /// Main-model instance that served the request.
+    pub instance: u64,
+    /// Requests in flight (admitted, not finished) at this arrival,
+    /// including this one.
+    pub concurrency: usize,
+}
+
+impl RequestRecord {
+    /// End-to-end latency: queueing + cold start + prefill + decode.
+    pub fn e2e_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
 }
 
 /// Aggregation over a run.
@@ -44,6 +74,63 @@ impl Aggregator {
 
     pub fn cost_summary(&self) -> Summary {
         summarize(&self.field(|r| r.cost))
+    }
+
+    pub fn queue_delay_summary(&self) -> Summary {
+        summarize(&self.field(|r| r.queue_delay_s))
+    }
+
+    /// Mean number of in-flight requests observed at admission.
+    pub fn mean_concurrency(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.concurrency as f64).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// Requests that paid any cold start.
+    pub fn cold_paid(&self) -> usize {
+        self.records.iter().filter(|r| r.cold_start_s > 0.0).count()
+    }
+
+    /// Virtual-time span of the run: first arrival → last completion.
+    pub fn makespan_s(&self) -> f64 {
+        let first = self.records.iter().map(|r| r.arrival_s).fold(f64::INFINITY, f64::min);
+        let last = self.records.iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        (last - first).max(0.0)
+    }
+
+    /// Canonical serialization of the *virtual-time* outcome: every
+    /// field except `calc_time_s` / `engine_wall_s`, which are host
+    /// wall-clock measurements and legitimately vary across runs. Two
+    /// serves of the same seeded trace must produce byte-identical
+    /// canonical strings — the determinism regression tests diff this.
+    pub fn canonical(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&format!(
+                "id={} strategy={} n_in={} n_out={} arrival={:?} queue={:?} start={:?} \
+                 finish={:?} ttft={:?} tpot={:?} cost={:?} cold={:?} main_cold={:?} \
+                 inst={} conc={}\n",
+                r.id,
+                r.strategy,
+                r.n_in,
+                r.n_out,
+                r.arrival_s,
+                r.queue_delay_s,
+                r.start_s,
+                r.finish_s,
+                r.ttft_s,
+                r.tpot_s,
+                r.cost,
+                r.cold_start_s,
+                r.main_cold_s,
+                r.instance,
+                r.concurrency,
+            ));
+        }
+        out
     }
 
     pub fn ttft_summary(&self) -> Summary {
@@ -163,6 +250,13 @@ mod tests {
             cold_start_s: 2.0,
             calc_time_s: 0.001,
             engine_wall_s: 0.5,
+            arrival_s: id as f64,
+            queue_delay_s: 0.5 * id as f64,
+            start_s: 2.0 + id as f64,
+            finish_s: 10.0 + id as f64,
+            main_cold_s: if id == 0 { 2.0 } else { 0.0 },
+            instance: 0,
+            concurrency: 1 + id,
         }
     }
 
@@ -176,6 +270,32 @@ mod tests {
         assert_eq!(a.cost_summary().mean, 20.0);
         assert!((a.engine_throughput() - 2.0).abs() < 1e-12);
         assert!((a.token_throughput() - 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_fields_aggregate() {
+        let mut a = Aggregator::default();
+        a.push(rec(0, 10.0));
+        a.push(rec(1, 30.0));
+        assert!((a.queue_delay_summary().mean - 0.25).abs() < 1e-12);
+        assert!((a.mean_concurrency() - 1.5).abs() < 1e-12);
+        assert_eq!(a.cold_paid(), 2);
+        assert!((a.makespan_s() - 11.0).abs() < 1e-12);
+        assert!((a.records[1].e2e_s() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn canonical_excludes_wall_clock_fields() {
+        let mut a = Aggregator::default();
+        a.push(rec(0, 10.0));
+        let mut b = Aggregator::default();
+        let mut r = rec(0, 10.0);
+        r.calc_time_s = 99.0;
+        r.engine_wall_s = 42.0;
+        b.push(r);
+        assert_eq!(a.canonical(), b.canonical());
+        assert!(a.canonical().contains("queue="));
+        assert!(a.canonical().contains("cold="));
     }
 
     #[test]

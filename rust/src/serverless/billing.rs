@@ -55,6 +55,16 @@ impl BillingMeter {
         self.entries.iter().map(BillingEntry::cost).sum()
     }
 
+    /// Current ledger length — a mark for later per-request attribution.
+    pub fn mark(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sum of entry costs appended since `mark` (per-request deltas).
+    pub fn total_since(&self, mark: usize) -> f64 {
+        self.entries[mark..].iter().map(BillingEntry::cost).sum()
+    }
+
     pub fn by_component(&self) -> BTreeMap<CostComponent, f64> {
         let mut out = BTreeMap::new();
         for e in &self.entries {

@@ -1,7 +1,10 @@
 //! The serverless-platform substrate: pricing, memory specs, cold
 //! starts, network/payload limits, invocation overhead, and a
-//! virtual-time function-pool simulator. Everything Remoe's decisions
-//! consume is behind this module's interface (DESIGN.md §2).
+//! virtual-time function-pool simulator with per-instance warm pools,
+//! concurrency limits, scale-out and queueing. Everything Remoe's
+//! decisions consume is behind this module's interface (DESIGN.md §2);
+//! the event-driven serving scheduler (`coordinator::serve`) drives
+//! every function lifecycle through [`platform::Platform::invoke_at`].
 
 pub mod billing;
 pub mod coldstart;

@@ -5,13 +5,24 @@
 use crate::config::PlatformConfig;
 use crate::util::rng::Rng;
 
-#[derive(Debug, thiserror::Error)]
-#[error("payload {got:.0} B exceeds the {limit:.0} B function payload limit; \
-         requires intermediary storage (violates constraint 10g)")]
+#[derive(Debug)]
 pub struct PayloadExceeded {
     pub got: f64,
     pub limit: f64,
 }
+
+impl std::fmt::Display for PayloadExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "payload {:.0} B exceeds the {:.0} B function payload limit; \
+             requires intermediary storage (violates constraint 10g)",
+            self.got, self.limit
+        )
+    }
+}
+
+impl std::error::Error for PayloadExceeded {}
 
 #[derive(Debug, Clone)]
 pub struct NetworkModel {

@@ -1,11 +1,19 @@
-//! Virtual-time serverless platform: function deployment, warm pools
-//! with keep-alive, cold starts, invocation billing.
+//! Virtual-time serverless platform: function deployment, per-instance
+//! warm pools with keep-alive, cold starts, concurrency limits with
+//! scale-out, queueing, and invocation billing.
 //!
 //! The analytic cost model (costmodel::) evaluates eqs. (1)–(9) in
 //! closed form; this simulator mirrors the same pricing rules over an
-//! event timeline so the serving loop can produce per-request latency
-//! (including queueing and cold starts under a Poisson trace) and an
-//! auditable billing ledger. Requests are single-batch, matching the
+//! event timeline so the serving scheduler can produce per-request
+//! latency — including *queueing delay* under concurrent arrivals and
+//! cold starts under a Poisson trace — and an auditable billing
+//! ledger. Each function owns a pool of instances; an instance serves
+//! one invocation at a time (the serverless execution model), stays
+//! warm for `keepalive_s` after finishing, and is evicted once both
+//! idle and expired. When every live instance is busy the platform
+//! either *scales out* (spawns a cold instance, if under the
+//! function's instance limit) or *queues* the invocation on the
+//! earliest-free instance. Requests are single-batch, matching the
 //! paper's low-overhead serving assumption (§II).
 
 use std::collections::BTreeMap;
@@ -31,10 +39,14 @@ pub struct FunctionSpec {
     pub component: CostComponent,
 }
 
-#[derive(Debug, Clone)]
+/// One live function instance in the pool.
+#[derive(Debug, Clone, Copy)]
 struct Instance {
-    /// Virtual time until which this instance stays warm.
+    id: u64,
+    /// Virtual time until which this instance stays warm when idle.
     warm_until: f64,
+    /// Virtual time until which this instance is serving an invocation.
+    busy_until: f64,
 }
 
 /// Result of one invocation.
@@ -45,11 +57,21 @@ pub struct Invocation {
     pub finished_at: f64,
     pub cold_start_s: f64,
     pub invoke_overhead_s: f64,
+    /// Time spent waiting for a free instance (concurrency contention).
+    pub queue_delay_s: f64,
+    /// Id of the instance that served the call.
+    pub instance: u64,
 }
 
 impl Invocation {
     pub fn latency(&self) -> f64 {
         self.finished_at - self.queued_at
+    }
+
+    /// When the instance began handling the call (queue exit; the cold
+    /// start, invoke overhead and payload transfer happen after this).
+    pub fn service_start(&self) -> f64 {
+        self.queued_at + self.queue_delay_s
     }
 }
 
@@ -63,6 +85,9 @@ pub struct Platform {
     gpu_rate: f64,
     specs: BTreeMap<String, FunctionSpec>,
     pool: BTreeMap<String, Vec<Instance>>,
+    /// Per-function instance cap (scale-out limit); absent ⇒ unlimited.
+    limits: BTreeMap<String, usize>,
+    next_instance: u64,
     pub billing: BillingMeter,
     rng: Rng,
     pub overhead_mode: InvokeOverhead,
@@ -79,6 +104,8 @@ impl Platform {
             gpu_rate: cfg.gpu_rate_per_mb_s,
             specs: BTreeMap::new(),
             pool: BTreeMap::new(),
+            limits: BTreeMap::new(),
+            next_instance: 0,
             billing: BillingMeter::new(),
             rng: Rng::new(seed ^ 0x504c_4154), // "PLAT"
             overhead_mode: InvokeOverhead::Sampled,
@@ -93,9 +120,22 @@ impl Platform {
         &self.cold
     }
 
+    /// Deploy (or redeploy) a function. Redeployment updates the spec
+    /// but keeps the warm pool — the simulator's stand-in for a config
+    /// update on a live function.
     pub fn deploy(&mut self, spec: FunctionSpec) {
         self.pool.entry(spec.name.clone()).or_default();
         self.specs.insert(spec.name.clone(), spec);
+    }
+
+    /// Cap the number of concurrently-live instances of `name`.
+    /// Invocations beyond the cap queue on the earliest-free instance.
+    pub fn set_instance_limit(&mut self, name: &str, limit: usize) {
+        self.limits.insert(name.to_string(), limit.max(1));
+    }
+
+    pub fn instance_limit(&self, name: &str) -> usize {
+        self.limits.get(name).copied().unwrap_or(usize::MAX)
     }
 
     pub fn advance_to(&mut self, t: f64) {
@@ -104,55 +144,120 @@ impl Platform {
         }
     }
 
-    /// Acquire an instance (warm hit or cold start); returns the cold
-    /// start duration (0 for warm) without advancing the clock.
-    fn acquire(&mut self, name: &str) -> f64 {
-        let spec = self.specs.get(name).expect("function not deployed").clone();
-        let pool = self.pool.get_mut(name).unwrap();
-        // evict expired instances
-        let now = self.clock;
-        pool.retain(|i| i.warm_until >= now);
-        if let Some(_inst) = pool.pop() {
-            0.0
-        } else {
-            self.cold.function(spec.footprint_mb).total()
-        }
-    }
-
-    /// Release an instance back to the warm pool.
-    fn release(&mut self, name: &str, at: f64) {
-        let keep = self.keepalive_s;
-        self.pool.get_mut(name).unwrap().push(Instance { warm_until: at + keep });
-    }
-
-    /// Invoke `name` with `work_s` of compute and an inbound payload.
-    /// Advances the clock to the completion time and bills the
-    /// function's memory for the active duration.
-    pub fn invoke(&mut self, name: &str, work_s: f64, payload_bytes: f64) -> anyhow::Result<Invocation> {
+    /// Invoke `name` at virtual time `at` with `work_s` of compute and
+    /// an inbound payload. Resolves instance contention (warm hit,
+    /// cold scale-out, or queueing), bills the function's memory for
+    /// its *active* duration (cold start included, queue wait
+    /// excluded), and does NOT advance the global clock — this is the
+    /// event-driven entry point the serving scheduler drives.
+    pub fn invoke_at(
+        &mut self,
+        name: &str,
+        at: f64,
+        work_s: f64,
+        payload_bytes: f64,
+    ) -> anyhow::Result<Invocation> {
         self.net.check_payload(payload_bytes)?;
-        let queued_at = self.clock;
-        let cold_start_s = self.acquire(name);
-        let overhead = if cold_start_s > 0.0 {
+        let spec = self.specs.get(name).expect("function not deployed").clone();
+        let limit = self.instance_limit(name);
+        let pool = self.pool.get_mut(name).unwrap();
+        // evict instances that are both idle and past their keep-alive
+        pool.retain(|i| i.busy_until > at || i.warm_until >= at);
+
+        // Prefer the most-recently-used idle instance (LIFO warm pool),
+        // ties broken by id for determinism.
+        let mut idle: Option<usize> = None;
+        for idx in 0..pool.len() {
+            if pool[idx].busy_until <= at {
+                let better = match idle {
+                    None => true,
+                    Some(best) => {
+                        pool[idx].busy_until > pool[best].busy_until
+                            || (pool[idx].busy_until == pool[best].busy_until
+                                && pool[idx].id < pool[best].id)
+                    }
+                };
+                if better {
+                    idle = Some(idx);
+                }
+            }
+        }
+        let (idx, queue_exit, cold_start_s) = match idle {
+            // warm hit: an idle instance never pays a cold start
+            Some(idx) => (idx, at, 0.0),
+            // scale-out: spawn a fresh (cold) instance under the cap
+            None if pool.len() < limit => {
+                let id = self.next_instance;
+                self.next_instance += 1;
+                pool.push(Instance { id, warm_until: at, busy_until: at });
+                (pool.len() - 1, at, self.cold.function(spec.footprint_mb).total())
+            }
+            // saturated: queue on the earliest-free instance (which is
+            // warm by construction — it just finished serving)
+            None => {
+                let mut best = 0;
+                for idx in 1..pool.len() {
+                    if pool[idx].busy_until < pool[best].busy_until
+                        || (pool[idx].busy_until == pool[best].busy_until
+                            && pool[idx].id < pool[best].id)
+                    {
+                        best = idx;
+                    }
+                }
+                (best, pool[best].busy_until, 0.0)
+            }
+        };
+
+        let invoke_overhead_s = if cold_start_s > 0.0 {
             0.0 // cold path already pays container+load; no warm jitter
         } else {
             self.net.invoke_overhead(self.overhead_mode, &mut self.rng)
         };
         let transfer = self.net.transfer_time(payload_bytes);
-        let started_at = queued_at + cold_start_s + overhead + transfer;
+        let queue_delay_s = queue_exit - at;
+        let started_at = queue_exit + cold_start_s + invoke_overhead_s + transfer;
         let finished_at = started_at + work_s;
 
-        let spec = &self.specs[name];
+        let instance = {
+            let inst = &mut pool[idx];
+            inst.busy_until = finished_at;
+            inst.warm_until = finished_at + self.keepalive_s;
+            inst.id
+        };
+
         // billed duration: active time incl. cold start (the paper's
-        // Fig. 1: charged for the entire runtime of the function)
-        let billed = finished_at - queued_at;
+        // Fig. 1: charged for the entire runtime of the function), but
+        // NOT the queue wait — a queued request's instance is busy
+        // serving (and billing) someone else.
+        let billed = finished_at - queue_exit;
         self.billing.charge(spec.component, spec.mem_mb, billed, self.cpu_rate);
         if spec.gpu_mb > 0.0 {
             self.billing.charge(CostComponent::MainGpu, spec.gpu_mb, billed, self.gpu_rate);
         }
 
-        self.clock = finished_at;
-        self.release(name, finished_at);
-        Ok(Invocation { queued_at, started_at, finished_at, cold_start_s, invoke_overhead_s: overhead })
+        Ok(Invocation {
+            queued_at: at,
+            started_at,
+            finished_at,
+            cold_start_s,
+            invoke_overhead_s,
+            queue_delay_s,
+            instance,
+        })
+    }
+
+    /// Sequential invoke at the current clock; advances the clock to
+    /// the completion time (the pre-scheduler calling convention, kept
+    /// for demos and closed-loop callers).
+    pub fn invoke(
+        &mut self,
+        name: &str,
+        work_s: f64,
+        payload_bytes: f64,
+    ) -> anyhow::Result<Invocation> {
+        let inv = self.invoke_at(name, self.clock, work_s, payload_bytes)?;
+        self.clock = inv.finished_at;
+        Ok(inv)
     }
 
     /// Invoke several functions in parallel (remote-expert replicas);
@@ -166,8 +271,7 @@ impl Platform {
         let mut results = Vec::with_capacity(calls.len());
         let mut latest = start;
         for (name, work_s, payload) in calls {
-            self.clock = start; // each call starts at the same instant
-            let inv = self.invoke(name, *work_s, *payload)?;
+            let inv = self.invoke_at(name, start, *work_s, *payload)?;
             latest = latest.max(inv.finished_at);
             results.push(inv);
         }
@@ -175,11 +279,11 @@ impl Platform {
         Ok(results)
     }
 
-    /// Number of currently-warm instances of a function.
+    /// Number of currently-live (warm or busy) instances of a function.
     pub fn warm_count(&mut self, name: &str) -> usize {
         let now = self.clock;
         self.pool.get_mut(name).map_or(0, |p| {
-            p.retain(|i| i.warm_until >= now);
+            p.retain(|i| i.busy_until > now || i.warm_until >= now);
             p.len()
         })
     }
@@ -217,6 +321,7 @@ mod tests {
         let b = p.invoke("main", 1.0, 0.0).unwrap();
         assert_eq!(b.cold_start_s, 0.0);
         assert!(b.invoke_overhead_s > 0.0);
+        assert_eq!(a.instance, b.instance, "warm pool reuses the instance");
     }
 
     #[test]
@@ -270,5 +375,70 @@ mod tests {
         assert_eq!(p.warm_count("main"), 0);
         p.invoke("main", 0.5, 0.0).unwrap();
         assert_eq!(p.warm_count("main"), 1);
+    }
+
+    #[test]
+    fn concurrency_limit_queues_on_busy_instance() {
+        let mut p = platform();
+        p.set_instance_limit("main", 1);
+        let a = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        let b = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        assert!(a.cold_start_s > 0.0);
+        assert_eq!(a.queue_delay_s, 0.0);
+        // the second request waits for the first to finish and never
+        // pays a cold start (warm-pool hit)
+        assert_eq!(b.cold_start_s, 0.0);
+        assert!((b.queue_delay_s - a.finished_at).abs() < 1e-9, "q={}", b.queue_delay_s);
+        assert_eq!(b.instance, a.instance);
+        assert!(b.finished_at > a.finished_at);
+    }
+
+    #[test]
+    fn scale_out_spawns_cold_instances_up_to_limit() {
+        let mut p = platform();
+        p.set_instance_limit("expert0", 2);
+        let a = p.invoke_at("expert0", 0.0, 1.0, 0.0).unwrap();
+        let b = p.invoke_at("expert0", 0.0, 1.0, 0.0).unwrap();
+        let c = p.invoke_at("expert0", 0.0, 1.0, 0.0).unwrap();
+        // two instances spawn cold in parallel; the third call queues
+        assert!(a.cold_start_s > 0.0 && b.cold_start_s > 0.0);
+        assert_ne!(a.instance, b.instance);
+        assert_eq!(b.queue_delay_s, 0.0);
+        assert_eq!(c.cold_start_s, 0.0);
+        assert!(c.queue_delay_s > 0.0);
+        p.advance_to(0.5);
+        assert_eq!(p.warm_count("expert0"), 2);
+    }
+
+    #[test]
+    fn billing_excludes_queue_wait() {
+        let mut p = platform();
+        p.set_instance_limit("main", 1);
+        p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        let mark = p.billing.entries().len();
+        let b = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        let billed = p.billing.total_since(mark);
+        // active time = overhead + work, NOT the multi-second queue wait
+        let active = b.finished_at - b.service_start();
+        let expected = active * (1000.0 * 1.0 + 500.0 * 3.0);
+        assert!((billed - expected).abs() < 1e-6, "billed={billed} expected={expected}");
+        assert!(active < 1.5, "active={active}");
+    }
+
+    #[test]
+    fn finishes_are_monotone_per_instance() {
+        let mut p = platform();
+        p.set_instance_limit("main", 2);
+        let mut last: BTreeMap<u64, f64> = BTreeMap::new();
+        for i in 0..12 {
+            let inv = p.invoke_at("main", 0.3 * i as f64, 0.9, 0.0).unwrap();
+            if let Some(&prev) = last.get(&inv.instance) {
+                assert!(inv.started_at >= prev - 1e-12, "start before prior finish");
+                assert!(inv.finished_at >= prev, "finish not monotone");
+            }
+            assert!(inv.started_at >= inv.queued_at, "started before arrival");
+            last.insert(inv.instance, inv.finished_at);
+        }
+        assert!(last.len() <= 2, "instance cap violated");
     }
 }

@@ -34,6 +34,28 @@ pub fn poisson_trace(corpus: &Corpus, spec: &TraceSpec) -> Vec<Request> {
         .collect()
 }
 
+/// Open-loop Poisson arrivals over a *fixed* prompt set — the serving
+/// experiments replay the same prompts under every strategy so the
+/// schedulers face identical contention.
+pub fn poisson_trace_over(
+    prompts: &[Prompt],
+    rate_per_s: f64,
+    n_out: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed ^ 0x90_15_50);
+    let mut t = 0.0;
+    prompts
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(id, prompt)| {
+            t += rng.exponential(rate_per_s);
+            Request { id, arrival_s: t, prompt, n_out }
+        })
+        .collect()
+}
+
 /// Closed trace from pre-sampled prompts (Fig. 9's "50 tasks from the
 /// test set", all available immediately).
 pub fn batch_trace(prompts: &[Prompt], n_out: usize) -> Vec<Request> {
@@ -62,6 +84,22 @@ mod tests {
         let span = trace.last().unwrap().arrival_s;
         let rate = 2000.0 / span;
         assert!((rate - 2.0).abs() < 0.2, "rate={rate}");
+    }
+
+    #[test]
+    fn poisson_over_fixed_prompts_is_deterministic() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = c.split(0, 6, 3);
+        let a = poisson_trace_over(&test, 0.5, 16, 9);
+        let b = poisson_trace_over(&test, 0.5, 16, 9);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt.text, y.prompt.text);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
     }
 
     #[test]

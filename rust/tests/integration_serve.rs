@@ -55,7 +55,8 @@ fn pjrt_serve_loop_end_to_end() {
     let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0).unwrap();
     assert_eq!(agg.len(), 3);
     assert!(agg.records[0].cold_start_s > 0.0, "first request pays cold start");
-    assert_eq!(agg.records[1].cold_start_s, 0.0, "warm pool hit");
+    assert_eq!(agg.records[1].main_cold_s, 0.0, "warm pool hit on the main function");
+    assert!(agg.records[1].queue_delay_s > 0.0, "batch arrivals queue on one instance");
     for r in &agg.records {
         assert!(r.cost > 0.0);
         assert!(r.engine_wall_s > 0.0, "real compute must have happened");

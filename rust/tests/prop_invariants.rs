@@ -218,6 +218,113 @@ fn prop_kmedoids_partitions_points() {
 }
 
 #[test]
+fn prop_platform_scheduler_invariants() {
+    // The four scheduler invariants over random invocation patterns:
+    // no start before arrival, per-instance monotone finishes,
+    // warm-pool hits never pay a cold start, and the billing ledger
+    // equals the sum of per-invocation deltas.
+    Prop::new("platform scheduler invariants").with_cases(30).check(|rng, case| {
+        use remoe::serverless::{CostComponent, FunctionSpec, Platform};
+        let mut p = Platform::new(&PlatformConfig::default(), case as u64);
+        p.keepalive_s = rng.range_f64(1.0, 30.0);
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: rng.range_f64(100.0, 2000.0),
+            gpu_mb: if rng.bool(0.5) { 300.0 } else { 0.0 },
+            footprint_mb: rng.range_f64(0.0, 2000.0),
+            component: CostComponent::MainCpu,
+        });
+        let limit = rng.range_u(1, 3);
+        p.set_instance_limit("f", limit);
+
+        let mut t = 0.0;
+        let mut last_finish: std::collections::BTreeMap<u64, f64> = Default::default();
+        let mut sum_deltas = 0.0;
+        let n = small_size(rng, 1, 40);
+        for _ in 0..n {
+            t += rng.range_f64(0.0, 5.0);
+            let work = rng.range_f64(0.01, 3.0);
+            let mark = p.billing.mark();
+            let inv = p.invoke_at("f", t, work, 0.0).unwrap();
+            sum_deltas += p.billing.total_since(mark);
+            // no request starts before its arrival
+            assert!(inv.started_at >= t - 1e-12);
+            assert!(inv.queue_delay_s >= 0.0);
+            // warm-pool hits (known instance or queued) never pay cold
+            if last_finish.contains_key(&inv.instance) {
+                assert_eq!(inv.cold_start_s, 0.0, "warm-pool hit paid a cold start");
+            }
+            if inv.queue_delay_s > 0.0 {
+                assert_eq!(inv.cold_start_s, 0.0, "queued ⇒ instance was live");
+            }
+            // finish times are monotone per instance
+            if let Some(&prev) = last_finish.get(&inv.instance) {
+                assert!(inv.started_at >= prev - 1e-12, "start before prior finish");
+                assert!(inv.finished_at >= prev - 1e-12, "finish not monotone");
+            }
+            last_finish.insert(inv.instance, inv.finished_at);
+            // live instances never exceed the cap
+            p.advance_to(t);
+            assert!(p.warm_count("f") <= limit, "instance cap exceeded");
+        }
+        // billing-ledger total equals the sum of the per-call deltas
+        assert!(
+            (p.billing.total() - sum_deltas).abs() <= 1e-9 * sum_deltas.max(1.0),
+            "ledger {} != Σ deltas {sum_deltas}",
+            p.billing.total()
+        );
+    });
+}
+
+#[test]
+fn prop_serve_ledger_equals_sum_of_request_costs() {
+    // End-to-end: the scheduler attributes every billed entry to
+    // exactly one request, under random traces and instance limits.
+    Prop::new("serve: ledger == Σ record costs").with_cases(3).check(|rng, case| {
+        use remoe::config::SystemConfig;
+        use remoe::coordinator::{
+            build_history, serve_on_platform, Planner, RemoePolicy, ServeOptions,
+        };
+        use remoe::model::{self, Engine};
+        use remoe::prediction::{SpsPredictor, TreeParams};
+        use remoe::serverless::Platform;
+        use remoe::workload::corpus::{standard_corpora, Corpus};
+        use remoe::workload::trace::batch_trace;
+
+        let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (train, test) = corpus.split(12, small_size(rng, 2, 4), case as u64 + 3);
+        let history = build_history(&mut engine, &train).unwrap();
+        let params = TreeParams { beta: 10, fanout: 3, ..TreeParams::default() };
+        let sps = SpsPredictor::build(history, 4, params, &mut Rng::new(case as u64));
+        let dims = CostDims::gpt2_moe(4);
+        let planner =
+            Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
+
+        let trace = batch_trace(&test, small_size(rng, 2, 10));
+        let opts = ServeOptions { main_instances: rng.range_u(1, 3), ..ServeOptions::default() };
+        let mut platform = Platform::new(&planner.platform, opts.seed);
+        let mut policy =
+            RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+        let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+
+        let ledger = platform.billing.total();
+        let records = agg.total_cost();
+        assert!(
+            (ledger - records).abs() <= 1e-9 * ledger.max(1.0),
+            "ledger {ledger} != Σ records {records}"
+        );
+        for r in &agg.records {
+            assert!(r.start_s >= r.arrival_s, "request started before its arrival");
+            assert!(r.finish_s > r.start_s);
+            if r.queue_delay_s > 0.0 {
+                assert_eq!(r.main_cold_s, 0.0, "queued request hit a warm instance");
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_deployment_plan_from_planner_always_validates() {
     Prop::new("planner plans validate + respect catalogs").with_cases(12).check(|rng, _| {
         use remoe::config::SystemConfig;

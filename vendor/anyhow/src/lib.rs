@@ -1,0 +1,160 @@
+//! Minimal offline shim of the `anyhow` API surface this workspace
+//! uses: `Error`, `Result`, `anyhow!`, `bail!`, `ensure!` and the
+//! `Context` extension trait. The container image has no crates.io
+//! access, so this stands in for the real crate with the same calling
+//! conventions (context chains render as `outer: inner: ...`).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-chained error: `chain[0]` is the outermost context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                for cause in rest {
+                    write!(f, "\n\nCaused by:\n    {cause}")?;
+                }
+                Ok(())
+            }
+            None => write!(f, "unknown error"),
+        }
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`,
+// exactly like the real anyhow — that is what makes this blanket
+// conversion coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for std::option::Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_render_outermost_first() {
+        let e: Error = Err::<(), _>(io_err()).context("opening artifact").unwrap_err();
+        assert_eq!(e.to_string(), "opening artifact: gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            ensure!(x < 100);
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert!(f(200).unwrap_err().to_string().contains("x < 100"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "gone");
+    }
+}
