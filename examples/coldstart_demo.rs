@@ -39,10 +39,14 @@ fn main() -> anyhow::Result<()> {
         mem_mb: total_mb,
         gpu_mb: dims.total_nonexpert_mb(),
         footprint_mb: total_mb,
+        batch_capacity: 1,
         component: CostComponent::MainCpu,
     });
     let inv = mono.invoke("monolith", 1.0, 0.0)?;
-    println!("\nmonolithic: cold start {:.2}s (container + {:.0} MB load)", inv.cold_start_s, total_mb);
+    println!(
+        "\nmonolithic: cold start {:.2}s (container + {:.0} MB load)",
+        inv.cold_start_s, total_mb
+    );
 
     // --- Remoe topology: main + one remote function per layer, all
     //     started in parallel (max, not sum) ---
@@ -55,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         mem_mb: out.plan.main_mem_mb,
         gpu_mb: dims.total_nonexpert_mb(),
         footprint_mb: main_fp,
+        batch_capacity: 1,
         component: CostComponent::MainCpu,
     });
     let mut calls = vec![("main".to_string(), 1.0, 0.0)];
@@ -68,6 +73,7 @@ fn main() -> anyhow::Result<()> {
             mem_mb: out.plan.remote_mem_mb[l],
             gpu_mb: 0.0,
             footprint_mb: out.plan.remote_count(l) as f64 * dims.expert_mb,
+            batch_capacity: 1,
             component: CostComponent::RemoteExpertPrefill,
         });
         calls.push((name, 0.5, 1024.0));

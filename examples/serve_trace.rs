@@ -5,7 +5,7 @@
 //! from contention. All four baselines are served through the *same*
 //! scheduler on the *same* trace for a like-for-like comparison.
 //!
-//!     cargo run --release --example serve_trace [n_requests] [rate_per_s]
+//!     cargo run --release --example serve_trace [n_requests] [rate_per_s] [batch_capacity]
 //!
 //! Executes on PJRT when artifacts are present (`make artifacts`),
 //! otherwise on the numerically-identical native reference backend.
@@ -28,17 +28,18 @@ fn main() -> anyhow::Result<()> {
     let model_name = "gpt2_moe_mini";
     let n_requests = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(20);
     let rate_per_s = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(0.5);
+    let batch_capacity = std::env::args().nth(3).and_then(|a| a.parse().ok()).unwrap_or(1);
     let n_out = 32;
 
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let store = Rc::new(ArtifactStore::open("artifacts")?);
         let mut engine = Engine::pjrt(store, model_name, 7)?;
         eprintln!("engine: PJRT ({model_name})");
-        run(&mut engine, n_requests, rate_per_s, n_out)
+        run(&mut engine, n_requests, rate_per_s, batch_capacity, n_out)
     } else {
         let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
         eprintln!("engine: native reference (artifacts not built; run `make artifacts` for PJRT)");
-        run(&mut engine, n_requests, rate_per_s, n_out)
+        run(&mut engine, n_requests, rate_per_s, batch_capacity, n_out)
     }
 }
 
@@ -46,6 +47,7 @@ fn run<B: Backend>(
     engine: &mut Engine<B>,
     n_requests: usize,
     rate_per_s: f64,
+    batch_capacity: usize,
     n_out: usize,
 ) -> anyhow::Result<()> {
     let dims = CostDims::gpt2_moe(engine.hyper.layers);
@@ -71,15 +73,22 @@ fn run<B: Backend>(
         &corpus,
         &TraceSpec { rate_per_s, n_requests, n_out, seed: 13 },
     );
-    let opts = ServeOptions::default();
+    let opts = ServeOptions { batch_capacity, ..ServeOptions::default() };
 
-    eprintln!("serving {n_requests} requests (Poisson {rate_per_s}/s) through every strategy…");
+    eprintln!(
+        "serving {n_requests} requests (Poisson {rate_per_s}/s, batch {batch_capacity}) \
+         through every strategy…"
+    );
     let t0 = std::time::Instant::now();
     let remoe = serve_remoe_with(engine, &planner, &sps, &trace, &opts)?;
     let wall = t0.elapsed().as_secs_f64();
 
     let mut t = Table::new(&[
-        "strategy", "total cost", "mean ttft (s)", "mean tpot (s)", "mean queue (s)",
+        "strategy",
+        "total cost",
+        "mean ttft (s)",
+        "mean tpot (s)",
+        "mean queue (s)",
         "cold starts",
     ]);
     let row = |agg: &Aggregator| -> Vec<String> {

@@ -112,8 +112,8 @@ impl<'a> Mmp<'a> {
             pt += pt_f + local.max(remote) + 2.0 * self.perf.swap_time(n_in as f64);
         }
         // cold start of the main model (weights it must load)
-        let main_footprint =
-            self.dims.total_nonexpert_mb() + m_local as f64 * self.dims.layers as f64 * self.dims.expert_mb;
+        let local_expert_mb = m_local as f64 * self.dims.layers as f64 * self.dims.expert_mb;
+        let main_footprint = self.dims.total_nonexpert_mb() + local_expert_mb;
         let ttft = pt + self.cold.function(main_footprint).total();
 
         // --- decode (eq. 4/5 worst case, remote path binding §IV-C) ---

@@ -7,7 +7,10 @@
 //! serving experiments, [`BaselinePolicy`] adapts each baseline to the
 //! event-driven scheduler (`coordinator::serve`) as one monolithic
 //! function, so Remoe and the baselines queue, cold-start and bill on
-//! the *same* platform simulator under identical contention.
+//! the *same* platform simulator under identical contention —
+//! including continuous batching: `ServeOptions::batch_capacity`
+//! applies to the baselines' monolithic function exactly as it does
+//! to Remoe's main function.
 
 use std::time::Instant;
 
@@ -129,7 +132,12 @@ impl BaselineEvaluator {
     }
 
     /// Non-expert compute (attention etc.) over the request.
-    fn nonexpert_seconds(&self, profile: &RequestProfile, pre_div: f64, dec_div: f64) -> (f64, f64) {
+    fn nonexpert_seconds(
+        &self,
+        profile: &RequestProfile,
+        pre_div: f64,
+        dec_div: f64,
+    ) -> (f64, f64) {
         let pre = self.dims.layers as f64 * self.perf.nonexpert_time(profile.n_in as f64);
         let dec = profile.n_out as f64 * self.dims.layers as f64 * self.perf.nonexpert_time(1.0);
         (pre / pre_div, dec / dec_div)
@@ -497,6 +505,37 @@ mod tests {
         assert!(agg.records[1].queue_delay_s > 0.0, "batch arrivals queue");
         assert!(agg.records.iter().all(|r| r.cost > 0.0));
         assert!(serve_baseline(&mut engine, &ev, Strategy::Remoe, &trace, &opts).is_err());
+    }
+
+    #[test]
+    fn batched_baseline_absorbs_contention_and_audits_ledger() {
+        use crate::workload::corpus::{standard_corpora, Corpus};
+        use crate::workload::trace::batch_trace;
+        let mut engine = crate::model::Engine::native(crate::model::gpt2_moe_mini(), 7);
+        let dims = CostDims::gpt2_moe(4);
+        let ev = BaselineEvaluator::new(&dims, &PlatformConfig::default());
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = corpus.split(0, 3, 5);
+        let trace = batch_trace(&test, 8);
+        let opts = ServeOptions { batch_capacity: 4, ..ServeOptions::default() };
+        let mut platform = Platform::new(&ev.platform, opts.seed);
+        let mut policy = BaselinePolicy { engine: &mut engine, ev: &ev, strategy: Strategy::Mix };
+        let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+        // the batch shares one instance: joiners pay no cold start and
+        // wait only for instance readiness, not for each other
+        assert_eq!(agg.records[0].queue_delay_s, 0.0);
+        for r in &agg.records[1..] {
+            assert_eq!(r.main_cold_s, 0.0);
+            assert!((r.queue_delay_s - agg.records[0].main_cold_s).abs() < 1e-9);
+        }
+        assert_eq!(agg.records.iter().map(|r| r.batch).max(), Some(3));
+        // union billing keeps the per-request attribution exact
+        let ledger = platform.billing.total();
+        let records = agg.total_cost();
+        assert!(
+            (ledger - records).abs() <= 1e-9 * ledger.max(1.0),
+            "ledger {ledger} != Σ records {records}"
+        );
     }
 
     #[test]

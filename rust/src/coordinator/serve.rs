@@ -11,6 +11,18 @@
 //! billing-ledger delta for exactly the invocations that request
 //! issued, so `Σ record.cost == ledger.total()` by construction.
 //!
+//! **Continuous batching** (`ServeOptions::batch_capacity`): each
+//! request is split into a prefill segment and a decode segment on
+//! the main-model function. The prefill admission resolves slot
+//! contention (join an in-flight instance, cold scale-out, or queue);
+//! the decode segment continues on the prefill's instance, so an
+//! instance in its decode phase keeps admitting new prefills while it
+//! has free slots instead of forcing them to queue. Co-batched
+//! requests bill the *union* of the instance's occupied time
+//! (`Platform` union billing), which is where batched serving wins on
+//! cost. `batch_capacity = 1` reproduces the paper's
+//! one-request-per-instance execution exactly.
+//!
 //! Per request the pipeline is unchanged: predict S̃ (SPS) → plan
 //! (MMP → selection → Lagrangian → LPT, in CALCULATE time) → execute
 //! the real model through the engine → account with the *measured*
@@ -49,6 +61,12 @@ pub struct ServeOptions {
     /// matches the paper's single pre-allocated main function —
     /// overlapping arrivals queue; raise it to study scale-out.
     pub main_instances: usize,
+    /// Continuous-batching slots per main-model instance. 1 (the
+    /// default) is the paper's one-request-per-instance execution;
+    /// raising it lets overlapping arrivals join an in-flight
+    /// instance instead of queueing, sharing the instance bill
+    /// through union billing.
+    pub batch_capacity: usize,
     /// How the warm-invoke overhead t^rem is drawn.
     pub overhead: InvokeOverhead,
     /// Seed of the platform RNG (sampled overheads).
@@ -60,6 +78,7 @@ impl Default for ServeOptions {
         ServeOptions {
             keepalive_s: 60.0,
             main_instances: 1,
+            batch_capacity: 1,
             overhead: InvokeOverhead::Sampled,
             seed: 0x5E47,
         }
@@ -175,6 +194,7 @@ pub fn serve_on_platform(
         mem_mb: 0.0,
         gpu_mb: 0.0,
         footprint_mb: 0.0,
+        batch_capacity: opts.batch_capacity.max(1),
         component: CostComponent::MainCpu,
     });
     platform.set_instance_limit(MAIN_FN, opts.main_instances);
@@ -199,6 +219,11 @@ pub fn serve_on_platform(
         in_flight += 1;
         let req = &trace[i];
         let t = req.arrival_s;
+        // arrivals are processed in time order and every invocation
+        // this loop still issues carries a timestamp ≥ t, so instances
+        // expired before t are unreachable — prune them to keep the
+        // lazily-evicted pool bounded over long traces
+        platform.prune_expired_before(t);
         let sp = policy.plan(req)?;
 
         // (re)deploy the main function at this request's planned spec —
@@ -208,16 +233,28 @@ pub fn serve_on_platform(
             mem_mb: sp.main_mem_mb,
             gpu_mb: sp.main_gpu_mb,
             footprint_mb: sp.main_footprint_mb,
+            batch_capacity: opts.batch_capacity.max(1),
             component: CostComponent::MainCpu,
         });
 
         let mark = platform.billing.mark();
-        // The main function is busy for the whole analytic service
-        // time: eq. 1 + eq. 4 already fold in waiting on the remote
-        // chains (max of local/remote per layer).
-        let main_inv = platform.invoke_at(MAIN_FN, t, sp.prefill_s + sp.decode_s, 0.0)?;
-        let launch = main_inv.service_start();
-        let mut cold_eff = main_inv.cold_start_s;
+        // Continuous-batching split: the prefill segment resolves slot
+        // contention (join-in-flight, cold scale-out, or queueing);
+        // the decode segment continues on the same instance — where
+        // the KV cache lives — so a decode-phase instance keeps
+        // admitting new prefills while slots remain. Eq. 1 + eq. 4
+        // already fold waiting on the remote chains into the analytic
+        // prefill/decode times, so the two segments cover the whole
+        // service time.
+        let prefill_inv = platform.invoke_at(MAIN_FN, t, sp.prefill_s, 0.0)?;
+        let decode_inv = platform.invoke_on(
+            MAIN_FN,
+            prefill_inv.instance,
+            prefill_inv.finished_at,
+            sp.decode_s,
+        )?;
+        let launch = prefill_inv.service_start();
+        let mut cold_eff = prefill_inv.cold_start_s;
 
         for rl in &sp.remote {
             let name = expert_fn(rl.layer);
@@ -226,11 +263,14 @@ pub fn serve_on_platform(
                 mem_mb: rl.mem_mb,
                 gpu_mb: 0.0,
                 footprint_mb: rl.footprint_mb,
+                batch_capacity: 1,
                 component: CostComponent::RemoteExpertPrefill,
             });
             // cap scale-out at this request's replica count so decode
             // (and bursts) queue on warm replicas instead of spawning
-            // phantom cold instances
+            // phantom cold instances; shrinking below a predecessor's
+            // replica count drains the excess instances (platform
+            // clamp) instead of misbehaving
             platform.set_instance_limit(&name, rl.replica_work_s.len().max(1));
             // replicas fire in parallel with the main function's own
             // cold start (the Fig. 11 overlap). Constraint (10g) is
@@ -252,9 +292,10 @@ pub fn serve_on_platform(
                     mem_mb: rl.mem_mb,
                     gpu_mb: 0.0,
                     footprint_mb: rl.footprint_mb,
+                    batch_capacity: 1,
                     component: CostComponent::RemoteExpertDecode,
                 });
-                let t_dec = main_inv.started_at + sp.prefill_s;
+                let t_dec = decode_inv.started_at;
                 // a decode-phase cold start (replica expired mid-request)
                 // bills through the ledger but happens after the first
                 // token, so it is deliberately NOT folded into
@@ -266,7 +307,7 @@ pub fn serve_on_platform(
 
         seq += 1;
         heap.push(Reverse(Event {
-            time: main_inv.finished_at,
+            time: decode_inv.finished_at,
             seq,
             kind: EventKind::Completion,
         }));
@@ -276,18 +317,27 @@ pub fn serve_on_platform(
             strategy: policy.strategy(),
             n_in: sp.n_in,
             n_out: sp.n_out,
-            ttft_s: cold_eff + sp.prefill_s,
+            // TTFT includes the queueing delay and the warm-invoke
+            // overhead: a request that waited for a free main-model
+            // slot cannot see its first token before its prefill
+            // segment even started (cold admissions have overhead 0 —
+            // the cold start already covers container + load).
+            ttft_s: prefill_inv.queue_delay_s
+                + cold_eff
+                + prefill_inv.invoke_overhead_s
+                + sp.prefill_s,
             tpot_s: if sp.n_out == 0 { 0.0 } else { sp.decode_s / sp.n_out as f64 },
             cost,
             cold_start_s: cold_eff,
             calc_time_s: sp.calc_time_s,
             engine_wall_s: sp.engine_wall_s,
             arrival_s: t,
-            queue_delay_s: main_inv.queue_delay_s,
-            start_s: main_inv.started_at,
-            finish_s: main_inv.finished_at,
-            main_cold_s: main_inv.cold_start_s,
-            instance: main_inv.instance,
+            queue_delay_s: prefill_inv.queue_delay_s,
+            start_s: prefill_inv.started_at,
+            finish_s: decode_inv.finished_at,
+            main_cold_s: prefill_inv.cold_start_s,
+            instance: prefill_inv.instance,
+            batch: prefill_inv.batch,
             concurrency: in_flight,
         });
     }

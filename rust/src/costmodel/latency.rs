@@ -98,7 +98,11 @@ impl LatencyModel {
     }
 
     /// PT (eq. 1): Σ_l (PT^f_l + PT^e_l).
-    pub fn prefill_time(&self, plan: &DeploymentPlan, profile: &RequestProfile) -> (f64, Vec<Vec<f64>>) {
+    pub fn prefill_time(
+        &self,
+        plan: &DeploymentPlan,
+        profile: &RequestProfile,
+    ) -> (f64, Vec<Vec<f64>>) {
         let mut total = 0.0;
         let mut all_replicas = Vec::with_capacity(profile.layers());
         for l in 0..profile.layers() {

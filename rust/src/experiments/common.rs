@@ -112,7 +112,12 @@ pub struct CorpusData {
     pub history: History,
 }
 
-pub fn corpus_data(ctx: &mut ModelCtx, corpus_idx: usize, scale: Scale, seed: u64) -> Result<CorpusData> {
+pub fn corpus_data(
+    ctx: &mut ModelCtx,
+    corpus_idx: usize,
+    scale: Scale,
+    seed: u64,
+) -> Result<CorpusData> {
     let spec = standard_corpora()[corpus_idx].clone();
     let corpus = Corpus::new(spec);
     let (train, test) = corpus.split(scale.train, scale.test, seed);

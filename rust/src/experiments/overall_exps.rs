@@ -7,9 +7,10 @@ use anyhow::Result;
 
 use crate::baselines::{serve_baseline_profiles, BaselineEvaluator, Strategy};
 use crate::config::SystemConfig;
-use crate::coordinator::{prompt_signature, serve_remoe_with, ServeOptions};
+use crate::coordinator::{prompt_signature, serve_on_platform, RemoePolicy, ServeOptions};
 use crate::metrics::{fmt_f, Aggregator, Table};
 use crate::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
+use crate::serverless::Platform;
 use crate::util::stats::summarize;
 use crate::workload::trace::poisson_trace_over;
 
@@ -166,7 +167,11 @@ pub fn fig10(scale: Scale) -> Result<()> {
         t.print();
     }
     println!("(paper: Remoe stable across ratios; CPU overtakes others as decode grows on gpt2; GPU worst everywhere on dsv2)");
-    write_csv("fig10_ratios", &["model", "ratio", "cpu", "gpu", "fetch", "mix", "remoe"], &csv_rows)?;
+    write_csv(
+        "fig10_ratios",
+        &["model", "ratio", "cpu", "gpu", "fetch", "mix", "remoe"],
+        &csv_rows,
+    )?;
     Ok(())
 }
 
@@ -243,12 +248,19 @@ pub fn fig11(scale: Scale) -> Result<()> {
 
 /// Event-driven serving comparison: every strategy under the *same*
 /// concurrent open-loop Poisson trace, executed through the platform
-/// simulator (queueing, cold starts and keep-alive included). This is
-/// the load-bearing extension of Fig. 9 beyond per-request accounting.
+/// simulator (queueing, cold starts and keep-alive included), each
+/// both unbatched (`batch_capacity = 1`, the paper's one-request-per-
+/// instance execution) and with continuous batching on the main
+/// function — the cost/TTFT/queueing frontier on one shared trace.
+/// This is the load-bearing extension of Fig. 9 beyond per-request
+/// accounting.
 pub fn serving(scale: Scale) -> Result<()> {
     println!("\n== Serving — concurrent open-loop trace through the event-driven platform ==");
     let cfg = SystemConfig::default();
-    let rate_per_s = 0.5;
+    // mean gap 0.2 s against multi-second service times: overlapping
+    // arrivals are certain, so the unbatched config must queue
+    let rate_per_s = 5.0;
+    let batch_capacity = 8;
     let mut csv_rows = Vec::new();
     for which in ["gpt2", "dsv2"] {
         let small = Scale { requests: scale.requests.min(8), ..scale };
@@ -262,36 +274,76 @@ pub fn serving(scale: Scale) -> Result<()> {
         for req in &trace {
             profiles.push(ctx.measured_profile(&req.prompt, req.n_out)?);
         }
-        let opts = ServeOptions::default();
+        let unbatched = ServeOptions::default();
+        let batched = ServeOptions { batch_capacity, ..ServeOptions::default() };
         println!(
             "-- {} ({} requests, Poisson {:.1}/s, keep-alive {:.0}s, 1 main instance) --",
             ctx.dims.name,
             trace.len(),
             rate_per_s,
-            opts.keepalive_s
+            unbatched.keepalive_s
         );
 
         let mut t = Table::new(&[
-            "strategy", "total cost", "mean ttft (s)", "mean queue (s)", "p90 queue (s)",
+            "strategy",
+            "batch",
+            "total cost",
+            "mean ttft (s)",
+            "mean queue (s)",
+            "p90 queue (s)",
+            "mean batch",
             "cold starts",
         ]);
-        let serving_row = |agg: &Aggregator| -> Vec<String> {
+        let serving_row = |agg: &Aggregator, capacity: usize| -> Vec<String> {
             vec![
                 agg.records[0].strategy.to_string(),
+                capacity.to_string(),
                 fmt_f(agg.total_cost(), 1),
                 fmt_f(agg.ttft_summary().mean, 2),
                 fmt_f(agg.queue_delay_summary().mean, 2),
                 fmt_f(agg.queue_delay_summary().p90, 2),
+                fmt_f(agg.mean_batch(), 2),
                 agg.cold_paid().to_string(),
             ]
         };
         let mut gpu_total = f64::INFINITY;
         for s in Strategy::all_baselines() {
-            let agg = serve_baseline_profiles(&ev, s, &trace, &profiles, &opts)?;
-            if s == Strategy::Gpu {
-                gpu_total = agg.total_cost();
+            // the baselines serve through the identical (batched or
+            // unbatched) scheduler substrate on the same trace
+            for opts in [&unbatched, &batched] {
+                let agg = serve_baseline_profiles(&ev, s, &trace, &profiles, opts)?;
+                if s == Strategy::Gpu && opts.batch_capacity == 1 {
+                    gpu_total = agg.total_cost();
+                }
+                let row = serving_row(&agg, opts.batch_capacity);
+                t.row(row.clone());
+                csv_rows.push({
+                    let mut r = vec![ctx.dims.name.clone()];
+                    r.extend(row);
+                    r
+                });
             }
-            let row = serving_row(&agg);
+        }
+        // Remoe under both configs, auditing the billing ledger
+        // against the per-request cost attribution each time
+        let mut remoe_audited = |opts: &ServeOptions| -> Result<Aggregator> {
+            let mut platform = Platform::new(&planner.platform, opts.seed);
+            let mut policy =
+                RemoePolicy { engine: &mut ctx.engine, planner: &planner, predictor: &sps };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, opts)?;
+            let ledger = platform.billing.total();
+            anyhow::ensure!(
+                (ledger - agg.total_cost()).abs() <= 1e-9 * ledger.max(1.0),
+                "ledger {} != Σ record costs {}",
+                ledger,
+                agg.total_cost()
+            );
+            Ok(agg)
+        };
+        let agg_unbatched = remoe_audited(&unbatched)?;
+        let agg_batched = remoe_audited(&batched)?;
+        for (agg, opts) in [(&agg_unbatched, &unbatched), (&agg_batched, &batched)] {
+            let row = serving_row(agg, opts.batch_capacity);
             t.row(row.clone());
             csv_rows.push({
                 let mut r = vec![ctx.dims.name.clone()];
@@ -299,30 +351,39 @@ pub fn serving(scale: Scale) -> Result<()> {
                 r
             });
         }
-        let agg = serve_remoe_with(&mut ctx.engine, &planner, &sps, &trace, &opts)?;
-        let row = serving_row(&agg);
-        t.row(row.clone());
-        csv_rows.push({
-            let mut r = vec![ctx.dims.name.clone()];
-            r.extend(row);
-            r
-        });
         t.print();
+        // the continuous-batching contract: joining in-flight slots
+        // strictly beats queueing behind one-request-per-instance
+        anyhow::ensure!(
+            agg_batched.queue_delay_summary().mean < agg_unbatched.queue_delay_summary().mean,
+            "batched mean queue ({}) must be strictly below unbatched ({})",
+            agg_batched.queue_delay_summary().mean,
+            agg_unbatched.queue_delay_summary().mean
+        );
         if which == "dsv2" {
             // the paper's regime carries over to concurrent serving:
             // Remoe undercuts the all-GPU deployment under load
             anyhow::ensure!(
-                agg.total_cost() < gpu_total,
+                agg_unbatched.total_cost() < gpu_total,
                 "Remoe ({}) should undercut the all-GPU baseline ({}) on dsv2",
-                agg.total_cost(),
+                agg_unbatched.total_cost(),
                 gpu_total
             );
         }
     }
     write_csv(
         "serving_trace",
-        &["model", "strategy", "total_cost", "mean_ttft_s", "mean_queue_s", "p90_queue_s",
-          "cold_starts"],
+        &[
+            "model",
+            "strategy",
+            "batch",
+            "total_cost",
+            "mean_ttft_s",
+            "mean_queue_s",
+            "p90_queue_s",
+            "mean_batch",
+            "cold_starts",
+        ],
         &csv_rows,
     )?;
     Ok(())
@@ -345,7 +406,8 @@ pub fn summary(scale: Scale) -> Result<()> {
         let remoe = costs.iter().find(|(s, _)| *s == Strategy::Remoe).unwrap().1;
         let mix = costs.iter().find(|(s, _)| *s == Strategy::Mix).unwrap().1;
         best_reduction = best_reduction.max(1.0 - remoe / mix);
-        let mono = ev.evaluate(Strategy::Mix, &ctx.measured_profile(prompt, scale.n_out)?).cold_start_s;
+        let profile = ctx.measured_profile(prompt, scale.n_out)?;
+        let mono = ev.evaluate(Strategy::Mix, &profile).cold_start_s;
         cold_red = cold_red.max(1.0 - cold / mono);
     }
     println!(

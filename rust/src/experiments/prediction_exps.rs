@@ -53,11 +53,23 @@ pub fn fig3(scale: Scale) -> Result<()> {
 
 /// Fig. 8: mean JSD of each predictor on each dataset + timings.
 pub fn fig8(scale: Scale) -> Result<()> {
-    println!("\n== Fig. 8 — prediction JSD across datasets (α={}, β={}) ==", scale.alpha, scale.beta);
+    println!(
+        "\n== Fig. 8 — prediction JSD across datasets (α={}, β={}) ==",
+        scale.alpha, scale.beta
+    );
     let corpora = standard_corpora();
     let mut table = Table::new(&[
-        "dataset", "Remoe(SPS)", "VarPAM", "VarED", "DOP", "Fate", "EF", "BF",
-        "tree-build(s)", "SPS-search(µs)", "BF-search(µs)",
+        "dataset",
+        "Remoe(SPS)",
+        "VarPAM",
+        "VarED",
+        "DOP",
+        "Fate",
+        "EF",
+        "BF",
+        "tree-build(s)",
+        "SPS-search(µs)",
+        "BF-search(µs)",
     ]);
     let mut csv_rows = Vec::new();
 
@@ -120,11 +132,24 @@ pub fn fig8(scale: Scale) -> Result<()> {
         csv_rows.push(row);
     }
     table.print();
-    println!("(paper: Remoe lowest after VarPAM/BF; tree build ≤0.5 s vs hours; SPS >10× faster than BF)");
+    println!(
+        "(paper: Remoe lowest after VarPAM/BF; tree build ≤0.5 s vs hours; SPS >10× faster than BF)"
+    );
     write_csv(
         "fig8_prediction_jsd",
-        &["dataset", "sps", "varpam", "vared", "dop", "fate", "ef", "bf",
-          "tree_build_s", "sps_search_us", "bf_search_us"],
+        &[
+            "dataset",
+            "sps",
+            "varpam",
+            "vared",
+            "dop",
+            "fate",
+            "ef",
+            "bf",
+            "tree_build_s",
+            "sps_search_us",
+            "bf_search_us",
+        ],
         &csv_rows,
     )?;
     Ok(())

@@ -3,6 +3,7 @@
 //! ```text
 //! remoe exp <id|all> [--scale tiny|default|paper]   reproduce a paper figure/table
 //! remoe serve [--model M] [--requests N] [--rate R] serve a Poisson trace end-to-end
+//!             [--instances I] [--batch C]           (C>1: continuous batching)
 //! remoe plan  [--model M]                           plan one request, print the deployment
 //! remoe info                                        artifact + model inventory
 //! ```
@@ -87,6 +88,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOptions {
         keepalive_s: args.f64_or("keepalive", 60.0),
         main_instances: args.usize_or("instances", 1),
+        batch_capacity: args.usize_or("batch", 1),
         ..ServeOptions::default()
     };
 
@@ -131,7 +133,15 @@ fn serve_and_report<B: Backend>(
     let agg = serve_remoe_with(engine, planner, &sps, trace, opts)?;
 
     let mut t = Table::new(&[
-        "req", "n_in", "queue (s)", "ttft (s)", "tpot (s)", "cost", "cold (s)", "calc (s)",
+        "req",
+        "n_in",
+        "queue (s)",
+        "batch",
+        "ttft (s)",
+        "tpot (s)",
+        "cost",
+        "cold (s)",
+        "calc (s)",
         "engine (s)",
     ]);
     for r in &agg.records {
@@ -139,6 +149,7 @@ fn serve_and_report<B: Backend>(
             r.id.to_string(),
             r.n_in.to_string(),
             fmt_f(r.queue_delay_s, 2),
+            r.batch.to_string(),
             fmt_f(r.ttft_s, 2),
             fmt_f(r.tpot_s, 4),
             fmt_f(r.cost, 1),
@@ -150,11 +161,13 @@ fn serve_and_report<B: Backend>(
     t.print();
     println!(
         "totals: cost={:.1}  mean ttft={:.2}s  mean tpot={:.4}s  mean queue={:.2}s  \
-         cold starts={}  makespan={:.1}s  engine throughput={:.2} req/s ({:.0} tok/s)",
+         mean batch={:.2}  cold starts={}  makespan={:.1}s  \
+         engine throughput={:.2} req/s ({:.0} tok/s)",
         agg.total_cost(),
         agg.ttft_summary().mean,
         agg.tpot_summary().mean,
         agg.queue_delay_summary().mean,
+        agg.mean_batch(),
         agg.cold_paid(),
         agg.makespan_s(),
         agg.engine_throughput(),

@@ -37,6 +37,10 @@ pub struct RequestRecord {
     pub main_cold_s: f64,
     /// Main-model instance that served the request.
     pub instance: u64,
+    /// Continuous-batching batch size at admission: slots occupied on
+    /// the serving instance when this request's prefill was admitted,
+    /// including this request (1 ⇔ unbatched).
+    pub batch: usize,
     /// Requests in flight (admitted, not finished) at this arrival,
     /// including this one.
     pub concurrency: usize,
@@ -89,6 +93,14 @@ impl Aggregator {
             / self.records.len() as f64
     }
 
+    /// Mean continuous-batching batch size observed at admission.
+    pub fn mean_batch(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.batch as f64).sum::<f64>() / self.records.len() as f64
+    }
+
     /// Requests that paid any cold start.
     pub fn cold_paid(&self) -> usize {
         self.records.iter().filter(|r| r.cold_start_s > 0.0).count()
@@ -112,7 +124,7 @@ impl Aggregator {
             out.push_str(&format!(
                 "id={} strategy={} n_in={} n_out={} arrival={:?} queue={:?} start={:?} \
                  finish={:?} ttft={:?} tpot={:?} cost={:?} cold={:?} main_cold={:?} \
-                 inst={} conc={}\n",
+                 inst={} batch={} conc={}\n",
                 r.id,
                 r.strategy,
                 r.n_in,
@@ -127,6 +139,7 @@ impl Aggregator {
                 r.cold_start_s,
                 r.main_cold_s,
                 r.instance,
+                r.batch,
                 r.concurrency,
             ));
         }
@@ -256,6 +269,7 @@ mod tests {
             finish_s: 10.0 + id as f64,
             main_cold_s: if id == 0 { 2.0 } else { 0.0 },
             instance: 0,
+            batch: 1 + id,
             concurrency: 1 + id,
         }
     }
@@ -279,6 +293,7 @@ mod tests {
         a.push(rec(1, 30.0));
         assert!((a.queue_delay_summary().mean - 0.25).abs() < 1e-12);
         assert!((a.mean_concurrency() - 1.5).abs() < 1e-12);
+        assert!((a.mean_batch() - 1.5).abs() < 1e-12);
         assert_eq!(a.cold_paid(), 2);
         assert!((a.makespan_s() - 11.0).abs() < 1e-12);
         assert!((a.records[1].e2e_s() - 10.0).abs() < 1e-12);
@@ -296,6 +311,7 @@ mod tests {
         assert_eq!(a.canonical(), b.canonical());
         assert!(a.canonical().contains("queue="));
         assert!(a.canonical().contains("cold="));
+        assert!(a.canonical().contains("batch="));
     }
 
     #[test]

@@ -482,7 +482,8 @@ impl<B: Backend> Engine<B> {
                 }
                 let rows: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
                 let x = xln.gather_rows(&rows);
-                let y = self.backend.expert(&self.weights.layers[l].experts[k], &x, &self.hyper.act)?;
+                let y =
+                    self.backend.expert(&self.weights.layers[l].experts[k], &x, &self.hyper.act)?;
                 for (j, &(tok, wv)) in group.iter().enumerate() {
                     let yr = y.row(j);
                     let out = moe_out.row_mut(tok);

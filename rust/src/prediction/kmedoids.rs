@@ -134,7 +134,8 @@ pub fn pam<D: Fn(usize, usize) -> f64>(
     assert!(k >= 1 && k <= n);
     // BUILD: first medoid minimises total distance; next ones greedily.
     let total_dist = |m: usize| -> f64 { (0..n).map(|i| dist(points[i], points[m])).sum() };
-    let mut medoids = vec![(0..n).min_by(|&a, &b| total_dist(a).partial_cmp(&total_dist(b)).unwrap()).unwrap()];
+    let cmp_total = |&a: &usize, &b: &usize| total_dist(a).partial_cmp(&total_dist(b)).unwrap();
+    let mut medoids = vec![(0..n).min_by(cmp_total).unwrap()];
     while medoids.len() < k {
         let mut best = None;
         let mut best_gain = f64::NEG_INFINITY;
@@ -161,11 +162,10 @@ pub fn pam<D: Fn(usize, usize) -> f64>(
     // SWAP
     for _ in 0..max_iters {
         let mut improved = false;
-        let cost_of = |meds: &[usize]| -> f64 {
-            (0..n)
-                .map(|i| meds.iter().map(|&m| dist(points[i], points[m])).fold(f64::INFINITY, f64::min))
-                .sum()
+        let nearest = |meds: &[usize], i: usize| -> f64 {
+            meds.iter().map(|&m| dist(points[i], points[m])).fold(f64::INFINITY, f64::min)
         };
+        let cost_of = |meds: &[usize]| -> f64 { (0..n).map(|i| nearest(meds, i)).sum() };
         let mut cur_cost = cost_of(&medoids);
         'swap: for c in 0..k {
             for cand in 0..n {

@@ -124,7 +124,12 @@ impl ClusterTree {
         id
     }
 
-    fn set_leaf_medoid<D: Fn(usize, usize) -> f64>(&mut self, id: usize, members: &[usize], dist: &D) {
+    fn set_leaf_medoid<D: Fn(usize, usize) -> f64>(
+        &mut self,
+        id: usize,
+        members: &[usize],
+        dist: &D,
+    ) {
         // leaf medoid = member minimising total intra-leaf distance
         let mut best = members[0];
         let mut best_cost = f64::INFINITY;

@@ -1,20 +1,37 @@
 //! Virtual-time serverless platform: function deployment, per-instance
-//! warm pools with keep-alive, cold starts, concurrency limits with
-//! scale-out, queueing, and invocation billing.
+//! warm pools with keep-alive, cold starts, slot-based continuous
+//! batching, concurrency limits with scale-out, queueing, and
+//! invocation billing.
 //!
 //! The analytic cost model (costmodel::) evaluates eqs. (1)–(9) in
 //! closed form; this simulator mirrors the same pricing rules over an
 //! event timeline so the serving scheduler can produce per-request
 //! latency — including *queueing delay* under concurrent arrivals and
 //! cold starts under a Poisson trace — and an auditable billing
-//! ledger. Each function owns a pool of instances; an instance serves
-//! one invocation at a time (the serverless execution model), stays
-//! warm for `keepalive_s` after finishing, and is evicted once both
-//! idle and expired. When every live instance is busy the platform
-//! either *scales out* (spawns a cold instance, if under the
-//! function's instance limit) or *queues* the invocation on the
-//! earliest-free instance. Requests are single-batch, matching the
-//! paper's low-overhead serving assumption (§II).
+//! ledger. Each function owns a pool of instances; an instance holds
+//! `batch_capacity` execution *slots* (the continuous-batching width),
+//! serves one invocation per slot, stays warm for `keepalive_s` after
+//! its last slot finishes, and is ignored once both idle and expired.
+//! Eviction is *lazy*: the pool is filtered per lookup and never
+//! pruned at a call's timestamp, because the event-driven scheduler
+//! legitimately issues invocations out of order (a decode segment at
+//! `t_dec` can be issued after a later request's arrival was already
+//! admitted) — pruning eagerly would let a later-time call evict an
+//! instance that was still warm at an earlier event time and
+//! manufacture spurious cold starts.
+//!
+//! When every admissible instance's slots are busy the platform either
+//! *scales out* (spawns a cold instance, if under the function's
+//! instance limit) or *queues* the invocation on the earliest-free
+//! slot. A cold-started instance's spare slots open only at its
+//! readiness time (container up + weights loaded): a joiner landing
+//! in the cold window waits for readiness as queueing delay instead
+//! of being served by an instance that is not up yet. An instance
+//! bills the **union** of its occupied time, so requests co-batched
+//! on one instance share the bill instead of each paying the full
+//! memory-seconds — the serverless case for batched decode (§II);
+//! covered occupancy at a larger memory spec re-bills only the
+//! excess over what that sub-interval already billed.
 
 use std::collections::BTreeMap;
 
@@ -36,17 +53,172 @@ pub struct FunctionSpec {
     pub gpu_mb: f64,
     /// Parameter bytes to load from disk on cold start, MB.
     pub footprint_mb: f64,
+    /// Continuous-batching width: concurrent invocations one instance
+    /// admits (execution slots). 1 reproduces the classic one-request
+    /// -per-instance serverless execution model. Applies to instances
+    /// spawned after deployment; live instances keep their slot count.
+    pub batch_capacity: usize,
     pub component: CostComponent,
 }
 
-/// One live function instance in the pool.
+/// One billed sub-interval of an instance's occupancy, with the
+/// memory specs already charged for it.
 #[derive(Debug, Clone, Copy)]
+struct BilledSpan {
+    start: f64,
+    end: f64,
+    mem_mb: f64,
+    gpu_mb: f64,
+}
+
+/// One live function instance in the pool.
+#[derive(Debug, Clone)]
 struct Instance {
     id: u64,
+    /// Virtual time this instance was spawned: it does not exist (is
+    /// not live, admissible or countable) at earlier timestamps.
+    spawned_at: f64,
+    /// Container up + weights loaded: no slot can begin service
+    /// before this (the spawner's invocation pays the cold start
+    /// inside its own occupancy; joiners queue until readiness).
+    ready_at: f64,
     /// Virtual time until which this instance stays warm when idle.
     warm_until: f64,
-    /// Virtual time until which this instance is serving an invocation.
-    busy_until: f64,
+    /// Per-slot busy horizon: slot `s` is serving an invocation until
+    /// `slots[s]`; a slot is free at `t` once both past its busy
+    /// horizon and past `ready_at`.
+    slots: Vec<f64>,
+    /// Billed occupancy spans (sorted, disjoint). New occupancy is
+    /// charged fully where uncovered and only for the spec excess
+    /// where covered, so co-batched requests share one instance-time
+    /// bill without a bigger co-batched plan ever riding fully free.
+    billed: Vec<BilledSpan>,
+}
+
+impl Instance {
+    /// Live (warm or busy) at `t`? `warm_until` is maintained as
+    /// max(finish + keepalive) over all slots; an instance is never
+    /// live before it was spawned (an out-of-order caller must not
+    /// see instances from its future).
+    fn live_at(&self, t: f64) -> bool {
+        self.spawned_at <= t && self.warm_until >= t
+    }
+
+    /// When slot `s` can next begin service.
+    fn slot_free_at(&self, s: usize) -> f64 {
+        self.slots[s].max(self.ready_at)
+    }
+
+    /// Slots still serving at `t`.
+    fn occupied_at(&self, t: f64) -> usize {
+        self.slots.iter().filter(|&&b| b > t).count()
+    }
+
+    /// Most recent activity on any slot (LIFO warm-pool preference).
+    fn last_activity(&self) -> f64 {
+        self.slots.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Merge occupancy [start, end] at (mem_mb, gpu_mb) into the
+    /// billed-span set and return the charge pieces as
+    /// (mem_mb, gpu_mb, duration): uncovered sub-intervals bill the
+    /// full spec; covered sub-intervals bill only the excess over
+    /// what that sub-interval already billed. Per-span spec tracking
+    /// keeps shared-window totals independent of admission order.
+    fn bill_occupancy(
+        &mut self,
+        start: f64,
+        end: f64,
+        mem_mb: f64,
+        gpu_mb: f64,
+    ) -> Vec<(f64, f64, f64)> {
+        let mut pieces = Vec::new();
+        let mut spans = Vec::with_capacity(self.billed.len() + 3);
+        let mut cursor = start;
+        for span in self.billed.drain(..) {
+            if span.end <= start || span.start >= end {
+                spans.push(span);
+                continue;
+            }
+            let lo = span.start.max(start);
+            let hi = span.end.min(end);
+            // uncovered gap before this overlap bills the full spec
+            if cursor < lo {
+                pieces.push((mem_mb, gpu_mb, lo - cursor));
+                spans.push(BilledSpan { start: cursor, end: lo, mem_mb, gpu_mb });
+            }
+            // covered part bills only the excess over its past spec
+            let d_mem = (mem_mb - span.mem_mb).max(0.0);
+            let d_gpu = (gpu_mb - span.gpu_mb).max(0.0);
+            if hi > lo && (d_mem > 0.0 || d_gpu > 0.0) {
+                pieces.push((d_mem, d_gpu, hi - lo));
+            }
+            // split the span: outside parts keep their spec, the
+            // overlap rises to the max spec seen
+            if span.start < lo {
+                spans.push(BilledSpan { end: lo, ..span });
+            }
+            if hi > lo {
+                spans.push(BilledSpan {
+                    start: lo,
+                    end: hi,
+                    mem_mb: span.mem_mb.max(mem_mb),
+                    gpu_mb: span.gpu_mb.max(gpu_mb),
+                });
+            }
+            if span.end > hi {
+                spans.push(BilledSpan { start: hi, ..span });
+            }
+            cursor = cursor.max(hi);
+        }
+        if cursor < end {
+            pieces.push((mem_mb, gpu_mb, end - cursor));
+            spans.push(BilledSpan { start: cursor, end, mem_mb, gpu_mb });
+        }
+        spans.sort_by(|a, b| a.start.total_cmp(&b.start));
+        // coalesce touching spans with identical specs (a request's
+        // prefill + decode segments, back-to-back same-spec requests)
+        // so the set stays proportional to the distinct billing
+        // windows, not to the invocation count
+        let mut merged: Vec<BilledSpan> = Vec::with_capacity(spans.len());
+        for span in spans {
+            match merged.last_mut() {
+                Some(last)
+                    if span.start <= last.end
+                        && span.mem_mb == last.mem_mb
+                        && span.gpu_mb == last.gpu_mb =>
+                {
+                    last.end = last.end.max(span.end);
+                }
+                _ => merged.push(span),
+            }
+        }
+        self.billed = merged;
+        pieces
+    }
+}
+
+/// Charge one occupancy `[queue_exit, finished_at]` of `inst` under
+/// union billing (see [`Instance::bill_occupancy`]).
+fn charge_union(
+    billing: &mut BillingMeter,
+    inst: &mut Instance,
+    spec: &FunctionSpec,
+    cpu_rate: f64,
+    gpu_rate: f64,
+    queue_exit: f64,
+    finished_at: f64,
+) {
+    for (mem_mb, gpu_mb, dur) in
+        inst.bill_occupancy(queue_exit, finished_at, spec.mem_mb, spec.gpu_mb)
+    {
+        if mem_mb > 0.0 {
+            billing.charge(spec.component, mem_mb, dur, cpu_rate);
+        }
+        if gpu_mb > 0.0 {
+            billing.charge(CostComponent::MainGpu, gpu_mb, dur, gpu_rate);
+        }
+    }
 }
 
 /// Result of one invocation.
@@ -57,10 +229,14 @@ pub struct Invocation {
     pub finished_at: f64,
     pub cold_start_s: f64,
     pub invoke_overhead_s: f64,
-    /// Time spent waiting for a free instance (concurrency contention).
+    /// Time spent waiting for a free slot (concurrency contention).
     pub queue_delay_s: f64,
     /// Id of the instance that served the call.
     pub instance: u64,
+    /// Slots occupied on the serving instance at admission (queue
+    /// exit), including this invocation — the continuous-batching
+    /// batch size this call joined.
+    pub batch: usize,
 }
 
 impl Invocation {
@@ -129,7 +305,11 @@ impl Platform {
     }
 
     /// Cap the number of concurrently-live instances of `name`.
-    /// Invocations beyond the cap queue on the earliest-free instance.
+    /// Invocations beyond the cap queue on the earliest-free slot.
+    /// Lowering the limit below the live pool size *drains*
+    /// deterministically: only the `limit` oldest live instances admit
+    /// new work; the excess finish their in-flight invocations and
+    /// expire through keep-alive.
     pub fn set_instance_limit(&mut self, name: &str, limit: usize) {
         self.limits.insert(name.to_string(), limit.max(1));
     }
@@ -145,11 +325,14 @@ impl Platform {
     }
 
     /// Invoke `name` at virtual time `at` with `work_s` of compute and
-    /// an inbound payload. Resolves instance contention (warm hit,
-    /// cold scale-out, or queueing), bills the function's memory for
-    /// its *active* duration (cold start included, queue wait
-    /// excluded), and does NOT advance the global clock — this is the
-    /// event-driven entry point the serving scheduler drives.
+    /// an inbound payload. Resolves slot contention (warm join-in-
+    /// flight, cold scale-out, or queueing), bills the function's
+    /// memory for the *uncovered* part of its occupancy (union
+    /// billing; cold start included, queue wait excluded), and does
+    /// NOT advance the global clock — this is the event-driven entry
+    /// point the serving scheduler drives. `at` may regress relative
+    /// to earlier calls (out-of-order event timestamps are resolved
+    /// against lazily-filtered, never eagerly-pruned pool state).
     pub fn invoke_at(
         &mut self,
         name: &str,
@@ -161,50 +344,76 @@ impl Platform {
         let spec = self.specs.get(name).expect("function not deployed").clone();
         let limit = self.instance_limit(name);
         let pool = self.pool.get_mut(name).unwrap();
-        // evict instances that are both idle and past their keep-alive
-        pool.retain(|i| i.busy_until > at || i.warm_until >= at);
 
-        // Prefer the most-recently-used idle instance (LIFO warm pool),
-        // ties broken by id for determinism.
-        let mut idle: Option<usize> = None;
-        for idx in 0..pool.len() {
-            if pool[idx].busy_until <= at {
-                let better = match idle {
-                    None => true,
-                    Some(best) => {
-                        pool[idx].busy_until > pool[best].busy_until
-                            || (pool[idx].busy_until == pool[best].busy_until
-                                && pool[idx].id < pool[best].id)
-                    }
-                };
-                if better {
-                    idle = Some(idx);
-                }
+        // Lazy liveness: never prune on `at` (it can regress); the pool
+        // is in spawn order, so ids ascend with the index.
+        let live_idx: Vec<usize> = (0..pool.len()).filter(|&i| pool[i].live_at(at)).collect();
+        // Draining clamp: if a caller lowered the instance limit below
+        // the live pool, only the `limit` oldest live instances admit
+        // new work; the rest drain (finish, then expire by keep-alive).
+        let admissible = &live_idx[..live_idx.len().min(limit)];
+
+        // Join-in-flight admission: prefer the instance already serving
+        // the largest batch (maximises the billed-time union shared),
+        // then the most recently used (LIFO warm pool), ties broken by
+        // spawn order for determinism. Within an instance the lowest
+        // free slot index wins.
+        let mut hit: Option<(usize, usize, usize, f64)> = None; // (idx, slot, occupied, mru)
+        for &i in admissible {
+            let inst = &pool[i];
+            let Some(slot) = (0..inst.slots.len()).find(|&s| inst.slot_free_at(s) <= at) else {
+                continue;
+            };
+            let occupied = inst.occupied_at(at);
+            let mru = inst.last_activity();
+            let better = match hit {
+                None => true,
+                Some((_, _, occ, best_mru)) => (occupied, mru) > (occ, best_mru),
+            };
+            if better {
+                hit = Some((i, slot, occupied, mru));
             }
         }
-        let (idx, queue_exit, cold_start_s) = match idle {
-            // warm hit: an idle instance never pays a cold start
-            Some(idx) => (idx, at, 0.0),
-            // scale-out: spawn a fresh (cold) instance under the cap
-            None if pool.len() < limit => {
+
+        let (idx, slot, queue_exit, cold_start_s) = match hit {
+            // warm hit: a free slot on a live instance never pays a
+            // cold start
+            Some((idx, slot, _, _)) => (idx, slot, at, 0.0),
+            // scale-out: spawn a fresh (cold) instance under the cap.
+            // Spare slots open only at `ready_at` — a joiner arriving
+            // during the cold window queues until the container is up
+            // and the weights are loaded, it does not time-travel onto
+            // an instance that is not serving yet.
+            None if live_idx.len() < limit => {
                 let id = self.next_instance;
                 self.next_instance += 1;
-                pool.push(Instance { id, warm_until: at, busy_until: at });
-                (pool.len() - 1, at, self.cold.function(spec.footprint_mb).total())
+                let capacity = spec.batch_capacity.max(1);
+                let cold_start_s = self.cold.function(spec.footprint_mb).total();
+                pool.push(Instance {
+                    id,
+                    spawned_at: at,
+                    ready_at: at + cold_start_s,
+                    warm_until: at,
+                    slots: vec![at; capacity],
+                    billed: Vec::new(),
+                });
+                (pool.len() - 1, 0, at, cold_start_s)
             }
-            // saturated: queue on the earliest-free instance (which is
-            // warm by construction — it just finished serving)
+            // saturated: queue on the earliest-free slot of an
+            // admissible instance (warm by construction — it is busy
+            // or warming right up to the queue exit)
             None => {
-                let mut best = 0;
-                for idx in 1..pool.len() {
-                    if pool[idx].busy_until < pool[best].busy_until
-                        || (pool[idx].busy_until == pool[best].busy_until
-                            && pool[idx].id < pool[best].id)
-                    {
-                        best = idx;
+                let mut best: Option<(usize, usize)> = None;
+                for &i in admissible {
+                    for s in 0..pool[i].slots.len() {
+                        let free = pool[i].slot_free_at(s);
+                        if best.map_or(true, |(bi, bs)| free < pool[bi].slot_free_at(bs)) {
+                            best = Some((i, s));
+                        }
                     }
                 }
-                (best, pool[best].busy_until, 0.0)
+                let (i, s) = best.expect("saturated pool must have a live instance");
+                (i, s, pool[i].slot_free_at(s), 0.0)
             }
         };
 
@@ -218,22 +427,24 @@ impl Platform {
         let started_at = queue_exit + cold_start_s + invoke_overhead_s + transfer;
         let finished_at = started_at + work_s;
 
-        let instance = {
-            let inst = &mut pool[idx];
-            inst.busy_until = finished_at;
-            inst.warm_until = finished_at + self.keepalive_s;
-            inst.id
-        };
-
+        let inst = &mut pool[idx];
+        let batch = inst.occupied_at(queue_exit) + 1;
+        inst.slots[slot] = finished_at;
+        inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
+        let instance = inst.id;
         // billed duration: active time incl. cold start (the paper's
         // Fig. 1: charged for the entire runtime of the function), but
-        // NOT the queue wait — a queued request's instance is busy
-        // serving (and billing) someone else.
-        let billed = finished_at - queue_exit;
-        self.billing.charge(spec.component, spec.mem_mb, billed, self.cpu_rate);
-        if spec.gpu_mb > 0.0 {
-            self.billing.charge(CostComponent::MainGpu, spec.gpu_mb, billed, self.gpu_rate);
-        }
+        // NOT the queue wait — and only the part of the occupancy not
+        // already billed to a co-batched invocation (union billing).
+        charge_union(
+            &mut self.billing,
+            inst,
+            &spec,
+            self.cpu_rate,
+            self.gpu_rate,
+            queue_exit,
+            finished_at,
+        );
 
         Ok(Invocation {
             queued_at: at,
@@ -243,6 +454,73 @@ impl Platform {
             invoke_overhead_s,
             queue_delay_s,
             instance,
+            batch,
+        })
+    }
+
+    /// Continue an in-flight request on a specific instance — the
+    /// continuous-batching decode segment. Occupies the slot freeing
+    /// latest by `at` (the caller's own just-finished prefill slot),
+    /// or the earliest-free slot if all are still busy; pays no cold
+    /// start, invoke overhead or payload transfer (it is the same
+    /// function execution continuing on resident state), and bills the
+    /// uncovered occupancy like any other invocation.
+    pub fn invoke_on(
+        &mut self,
+        name: &str,
+        instance: u64,
+        at: f64,
+        work_s: f64,
+    ) -> anyhow::Result<Invocation> {
+        let spec = self.specs.get(name).expect("function not deployed").clone();
+        let pool = self.pool.get_mut(name).unwrap();
+        let inst = pool
+            .iter_mut()
+            .find(|i| i.id == instance)
+            .ok_or_else(|| anyhow::anyhow!("instance {instance} of {name} is not in the pool"))?;
+        // Prefer the slot that freed most recently but is free by
+        // `at` (slot reuse keeps a segment chain on one slot); if none
+        // is free, queue on the earliest-free slot. Ties break on the
+        // lower slot index.
+        let mut slot = 0;
+        for s in 0..inst.slots.len() {
+            let b = inst.slot_free_at(s);
+            let cur = inst.slot_free_at(slot);
+            let better = if b <= at {
+                cur > at || b > cur
+            } else {
+                cur > at && b < cur
+            };
+            if better {
+                slot = s;
+            }
+        }
+        let queue_exit = inst.slot_free_at(slot).max(at);
+        let queue_delay_s = queue_exit - at;
+        let started_at = queue_exit;
+        let finished_at = started_at + work_s;
+        let batch = inst.occupied_at(queue_exit) + 1;
+        inst.slots[slot] = finished_at;
+        inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
+        charge_union(
+            &mut self.billing,
+            inst,
+            &spec,
+            self.cpu_rate,
+            self.gpu_rate,
+            queue_exit,
+            finished_at,
+        );
+
+        Ok(Invocation {
+            queued_at: at,
+            started_at,
+            finished_at,
+            cold_start_s: 0.0,
+            invoke_overhead_s: 0.0,
+            queue_delay_s,
+            instance,
+            batch,
         })
     }
 
@@ -279,13 +557,37 @@ impl Platform {
         Ok(results)
     }
 
-    /// Number of currently-live (warm or busy) instances of a function.
-    pub fn warm_count(&mut self, name: &str) -> usize {
-        let now = self.clock;
-        self.pool.get_mut(name).map_or(0, |p| {
-            p.retain(|i| i.busy_until > now || i.warm_until >= now);
-            p.len()
-        })
+    /// Number of live (warm or busy) instances of a function at an
+    /// explicit virtual time. Read-only: lazy eviction means the pool
+    /// is filtered, never pruned, so event-driven callers at any
+    /// timestamp see consistent state.
+    pub fn warm_count_at(&self, name: &str, at: f64) -> usize {
+        self.pool.get(name).map_or(0, |p| p.iter().filter(|i| i.live_at(at)).count())
+    }
+
+    /// Drop instances that can never serve again. `low_water` is the
+    /// caller's promise that every future invocation timestamp will
+    /// be ≥ it (the event-driven serve loop passes the current event
+    /// time, since its events are processed in time order); instances
+    /// whose keep-alive expired before `low_water` are unreachable by
+    /// any remaining event. This is the safe, caller-driven
+    /// complement to lazy eviction — the pool itself never prunes on
+    /// a timestamp that can regress.
+    pub fn prune_expired_before(&mut self, low_water: f64) {
+        for pool in self.pool.values_mut() {
+            pool.retain(|i| i.warm_until >= low_water);
+            // billed spans that end before `low_water` can never
+            // overlap a future occupancy either — drop them too
+            for inst in pool.iter_mut() {
+                inst.billed.retain(|s| s.end > low_water);
+            }
+        }
+    }
+
+    /// [`warm_count_at`](Self::warm_count_at) evaluated at the
+    /// platform clock — the sequential-caller convenience.
+    pub fn warm_count(&self, name: &str) -> usize {
+        self.warm_count_at(name, self.clock)
     }
 }
 
@@ -301,6 +603,7 @@ mod tests {
             mem_mb: 1000.0,
             gpu_mb: 500.0,
             footprint_mb: 1000.0,
+            batch_capacity: 1,
             component: CostComponent::MainCpu,
         });
         p.deploy(FunctionSpec {
@@ -308,7 +611,22 @@ mod tests {
             mem_mb: 400.0,
             gpu_mb: 0.0,
             footprint_mb: 200.0,
+            batch_capacity: 1,
             component: CostComponent::RemoteExpertDecode,
+        });
+        p
+    }
+
+    fn batched_platform(capacity: usize) -> Platform {
+        let mut p = Platform::new(&PlatformConfig::default(), 1);
+        p.overhead_mode = InvokeOverhead::Expected;
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: 1000.0,
+            gpu_mb: 0.0,
+            footprint_mb: 1000.0,
+            batch_capacity: capacity,
+            component: CostComponent::MainCpu,
         });
         p
     }
@@ -415,7 +733,7 @@ mod tests {
         let mut p = platform();
         p.set_instance_limit("main", 1);
         p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
-        let mark = p.billing.entries().len();
+        let mark = p.billing.mark();
         let b = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
         let billed = p.billing.total_since(mark);
         // active time = overhead + work, NOT the multi-second queue wait
@@ -440,5 +758,222 @@ mod tests {
             last.insert(inv.instance, inv.finished_at);
         }
         assert!(last.len() <= 2, "instance cap violated");
+    }
+
+    #[test]
+    fn join_in_flight_shares_an_instance_up_to_capacity() {
+        let mut p = batched_platform(3);
+        p.set_instance_limit("f", 1);
+        let warm = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        assert!(warm.cold_start_s > 0.0);
+        let t = warm.finished_at + 1.0;
+        let a = p.invoke_at("f", t, 5.0, 0.0).unwrap();
+        let b = p.invoke_at("f", t, 5.0, 0.0).unwrap();
+        let c = p.invoke_at("f", t, 5.0, 0.0).unwrap();
+        let d = p.invoke_at("f", t, 5.0, 0.0).unwrap();
+        // three slots admit immediately on the warm instance; the
+        // fourth call queues on the earliest-free slot
+        for inv in [&a, &b, &c] {
+            assert_eq!(inv.cold_start_s, 0.0);
+            assert_eq!(inv.queue_delay_s, 0.0);
+        }
+        assert_eq!((a.batch, b.batch, c.batch), (1, 2, 3));
+        assert!(d.queue_delay_s > 0.0, "capacity exhausted ⇒ queueing");
+        assert!(d.batch <= 3);
+        for inv in [&a, &b, &c, &d] {
+            assert_eq!(inv.instance, warm.instance, "join-in-flight shares the instance");
+        }
+        p.advance_to(t);
+        assert_eq!(p.warm_count("f"), 1, "one instance serves the whole batch");
+    }
+
+    #[test]
+    fn joiners_during_a_cold_start_wait_for_readiness() {
+        let mut p = batched_platform(3);
+        p.set_instance_limit("f", 1);
+        let a = p.invoke_at("f", 0.0, 5.0, 0.0).unwrap();
+        assert!(a.cold_start_s > 0.0);
+        // a joiner mid-cold-start pays no cold start itself, but its
+        // slot only opens once the container is up + weights loaded
+        let b = p.invoke_at("f", 1.0, 1.0, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        assert_eq!(b.cold_start_s, 0.0);
+        assert!((b.queue_delay_s - (a.cold_start_s - 1.0)).abs() < 1e-9, "q={}", b.queue_delay_s);
+        assert!(b.started_at >= a.cold_start_s - 1e-12, "served before the instance was up");
+        // after readiness the remaining slot admits immediately
+        let c = p.invoke_at("f", a.cold_start_s + 0.1, 1.0, 0.0).unwrap();
+        assert_eq!(c.instance, a.instance);
+        assert_eq!(c.queue_delay_s, 0.0);
+    }
+
+    #[test]
+    fn union_billing_charges_overlapping_occupancy_once() {
+        let mut p = batched_platform(2);
+        p.set_instance_limit("f", 1);
+        let a = p.invoke_at("f", 0.0, 5.0, 0.0).unwrap();
+        let mark = p.billing.mark();
+        // joins once the instance is ready; its occupancy lies inside
+        // a's (which pays the cold start), so the union adds nothing:
+        // the co-batched joiner at the same spec rides free
+        let b = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        assert_eq!(b.cold_start_s, 0.0);
+        assert!((b.queue_delay_s - a.cold_start_s).abs() < 1e-9, "q={}", b.queue_delay_s);
+        assert!(b.finished_at < a.finished_at);
+        assert_eq!(p.billing.total_since(mark), 0.0, "covered occupancy re-billed");
+        // total equals one instance busy from 0 to a's finish
+        let expected = a.finished_at * 1000.0;
+        assert!(
+            (p.billing.total() - expected).abs() < 1e-6,
+            "total={} expected={expected}",
+            p.billing.total()
+        );
+    }
+
+    #[test]
+    fn covered_occupancy_at_a_bigger_spec_bills_the_excess() {
+        let mut p = batched_platform(2);
+        p.set_instance_limit("f", 1);
+        let a = p.invoke_at("f", 0.0, 5.0, 0.0).unwrap();
+        // redeploy with a larger memory spec: the co-batched joiner's
+        // covered occupancy must bill the delta above the peak spec
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: 4000.0,
+            gpu_mb: 500.0,
+            footprint_mb: 1000.0,
+            batch_capacity: 2,
+            component: CostComponent::MainCpu,
+        });
+        let mark = p.billing.mark();
+        let b = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        assert!(b.finished_at < a.finished_at, "b must be fully covered by a");
+        let active = b.finished_at - b.service_start();
+        // covered delta: (4000 − 1000) MB of CPU at 1× + 500 MB of
+        // GPU at 3× for b's active time
+        let expected = active * (3000.0 + 500.0 * 3.0);
+        let billed = p.billing.total_since(mark);
+        assert!((billed - expected).abs() < 1e-6, "billed={billed} expected={expected}");
+    }
+
+    #[test]
+    fn union_billing_charges_disjoint_occupancy_fully() {
+        let mut p = batched_platform(2);
+        let a = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        let mark = p.billing.mark();
+        // long after a finished (still warm): disjoint occupancy
+        let t = a.finished_at + 10.0;
+        let b = p.invoke_at("f", t, 1.0, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        let billed = p.billing.total_since(mark);
+        let expected = (b.finished_at - b.service_start()) * 1000.0;
+        assert!((billed - expected).abs() < 1e-6, "billed={billed} expected={expected}");
+    }
+
+    #[test]
+    fn lazy_eviction_survives_out_of_order_timestamps() {
+        let mut p = platform();
+        // first request at t=100 spawns instance X
+        let a = p.invoke_at("main", 100.0, 1.0, 0.0).unwrap();
+        // a much later call (X expired) spawns a fresh instance Y —
+        // under eager eviction this would also *remove* X
+        let b = p.invoke_at("main", 300.0, 1.0, 0.0).unwrap();
+        assert_ne!(b.instance, a.instance);
+        assert!(b.cold_start_s > 0.0);
+        // an out-of-order call at t=120 (X was still warm then) must
+        // hit X warm instead of paying a manufactured cold start
+        let c = p.invoke_at("main", 120.0, 1.0, 0.0).unwrap();
+        assert_eq!(c.instance, a.instance, "time-travel evicted a warm instance");
+        assert_eq!(c.cold_start_s, 0.0);
+        assert_eq!(c.queue_delay_s, 0.0);
+        // Y (spawned at t=300) did not exist at t=120: only X counts,
+        // and Y is not admissible to out-of-order callers before 300
+        assert_eq!(p.warm_count_at("main", 120.0), 1);
+    }
+
+    #[test]
+    fn prune_expired_before_drops_only_unreachable_instances() {
+        let mut p = platform();
+        let a = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        let late = a.finished_at + p.keepalive_s + 5.0;
+        let b = p.invoke_at("main", late, 1.0, 0.0).unwrap();
+        assert!(b.cold_start_s > 0.0);
+        assert_ne!(b.instance, a.instance);
+        // the first instance expired before `late`: no event at a
+        // later timestamp can ever reach it again
+        p.prune_expired_before(late);
+        assert_eq!(p.warm_count_at("main", late), 1);
+        // the survivor still serves warm
+        let c = p.invoke_at("main", b.finished_at, 1.0, 0.0).unwrap();
+        assert_eq!(c.instance, b.instance);
+        assert_eq!(c.cold_start_s, 0.0);
+    }
+
+    #[test]
+    fn warm_count_at_takes_an_explicit_clock_and_never_prunes() {
+        let mut p = platform();
+        let a = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        let expired = a.finished_at + p.keepalive_s + 1.0;
+        assert_eq!(p.warm_count_at("main", a.finished_at), 1);
+        assert_eq!(p.warm_count_at("main", expired), 0);
+        // the read at the expired time must not prune the pool: the
+        // earlier-time view still sees the instance
+        assert_eq!(p.warm_count_at("main", a.finished_at), 1);
+        // the clock-based wrapper agrees with the explicit form
+        p.advance_to(expired);
+        assert_eq!(p.warm_count("main"), p.warm_count_at("main", expired));
+    }
+
+    #[test]
+    fn shrinking_the_instance_limit_drains_deterministically() {
+        let mut p = platform();
+        p.set_instance_limit("expert0", 3);
+        let a = p.invoke_at("expert0", 0.0, 1.0, 0.0).unwrap();
+        let b = p.invoke_at("expert0", 0.0, 1.0, 0.0).unwrap();
+        let c = p.invoke_at("expert0", 0.0, 1.0, 0.0).unwrap();
+        assert_eq!(
+            [a.cold_start_s, b.cold_start_s, c.cold_start_s].iter().filter(|&&x| x > 0.0).count(),
+            3
+        );
+        // shrink the limit below the live pool: new work lands only on
+        // the oldest instance; nothing new spawns, the rest drain
+        p.set_instance_limit("expert0", 1);
+        let t = c.finished_at + 1.0; // all three idle and warm
+        let d = p.invoke_at("expert0", t, 1.0, 0.0).unwrap();
+        assert_eq!(d.instance, a.instance, "drain keeps the oldest instance");
+        assert_eq!(d.cold_start_s, 0.0);
+        // while the survivor is busy, further calls queue on it rather
+        // than using the draining (idle!) instances or spawning
+        let e = p.invoke_at("expert0", t, 1.0, 0.0).unwrap();
+        assert_eq!(e.instance, a.instance);
+        assert!(e.queue_delay_s > 0.0, "must queue on the clamped survivor");
+        assert_eq!(p.warm_count_at("expert0", t), 3, "draining instances stay live");
+    }
+
+    #[test]
+    fn invoke_on_continues_on_the_same_instance_without_overheads() {
+        let mut p = batched_platform(2);
+        let a = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        let mark = p.billing.mark();
+        let d = p.invoke_on("f", a.instance, a.finished_at, 0.5).unwrap();
+        assert_eq!(d.instance, a.instance);
+        assert_eq!(d.started_at, a.finished_at, "continuation starts immediately");
+        assert_eq!(d.queue_delay_s, 0.0);
+        assert_eq!(d.cold_start_s, 0.0);
+        assert_eq!(d.invoke_overhead_s, 0.0);
+        // contiguous occupancy extends the union by exactly the work
+        let billed = p.billing.total_since(mark);
+        assert!((billed - 0.5 * 1000.0).abs() < 1e-6, "billed={billed}");
+        // a joiner during the continuation sees the freed second slot
+        let b = p.invoke_at("f", a.finished_at, 0.2, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        assert_eq!(b.queue_delay_s, 0.0);
+        assert_eq!(b.batch, 2);
+    }
+
+    #[test]
+    fn invoke_on_unknown_instance_errors() {
+        let mut p = batched_platform(2);
+        assert!(p.invoke_on("f", 999, 0.0, 1.0).is_err());
     }
 }

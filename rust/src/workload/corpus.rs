@@ -36,10 +36,38 @@ pub struct CorpusSpec {
 /// web crawl (c4) is noisier, the pretraining mix is the most diffuse.
 pub fn standard_corpora() -> Vec<CorpusSpec> {
     vec![
-        CorpusSpec { name: "lmsys-chat", topics: 8, phrases_per_topic: 12, phrases_per_prompt: 6, noise: 0.02, seed: 101 },
-        CorpusSpec { name: "wikitext", topics: 6, phrases_per_topic: 16, phrases_per_prompt: 7, noise: 0.05, seed: 202 },
-        CorpusSpec { name: "c4", topics: 12, phrases_per_topic: 20, phrases_per_prompt: 6, noise: 0.10, seed: 303 },
-        CorpusSpec { name: "slimpajama", topics: 16, phrases_per_topic: 24, phrases_per_prompt: 5, noise: 0.16, seed: 404 },
+        CorpusSpec {
+            name: "lmsys-chat",
+            topics: 8,
+            phrases_per_topic: 12,
+            phrases_per_prompt: 6,
+            noise: 0.02,
+            seed: 101,
+        },
+        CorpusSpec {
+            name: "wikitext",
+            topics: 6,
+            phrases_per_topic: 16,
+            phrases_per_prompt: 7,
+            noise: 0.05,
+            seed: 202,
+        },
+        CorpusSpec {
+            name: "c4",
+            topics: 12,
+            phrases_per_topic: 20,
+            phrases_per_prompt: 6,
+            noise: 0.10,
+            seed: 303,
+        },
+        CorpusSpec {
+            name: "slimpajama",
+            topics: 16,
+            phrases_per_topic: 24,
+            phrases_per_prompt: 5,
+            noise: 0.16,
+            seed: 404,
+        },
     ]
 }
 

@@ -10,7 +10,6 @@ use remoe::model::engine::Backend;
 use remoe::runtime::{ArtifactStore, HostTensor};
 use remoe::util::rng::Rng;
 
-
 /// PJRT CPU clients are not safe to drive from concurrent test threads
 /// (multiple TfrtCpuClient instances share process-global state), so
 /// every test body takes this lock.

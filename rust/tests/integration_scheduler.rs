@@ -158,6 +158,96 @@ fn serving_the_same_seeded_trace_twice_is_byte_identical() {
 }
 
 #[test]
+fn ttft_includes_queueing_delay() {
+    // regression: TTFT used to be cold + prefill only, so a request
+    // that waited seconds for a free main instance reported the same
+    // TTFT as an uncontended one
+    let mut s = gpt2_setup(4);
+    let trace = batch_trace(&s.test, 10);
+    let agg = serve_remoe(&mut s.engine, &s.planner, &s.sps, &trace, 60.0).unwrap();
+    for r in &agg.records {
+        // ttft = queue + cold_eff + prefill ≥ queue + main cold, and
+        // strictly above the bare queueing delay (prefill > 0)
+        assert!(r.ttft_s >= r.queue_delay_s + r.main_cold_s, "req {}", r.id);
+        assert!(r.ttft_s > r.queue_delay_s, "req {}", r.id);
+    }
+    // the batch serializes on one unbatched instance: the queued
+    // requests' TTFT must reflect their growing wait
+    let queued: Vec<&remoe::metrics::RequestRecord> =
+        agg.records.iter().filter(|r| r.queue_delay_s > 0.0).collect();
+    assert!(!queued.is_empty(), "batch trace must exhibit queueing");
+    for r in &queued {
+        assert!(
+            r.ttft_s > agg.records[0].ttft_s - agg.records[0].main_cold_s,
+            "queued req {} reports an uncontended TTFT: {}",
+            r.id,
+            r.ttft_s
+        );
+    }
+}
+
+#[test]
+fn continuous_batching_absorbs_overlapping_arrivals() {
+    let mut s = gpt2_setup(4);
+    let trace = batch_trace(&s.test, 10);
+    let opts = ServeOptions { batch_capacity: 4, ..ServeOptions::default() };
+    let agg = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &opts).unwrap();
+    assert_eq!(agg.len(), 4);
+    // all four batch arrivals share one instance: one cold start;
+    // joiners wait only for instance readiness (the cold window), not
+    // for each other's prefill/decode chains
+    assert!(agg.records[0].main_cold_s > 0.0);
+    assert_eq!(agg.records[0].queue_delay_s, 0.0);
+    for r in &agg.records[1..] {
+        assert_eq!(r.main_cold_s, 0.0, "joiner paid a cold start");
+        assert!(
+            (r.queue_delay_s - agg.records[0].main_cold_s).abs() < 1e-9,
+            "joiner should wait exactly for readiness, got {}",
+            r.queue_delay_s
+        );
+    }
+    let instances: std::collections::BTreeSet<u64> =
+        agg.records.iter().map(|r| r.instance).collect();
+    assert_eq!(instances.len(), 1, "one instance serves the whole batch");
+    let batches: Vec<usize> = agg.records.iter().map(|r| r.batch).collect();
+    assert_eq!(batches, vec![1, 2, 3, 4]);
+}
+
+#[test]
+fn batching_strictly_reduces_queueing_on_the_same_trace() {
+    let mut s = gpt2_setup(4);
+    let trace = poisson_trace_over(&s.test, 5.0, 12, 21);
+    let unbatched = ServeOptions::default();
+    let batched = ServeOptions { batch_capacity: 4, ..ServeOptions::default() };
+    let a = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &unbatched).unwrap();
+    let b = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &batched).unwrap();
+    let mean_q = |agg: &remoe::metrics::Aggregator| agg.queue_delay_summary().mean;
+    assert!(mean_q(&a) > 0.0, "unbatched overlap must queue");
+    assert!(
+        mean_q(&b) < mean_q(&a),
+        "batched mean queue {} must undercut unbatched {}",
+        mean_q(&b),
+        mean_q(&a)
+    );
+    // batched TTFT improves too: queueing is inside TTFT now
+    assert!(b.ttft_summary().mean < a.ttft_summary().mean);
+}
+
+#[test]
+fn batched_serving_is_byte_identical_across_runs() {
+    let run = || {
+        let mut s = gpt2_setup(4);
+        let trace = poisson_trace_over(&s.test, 2.0, 10, 33);
+        let opts = ServeOptions { batch_capacity: 3, ..ServeOptions::default() };
+        serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &opts).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.canonical(), b.canonical(), "batched outcome must be deterministic");
+    assert!(a.canonical().contains("batch="));
+}
+
+#[test]
 fn keepalive_expiry_recolds_between_sparse_arrivals() {
     let mut s = gpt2_setup(3);
     // arrivals spaced 1000 s apart with a 10 s keep-alive: every

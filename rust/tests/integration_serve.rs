@@ -14,7 +14,6 @@ use remoe::util::rng::Rng;
 use remoe::workload::corpus::{standard_corpora, Corpus};
 use remoe::workload::trace::{batch_trace, poisson_trace, TraceSpec};
 
-
 /// PJRT CPU clients are not safe to drive from concurrent test threads
 /// (multiple TfrtCpuClient instances share process-global state), so
 /// every test body takes this lock.
@@ -93,8 +92,11 @@ fn poisson_trace_with_keepalive_expiry_recolds() {
         &TraceSpec { rate_per_s: 0.001, n_requests: 3, n_out: 6, seed: 8 },
     );
     let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 10.0).unwrap();
-    assert!(agg.records.iter().all(|r| r.cold_start_s > 0.0), "{:?}",
-        agg.records.iter().map(|r| r.cold_start_s).collect::<Vec<_>>());
+    assert!(
+        agg.records.iter().all(|r| r.cold_start_s > 0.0),
+        "{:?}",
+        agg.records.iter().map(|r| r.cold_start_s).collect::<Vec<_>>()
+    );
 }
 
 #[test]
@@ -107,6 +109,7 @@ fn platform_simulator_bills_remoe_topology() {
         mem_mb: 1000.0,
         gpu_mb: 200.0,
         footprint_mb: 700.0,
+        batch_capacity: 1,
         component: CostComponent::MainCpu,
     });
     for l in 0..4 {
@@ -115,6 +118,7 @@ fn platform_simulator_bills_remoe_topology() {
             mem_mb: 300.0,
             gpu_mb: 0.0,
             footprint_mb: 120.0,
+            batch_capacity: 1,
             component: CostComponent::RemoteExpertDecode,
         });
     }

@@ -232,6 +232,7 @@ fn prop_platform_scheduler_invariants() {
             mem_mb: rng.range_f64(100.0, 2000.0),
             gpu_mb: if rng.bool(0.5) { 300.0 } else { 0.0 },
             footprint_mb: rng.range_f64(0.0, 2000.0),
+            batch_capacity: 1,
             component: CostComponent::MainCpu,
         });
         let limit = rng.range_u(1, 3);
@@ -302,7 +303,11 @@ fn prop_serve_ledger_equals_sum_of_request_costs() {
             Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
 
         let trace = batch_trace(&test, small_size(rng, 2, 10));
-        let opts = ServeOptions { main_instances: rng.range_u(1, 3), ..ServeOptions::default() };
+        let opts = ServeOptions {
+            main_instances: rng.range_u(1, 3),
+            batch_capacity: rng.range_u(1, 4),
+            ..ServeOptions::default()
+        };
         let mut platform = Platform::new(&planner.platform, opts.seed);
         let mut policy =
             RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
@@ -320,6 +325,121 @@ fn prop_serve_ledger_equals_sum_of_request_costs() {
             if r.queue_delay_s > 0.0 {
                 assert_eq!(r.main_cold_s, 0.0, "queued request hit a warm instance");
             }
+        }
+    });
+}
+
+#[test]
+fn prop_batching_slots_and_union_billing_invariants() {
+    // Slot-based continuous batching: per-instance concurrent
+    // admissions never exceed batch_capacity, the reported batch size
+    // stays within [1, capacity], and union billing keeps the ledger
+    // equal to the sum of per-call deltas — under random, including
+    // non-monotone, invocation timestamps (the serve loop issues
+    // decode segments after later arrivals were already admitted).
+    Prop::new("platform batching invariants").with_cases(30).check(|rng, case| {
+        use remoe::serverless::{CostComponent, FunctionSpec, Platform};
+        let mut p = Platform::new(&PlatformConfig::default(), case as u64 ^ 0xBA7C);
+        p.keepalive_s = rng.range_f64(5.0, 40.0);
+        let capacity = rng.range_u(1, 4);
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: rng.range_f64(100.0, 2000.0),
+            gpu_mb: 0.0,
+            footprint_mb: rng.range_f64(0.0, 1500.0),
+            batch_capacity: capacity,
+            component: CostComponent::MainCpu,
+        });
+        let limit = rng.range_u(1, 3);
+        p.set_instance_limit("f", limit);
+
+        let mut t: f64 = 0.0;
+        let mut sum_deltas = 0.0;
+        let mut spans: std::collections::BTreeMap<u64, Vec<(f64, f64)>> = Default::default();
+        let n = small_size(rng, 2, 40);
+        for _ in 0..n {
+            t = (t + rng.range_f64(-2.0, 4.0)).max(0.0);
+            let work = rng.range_f64(0.01, 3.0);
+            let mark = p.billing.mark();
+            let inv = p.invoke_at("f", t, work, 0.0).unwrap();
+            sum_deltas += p.billing.total_since(mark);
+            assert!(
+                inv.batch >= 1 && inv.batch <= capacity,
+                "batch {} outside capacity {capacity}",
+                inv.batch
+            );
+            assert!(inv.queue_delay_s >= 0.0);
+            assert!(inv.started_at >= t - 1e-12, "started before arrival");
+            spans.entry(inv.instance).or_default().push((inv.service_start(), inv.finished_at));
+        }
+        // sweep: concurrent occupancy per instance never exceeds the
+        // slot count
+        for (inst, sp) in &spans {
+            let mut events: Vec<(f64, i32)> = Vec::new();
+            for &(s, e) in sp {
+                events.push((s, 1));
+                events.push((e, -1));
+            }
+            events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut load = 0i32;
+            for &(_, d) in &events {
+                load += d;
+                assert!(load <= capacity as i32, "instance {inst} over capacity {capacity}");
+            }
+        }
+        assert!(
+            (p.billing.total() - sum_deltas).abs() <= 1e-9 * sum_deltas.max(1.0),
+            "ledger {} != Σ deltas {sum_deltas}",
+            p.billing.total()
+        );
+    });
+}
+
+#[test]
+fn prop_batched_serve_is_deterministic_and_respects_capacity() {
+    // The determinism regression with continuous batching enabled:
+    // two full rebuilds (fresh engine, predictor, platform) produce a
+    // byte-identical canonical serialization, and every admission's
+    // batch size stays within the configured capacity.
+    Prop::new("serve: batched determinism + capacity").with_cases(2).check(|rng, case| {
+        use remoe::config::SystemConfig;
+        use remoe::coordinator::{
+            build_history, serve_on_platform, Planner, RemoePolicy, ServeOptions,
+        };
+        use remoe::model::{self, Engine};
+        use remoe::prediction::{SpsPredictor, TreeParams};
+        use remoe::serverless::Platform;
+        use remoe::workload::corpus::{standard_corpora, Corpus};
+        use remoe::workload::trace::batch_trace;
+
+        let capacity = rng.range_u(2, 4);
+        let n_test = small_size(rng, 2, 4);
+        let run = || {
+            let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+            let corpus = Corpus::new(standard_corpora()[0].clone());
+            let (train, test) = corpus.split(12, n_test, case as u64 + 3);
+            let history = build_history(&mut engine, &train).unwrap();
+            let params = TreeParams { beta: 10, fanout: 3, ..TreeParams::default() };
+            let sps = SpsPredictor::build(history, 4, params, &mut Rng::new(case as u64));
+            let dims = CostDims::gpt2_moe(4);
+            let planner =
+                Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
+            let trace = batch_trace(&test, 8);
+            let opts = ServeOptions { batch_capacity: capacity, ..ServeOptions::default() };
+            let mut platform = Platform::new(&planner.platform, opts.seed);
+            let mut policy =
+                RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+            serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.canonical(), b.canonical(), "batched serve must be deterministic");
+        for r in &a.records {
+            assert!(
+                r.batch >= 1 && r.batch <= capacity,
+                "batch {} outside capacity {capacity}",
+                r.batch
+            );
         }
     });
 }
