@@ -1,0 +1,325 @@
+//! Autoscaling subsystem: predictive pre-warm + reactive scale
+//! control over the serverless platform.
+//!
+//! The paper's headline cold-start win comes from deciding *ahead of
+//! arrivals* which functions must be warm (SPS predicts expert
+//! activation, MMP pre-allocates the main model). This module turns
+//! that idea into an explicit control plane over
+//! [`serverless::Platform`](crate::serverless::Platform): a
+//! [`ScalingPolicy`] observes admitted arrivals (with the per-function
+//! instance demand the SPS-informed planner chose — main function plus
+//! the remote-expert replica counts) and, at periodic **control
+//! ticks** injected into the serving event queue, emits a desired warm
+//! floor per function. The [`Autoscaler`] reconciles floor against
+//! pool: the floor's hottest instances are *held* past their organic
+//! expiry
+//! ([`Platform::keep_warm_at`](crate::serverless::Platform::keep_warm_at)
+//! — the extension bills as `PrewarmIdle`), deficits pre-warm fresh
+//! instances
+//! ([`Platform::prewarm_at`](crate::serverless::Platform::prewarm_at),
+//! cold start + idle billed as `PrewarmIdle`), and surpluses retire
+//! idle instances
+//! ([`Platform::retire_idle_at`](crate::serverless::Platform::retire_idle_at)).
+//!
+//! Three controllers ship ([`policies`]):
+//!
+//! | policy | behaviour |
+//! |---|---|
+//! | [`Reactive`] | null policy — today's behaviour: spawn cold on first invoke, die by keep-alive |
+//! | [`FixedWarmPool`] | MMP-style static floor per function |
+//! | [`Predictive`] | sliding-window arrival-rate estimate × SPS-informed per-function demand drives the floor; scales to zero when the window empties |
+//!
+//! Every [`ServePolicy`](crate::coordinator::ServePolicy) — Remoe and
+//! the monolithic baselines — serves through the same contract, so
+//! `exp autoscale` compares strategies under identical autoscaling.
+
+pub mod policies;
+
+pub use policies::{FixedWarmPool, Predictive, Reactive};
+
+use crate::serverless::Platform;
+
+/// What a [`ScalingPolicy`] sees about one deployed function at a
+/// control tick.
+#[derive(Debug, Clone)]
+pub struct FunctionView {
+    pub name: String,
+    /// Live (warm or busy) instances at the tick time.
+    pub warm: usize,
+    /// Scale-out cap of the function (`usize::MAX` when unlimited).
+    pub limit: usize,
+    /// Execution slots per instance (continuous-batching width).
+    pub batch_capacity: usize,
+    /// Cold start a fresh spawn would pay right now (container + load
+    /// of the currently deployed spec).
+    pub cold_start_s: f64,
+}
+
+/// A scale controller: consumes arrival observations, produces
+/// per-function warm floors at control ticks.
+pub trait ScalingPolicy {
+    fn name(&self) -> &'static str;
+
+    /// One admitted request at virtual time `t`. `demands` lists
+    /// `(function, instances the request wants concurrently)` — for
+    /// Remoe that is the main function plus each remote-expert
+    /// function at the replica count the SPS-informed planner chose,
+    /// so expert-activation probabilities reach the controller through
+    /// the observed demand stream.
+    fn observe_arrival(&mut self, t: f64, demands: &[(String, usize)]);
+
+    /// Desired warm floor for `f` at tick time `t`; `None` holds (no
+    /// scaling action either way — the reactive null policy).
+    fn target(&mut self, t: f64, f: &FunctionView) -> Option<usize>;
+}
+
+/// Plain-data policy configuration, so `ServeOptions` stays `Clone` +
+/// `Copy`-friendly while the boxed controller is built per serve run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscalePolicy {
+    /// Null policy: never pre-warm, never retire (PR 2 behaviour).
+    Reactive,
+    /// Keep at least `floor` instances of every deployed function warm.
+    FixedWarmPool { floor: usize },
+    /// Sliding-window arrival-rate × observed demand per arrival drive
+    /// the floor; see [`policies::Predictive`].
+    Predictive { window_s: f64, lookahead_s: f64 },
+}
+
+impl AutoscalePolicy {
+    /// The predictive controller at its default horizon (60 s rate
+    /// window, 10 s provisioning lookahead on top of the cold start).
+    pub fn predictive() -> AutoscalePolicy {
+        AutoscalePolicy::Predictive { window_s: 60.0, lookahead_s: 10.0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscalePolicy::Reactive => "reactive",
+            AutoscalePolicy::FixedWarmPool { .. } => "warmpool",
+            AutoscalePolicy::Predictive { .. } => "predictive",
+        }
+    }
+
+    /// Instantiate the controller this configuration describes.
+    pub fn build(&self) -> Box<dyn ScalingPolicy> {
+        match *self {
+            AutoscalePolicy::Reactive => Box::new(Reactive),
+            AutoscalePolicy::FixedWarmPool { floor } => Box::new(FixedWarmPool { floor }),
+            AutoscalePolicy::Predictive { window_s, lookahead_s } => {
+                Box::new(Predictive::new(window_s, lookahead_s))
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `reactive`, `warmpool[:floor]`,
+    /// `predictive[:window_s]`.
+    pub fn parse(s: &str) -> anyhow::Result<AutoscalePolicy> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "reactive" => Ok(AutoscalePolicy::Reactive),
+            "warmpool" => {
+                let floor = match arg {
+                    Some(a) => a
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad warmpool floor {a:?}"))?,
+                    None => 1,
+                };
+                Ok(AutoscalePolicy::FixedWarmPool { floor })
+            }
+            "predictive" => {
+                let mut p = AutoscalePolicy::predictive();
+                if let (Some(a), AutoscalePolicy::Predictive { window_s, .. }) = (arg, &mut p) {
+                    *window_s = a
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad predictive window {a:?}"))?;
+                }
+                Ok(p)
+            }
+            other => anyhow::bail!(
+                "unknown autoscale policy {other:?}; use reactive, warmpool[:floor] or \
+                 predictive[:window_s]"
+            ),
+        }
+    }
+}
+
+/// Outcome of one control tick (for reporting).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TickReport {
+    pub prewarmed: usize,
+    pub retired: usize,
+}
+
+/// Drives a [`ScalingPolicy`] over the platform at control ticks.
+pub struct Autoscaler {
+    pub policy: Box<dyn ScalingPolicy>,
+    pub tick_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(policy: Box<dyn ScalingPolicy>, tick_s: f64) -> Autoscaler {
+        Autoscaler { policy, tick_s }
+    }
+
+    pub fn observe_arrival(&mut self, t: f64, demands: &[(String, usize)]) {
+        self.policy.observe_arrival(t, demands);
+    }
+
+    /// One control tick at virtual time `t`: reconcile every deployed
+    /// function's warm pool against the policy's floor. Functions with
+    /// a degenerate spec (no memory, no footprint — deployed as a
+    /// placeholder before any request planned them) are skipped:
+    /// pre-warming them would buy free, useless capacity.
+    pub fn tick(&mut self, platform: &mut Platform, t: f64) -> TickReport {
+        let mut report = TickReport::default();
+        for name in platform.function_names() {
+            let Some(spec) = platform.spec(&name) else {
+                continue;
+            };
+            if spec.mem_mb <= 0.0 && spec.footprint_mb <= 0.0 {
+                continue;
+            }
+            let view = FunctionView {
+                warm: platform.warm_count_at(&name, t),
+                limit: platform.instance_limit(&name),
+                batch_capacity: spec.batch_capacity.max(1),
+                cold_start_s: platform.cold_model().function(spec.footprint_mb).total(),
+                name: name.clone(),
+            };
+            let Some(target) = self.policy.target(t, &view) else {
+                continue;
+            };
+            // hold first: the floor's hottest `target` instances must
+            // not decay between ticks (an expiry just after this tick
+            // would otherwise open a cold window of up to one tick +
+            // one cold start before the next re-provision)
+            if target > 0 {
+                platform.keep_warm_at(&name, t, target);
+            }
+            if target > view.warm {
+                report.prewarmed += platform.prewarm_at(&name, t, target - view.warm);
+            } else if view.warm > target {
+                report.retired += platform.retire_idle_at(&name, t, view.warm - target);
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::serverless::{CostComponent, FunctionSpec, InvokeOverhead};
+
+    fn platform() -> Platform {
+        let mut p = Platform::new(&PlatformConfig::default(), 3);
+        p.overhead_mode = InvokeOverhead::Expected;
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: 1000.0,
+            gpu_mb: 0.0,
+            footprint_mb: 500.0,
+            batch_capacity: 4,
+            component: CostComponent::MainCpu,
+        });
+        p
+    }
+
+    #[test]
+    fn parse_round_trips_the_three_policies() {
+        assert_eq!(AutoscalePolicy::parse("reactive").unwrap(), AutoscalePolicy::Reactive);
+        assert_eq!(
+            AutoscalePolicy::parse("warmpool:3").unwrap(),
+            AutoscalePolicy::FixedWarmPool { floor: 3 }
+        );
+        assert_eq!(
+            AutoscalePolicy::parse("warmpool").unwrap(),
+            AutoscalePolicy::FixedWarmPool { floor: 1 }
+        );
+        match AutoscalePolicy::parse("predictive:30").unwrap() {
+            AutoscalePolicy::Predictive { window_s, .. } => assert_eq!(window_s, 30.0),
+            other => panic!("{other:?}"),
+        }
+        assert!(AutoscalePolicy::parse("bogus").is_err());
+        assert!(AutoscalePolicy::parse("warmpool:x").is_err());
+    }
+
+    #[test]
+    fn reactive_autoscaler_never_acts() {
+        let mut p = platform();
+        let mut scaler = Autoscaler::new(AutoscalePolicy::Reactive.build(), 5.0);
+        scaler.observe_arrival(0.0, &[("f".into(), 1)]);
+        let r = scaler.tick(&mut p, 5.0);
+        assert_eq!(r, TickReport::default());
+        assert_eq!(p.warm_count_at("f", 5.0), 0);
+        assert_eq!(p.billing.total(), 0.0);
+    }
+
+    #[test]
+    fn warm_pool_floor_prewarms_and_later_invocations_hit_warm() {
+        let mut p = platform();
+        let mut scaler =
+            Autoscaler::new(AutoscalePolicy::FixedWarmPool { floor: 2 }.build(), 5.0);
+        let r = scaler.tick(&mut p, 0.0);
+        assert_eq!(r.prewarmed, 2);
+        assert_eq!(p.warm_count_at("f", 0.0), 2);
+        // steady state: the floor is met, nothing more happens
+        assert_eq!(scaler.tick(&mut p, 5.0), TickReport::default());
+        // past the readiness point, arrivals land warm
+        let inv = p.invoke_at("f", 10.0, 1.0, 0.0).unwrap();
+        assert_eq!(inv.cold_start_s, 0.0);
+        assert_eq!(inv.queue_delay_s, 0.0);
+    }
+
+    #[test]
+    fn predictive_scales_up_under_demand_and_down_to_zero_after() {
+        let mut p = platform();
+        let mut scaler = Autoscaler::new(
+            AutoscalePolicy::Predictive { window_s: 60.0, lookahead_s: 10.0 }.build(),
+            5.0,
+        );
+        // idle start: no arrivals → no pre-warm
+        assert_eq!(scaler.tick(&mut p, 0.0), TickReport::default());
+        // a burst of demand inside the window drives a positive floor
+        for k in 0..6 {
+            scaler.observe_arrival(1.0 + 0.1 * k as f64, &[("f".into(), 1)]);
+        }
+        let r = scaler.tick(&mut p, 5.0);
+        assert!(r.prewarmed >= 1);
+        let warm = p.warm_count_at("f", 5.0);
+        assert!(warm >= 1);
+        // once the window empties (last arrival at 1.6, window 60) the
+        // floor drops to zero and the still-live idle capacity (warm
+        // until ~68) is retired
+        let r2 = scaler.tick(&mut p, 65.0);
+        assert_eq!(r2.retired, warm, "stale warm pool must drain");
+        assert_eq!(p.warm_count_at("f", 66.0), 0);
+        // the pre-warmed instances paid cold start + idle into the
+        // dedicated component
+        assert!(p.billing.component_total(CostComponent::PrewarmIdle) > 0.0);
+        assert!((p.billing.total() - p.billing.component_total(CostComponent::PrewarmIdle)).abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_placeholder_specs_are_skipped() {
+        let mut p = Platform::new(&PlatformConfig::default(), 3);
+        p.deploy(FunctionSpec {
+            name: "placeholder".into(),
+            mem_mb: 0.0,
+            gpu_mb: 0.0,
+            footprint_mb: 0.0,
+            batch_capacity: 1,
+            component: CostComponent::MainCpu,
+        });
+        let mut scaler =
+            Autoscaler::new(AutoscalePolicy::FixedWarmPool { floor: 4 }.build(), 5.0);
+        assert_eq!(scaler.tick(&mut p, 0.0), TickReport::default());
+        assert_eq!(p.warm_count_at("placeholder", 0.0), 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! The shipped scale controllers: [`Reactive`] (null),
+//! [`FixedWarmPool`] (static floor), [`Predictive`] (sliding-window
+//! arrival-rate × observed per-function demand).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::{FunctionView, ScalingPolicy};
+
+/// Null policy: never pre-warms, never retires — exactly the PR 2
+/// behaviour (instances spawn cold on first invoke and die by
+/// keep-alive), kept as the baseline every other controller is
+/// compared against.
+pub struct Reactive;
+
+impl ScalingPolicy for Reactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn observe_arrival(&mut self, _t: f64, _demands: &[(String, usize)]) {}
+
+    fn target(&mut self, _t: f64, _f: &FunctionView) -> Option<usize> {
+        None
+    }
+}
+
+/// MMP-style static floor: keep at least `floor` instances of every
+/// deployed function warm (capped by the function's instance limit),
+/// retire idle surplus beyond it.
+pub struct FixedWarmPool {
+    pub floor: usize,
+}
+
+impl ScalingPolicy for FixedWarmPool {
+    fn name(&self) -> &'static str {
+        "warmpool"
+    }
+
+    fn observe_arrival(&mut self, _t: f64, _demands: &[(String, usize)]) {}
+
+    fn target(&mut self, _t: f64, f: &FunctionView) -> Option<usize> {
+        Some(self.floor.min(f.limit))
+    }
+}
+
+/// Predictive pre-warm: a sliding window over admitted arrivals
+/// estimates each function's demand rate (arrivals weighted by the
+/// instance count the request asked of that function — for Remoe the
+/// SPS-informed replica plan, so expert-activation probabilities flow
+/// into the estimate). The floor covers the demand expected within one
+/// provisioning horizon (cold start + `lookahead_s`), divided by the
+/// per-instance slot capacity:
+///
+/// ```text
+/// floor = ceil(rate × (cold_start + lookahead) / batch_capacity)
+/// ```
+///
+/// capped by the instance limit. An empty window drives the floor to
+/// zero, so idle capacity is also *retired* ahead of its keep-alive —
+/// the reactive scale-control half of the policy.
+pub struct Predictive {
+    pub window_s: f64,
+    pub lookahead_s: f64,
+    /// Per-function (arrival time, instance demand) inside the window.
+    arrivals: BTreeMap<String, VecDeque<(f64, f64)>>,
+}
+
+impl Predictive {
+    pub fn new(window_s: f64, lookahead_s: f64) -> Predictive {
+        Predictive {
+            window_s: window_s.max(1e-9),
+            lookahead_s: lookahead_s.max(0.0),
+            arrivals: BTreeMap::new(),
+        }
+    }
+
+    /// Demand mass observed for `name` within the window ending at `t`.
+    fn window_mass(&mut self, name: &str, t: f64) -> f64 {
+        let Some(q) = self.arrivals.get_mut(name) else {
+            return 0.0;
+        };
+        while q.front().map_or(false, |&(ts, _)| t - ts > self.window_s) {
+            q.pop_front();
+        }
+        q.iter().map(|&(_, d)| d).sum()
+    }
+}
+
+impl ScalingPolicy for Predictive {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+
+    fn observe_arrival(&mut self, t: f64, demands: &[(String, usize)]) {
+        for (name, d) in demands {
+            if *d == 0 {
+                continue;
+            }
+            self.arrivals.entry(name.clone()).or_default().push_back((t, *d as f64));
+        }
+    }
+
+    fn target(&mut self, t: f64, f: &FunctionView) -> Option<usize> {
+        let mass = self.window_mass(&f.name, t);
+        if mass <= 0.0 {
+            return Some(0);
+        }
+        let rate = mass / self.window_s;
+        let expected = rate * (f.cold_start_s + self.lookahead_s);
+        let per_instance = f.batch_capacity.max(1) as f64;
+        let floor = (expected / per_instance).ceil() as usize;
+        Some(floor.max(1).min(f.limit))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(warm: usize, limit: usize, capacity: usize, cold: f64) -> FunctionView {
+        FunctionView {
+            name: "f".into(),
+            warm,
+            limit,
+            batch_capacity: capacity,
+            cold_start_s: cold,
+        }
+    }
+
+    #[test]
+    fn reactive_always_holds() {
+        let mut p = Reactive;
+        p.observe_arrival(0.0, &[("f".into(), 3)]);
+        assert_eq!(p.target(10.0, &view(0, usize::MAX, 1, 4.0)), None);
+    }
+
+    #[test]
+    fn fixed_floor_is_limit_capped() {
+        let mut p = FixedWarmPool { floor: 4 };
+        assert_eq!(p.target(0.0, &view(0, usize::MAX, 1, 4.0)), Some(4));
+        assert_eq!(p.target(0.0, &view(0, 2, 1, 4.0)), Some(2));
+    }
+
+    #[test]
+    fn predictive_window_slides_and_scales_to_zero() {
+        let mut p = Predictive::new(10.0, 5.0);
+        p.observe_arrival(0.0, &[("f".into(), 1)]);
+        p.observe_arrival(1.0, &[("f".into(), 1)]);
+        // rate 0.2/s over a 10 s horizon (cold 5 + lookahead 5) → 2
+        // expected arrivals on capacity-1 instances → floor 2
+        assert_eq!(p.target(1.0, &view(0, usize::MAX, 1, 5.0)), Some(2));
+        // capacity 4 folds them into one instance
+        assert_eq!(p.target(1.0, &view(0, usize::MAX, 4, 5.0)), Some(1));
+        // window slid past both arrivals → scale to zero
+        assert_eq!(p.target(20.0, &view(1, usize::MAX, 1, 5.0)), Some(0));
+    }
+
+    #[test]
+    fn predictive_weighs_replica_demand_and_respects_limit() {
+        let mut p = Predictive::new(10.0, 5.0);
+        // each arrival wants 4 replicas of the function — the
+        // SPS-informed plan feeds the estimator through the demand
+        p.observe_arrival(0.0, &[("f".into(), 4)]);
+        p.observe_arrival(1.0, &[("f".into(), 4)]);
+        // mass 8 → rate 0.8/s → 8 expected over the 10 s horizon,
+        // capped at the replica limit of 4
+        assert_eq!(p.target(1.0, &view(0, 4, 1, 5.0)), Some(4));
+        // a controller that observed nothing scales the function to 0
+        let mut q = Predictive::new(10.0, 5.0);
+        assert_eq!(q.target(1.0, &view(2, 4, 1, 5.0)), Some(0));
+    }
+}

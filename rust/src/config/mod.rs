@@ -11,6 +11,12 @@
 
 use crate::util::tomlmini::Toml;
 
+/// Default instance keep-alive after the last slot finishes, seconds.
+/// The single source of truth: `PlatformConfig::default()` and
+/// `coordinator::ServeOptions::default()` both read this constant, so
+/// the platform simulator and the scheduler knobs cannot drift apart.
+pub const DEFAULT_KEEPALIVE_S: f64 = 60.0;
+
 /// Serverless platform economics and limits (§II, §III).
 #[derive(Debug, Clone)]
 pub struct PlatformConfig {
@@ -47,6 +53,10 @@ pub struct PlatformConfig {
     /// GPU advantage for single-token decode (bandwidth-bound, far
     /// below the batched ratio).
     pub gpu_decode_speed_ratio: f64,
+    /// Instance keep-alive after its last slot finishes, seconds
+    /// ([`DEFAULT_KEEPALIVE_S`]). `ServeOptions::keepalive_s` (same
+    /// default) overrides it per serving run.
+    pub keepalive_s: f64,
 }
 
 impl Default for PlatformConfig {
@@ -67,6 +77,7 @@ impl Default for PlatformConfig {
             speedup_saturation_vcpus: 16.0,
             gpu_speed_ratio: 8.0,
             gpu_decode_speed_ratio: 2.0,
+            keepalive_s: DEFAULT_KEEPALIVE_S,
         }
     }
 }
@@ -97,6 +108,7 @@ impl PlatformConfig {
             gpu_speed_ratio: t.f64_or("platform.gpu_speed_ratio", d.gpu_speed_ratio),
             gpu_decode_speed_ratio: t
                 .f64_or("platform.gpu_decode_speed_ratio", d.gpu_decode_speed_ratio),
+            keepalive_s: t.f64_or("platform.keepalive_s", d.keepalive_s),
         }
     }
 }
@@ -379,6 +391,7 @@ mod tests {
         assert!(p.gpu_rate_per_mb_s / p.cpu_rate_per_mb_s >= 3.0);
         assert_eq!(p.payload_limit_bytes, 6.0 * 1024.0 * 1024.0);
         assert!((p.vcpus(1024.0) - 1.0).abs() < 1e-9);
+        assert_eq!(p.keepalive_s, DEFAULT_KEEPALIVE_S);
     }
 
     #[test]
@@ -411,10 +424,12 @@ mod tests {
     #[test]
     fn toml_overrides() {
         let cfg = SystemConfig::from_toml_str(
-            "[platform]\ngpu_rate_per_mb_s = 5.0\n[sps]\nalpha = 7\n[sla]\nttft_s = 3.5\n",
+            "[platform]\ngpu_rate_per_mb_s = 5.0\nkeepalive_s = 30.0\n\
+             [sps]\nalpha = 7\n[sla]\nttft_s = 3.5\n",
         )
         .unwrap();
         assert_eq!(cfg.platform.gpu_rate_per_mb_s, 5.0);
+        assert_eq!(cfg.platform.keepalive_s, 30.0);
         assert_eq!(cfg.alpha, 7);
         assert_eq!(cfg.sla.ttft_s, 3.5);
         assert_eq!(cfg.eta, 0.1); // default preserved

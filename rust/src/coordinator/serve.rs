@@ -23,6 +23,17 @@
 //! cost. `batch_capacity = 1` reproduces the paper's
 //! one-request-per-instance execution exactly.
 //!
+//! **Autoscaling** (`ServeOptions::autoscale`): periodic control-tick
+//! events run an [`autoscale::ScalingPolicy`](crate::autoscale) over
+//! the platform — pre-warming instances ahead of predicted arrivals
+//! (billed as the `PrewarmIdle` ledger component, *outside* any
+//! request's cost attribution) and retiring surplus idle capacity.
+//! Every admitted request feeds the controller its per-function
+//! instance demand (main + the SPS-informed replica plan), so the
+//! predictive policy sees expert-activation probabilities through the
+//! demand stream. The ledger identity becomes
+//! `total == Σ request costs + PrewarmIdle`.
+//!
 //! Per request the pipeline is unchanged: predict S̃ (SPS) → plan
 //! (MMP → selection → Lagrangian → LPT, in CALCULATE time) → execute
 //! the real model through the engine → account with the *measured*
@@ -42,6 +53,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::autoscale::{AutoscalePolicy, Autoscaler};
 use crate::costmodel::RequestProfile;
 use crate::metrics::{Aggregator, RequestRecord};
 use crate::model::{Backend, Engine};
@@ -71,16 +83,25 @@ pub struct ServeOptions {
     pub overhead: InvokeOverhead,
     /// Seed of the platform RNG (sampled overheads).
     pub seed: u64,
+    /// Scale controller evaluated at control ticks.
+    /// [`AutoscalePolicy::Reactive`] (the default) reproduces the
+    /// pre-autoscaling behaviour exactly: no pre-warm, no retirement.
+    pub autoscale: AutoscalePolicy,
+    /// Control-tick period (virtual seconds); ticks stop at the last
+    /// arrival. `0.0` disables ticks entirely.
+    pub autoscale_tick_s: f64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
         ServeOptions {
-            keepalive_s: 60.0,
+            keepalive_s: crate::config::DEFAULT_KEEPALIVE_S,
             main_instances: 1,
             batch_capacity: 1,
             overhead: InvokeOverhead::Sampled,
             seed: 0x5E47,
+            autoscale: AutoscalePolicy::Reactive,
+            autoscale_tick_s: 5.0,
         }
     }
 }
@@ -130,6 +151,9 @@ pub trait ServePolicy {
 enum EventKind {
     Completion,
     Arrival(usize),
+    /// Autoscaling control tick: run the scale controller, then
+    /// re-arm the next tick.
+    ControlTick,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -144,6 +168,9 @@ impl Event {
         match self.kind {
             EventKind::Completion => 0, // completions drain first at ties
             EventKind::Arrival(_) => 1,
+            // ticks run after same-time arrivals so a control action
+            // can never perturb an admission at its own timestamp
+            EventKind::ControlTick => 2,
         }
     }
 }
@@ -201,9 +228,25 @@ pub fn serve_on_platform(
 
     let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
     let mut seq = 0u64;
+    let mut horizon = f64::NEG_INFINITY;
     for (i, req) in trace.iter().enumerate() {
         seq += 1;
         heap.push(Reverse(Event { time: req.arrival_s, seq, kind: EventKind::Arrival(i) }));
+        horizon = horizon.max(req.arrival_s);
+    }
+    // autoscaling control loop: ticks start one period in and stop at
+    // the last arrival (pre-warming after it could never serve anyone).
+    // The null policy skips the machinery entirely — the default
+    // serving hot path stays tick- and allocation-free.
+    let autoscaling = opts.autoscale != AutoscalePolicy::Reactive;
+    let mut scaler = Autoscaler::new(opts.autoscale.build(), opts.autoscale_tick_s);
+    if autoscaling && opts.autoscale_tick_s > 0.0 && opts.autoscale_tick_s <= horizon {
+        seq += 1;
+        heap.push(Reverse(Event {
+            time: opts.autoscale_tick_s,
+            seq,
+            kind: EventKind::ControlTick,
+        }));
     }
 
     let mut in_flight = 0usize;
@@ -212,6 +255,15 @@ pub fn serve_on_platform(
         let i = match event.kind {
             EventKind::Completion => {
                 in_flight -= 1;
+                continue;
+            }
+            EventKind::ControlTick => {
+                scaler.tick(platform, event.time);
+                let next = event.time + opts.autoscale_tick_s;
+                if next <= horizon {
+                    seq += 1;
+                    heap.push(Reverse(Event { time: next, seq, kind: EventKind::ControlTick }));
+                }
                 continue;
             }
             EventKind::Arrival(i) => i,
@@ -225,6 +277,18 @@ pub fn serve_on_platform(
         // lazily-evicted pool bounded over long traces
         platform.prune_expired_before(t);
         let sp = policy.plan(req)?;
+        if autoscaling {
+            // feed the controller this request's per-function instance
+            // demand: the main function plus each remote-expert
+            // function at the replica count the (SPS-informed) plan
+            // chose
+            let mut demands: Vec<(String, usize)> = Vec::with_capacity(1 + sp.remote.len());
+            demands.push((MAIN_FN.to_string(), 1));
+            for rl in &sp.remote {
+                demands.push((expert_fn(rl.layer), rl.replica_work_s.len().max(1)));
+            }
+            scaler.observe_arrival(t, &demands);
+        }
 
         // (re)deploy the main function at this request's planned spec —
         // the pool (and therefore warmth) persists across redeploys.
@@ -303,7 +367,12 @@ pub fn serve_on_platform(
                 platform.invoke_at(&name, t_dec, rl.decode_work_s, 0.0)?;
             }
         }
-        let cost = platform.billing.total_since(mark);
+        // attribution: everything this request's invocations billed,
+        // minus any pre-warm idle settlement that its first-use of a
+        // pre-warmed instance happened to trigger — that capacity was
+        // provisioned by the autoscaler, not by this request
+        let cost = platform.billing.total_since(mark)
+            - platform.billing.component_total_since(mark, CostComponent::PrewarmIdle);
 
         seq += 1;
         heap.push(Reverse(Event {
@@ -341,6 +410,10 @@ pub fn serve_on_platform(
             concurrency: in_flight,
         });
     }
+    // close the ledger: pre-warmed capacity that never served settles
+    // its cold start + idle keep-alive, so
+    // `total == Σ record costs + PrewarmIdle` holds exactly
+    platform.settle_prewarm_idle();
     Ok(agg)
 }
 
@@ -524,6 +597,56 @@ mod tests {
         let agg = serve_remoe(&mut engine, &planner, &sps, &trace, 60.0).unwrap();
         let conc: Vec<usize> = agg.records.iter().map(|r| r.concurrency).collect();
         assert_eq!(conc, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn warm_pool_policy_prewarms_away_repeat_cold_starts() {
+        let (mut engine, planner, sps) = setup();
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = corpus.split(30, 3, 5);
+        // arrivals spaced far beyond the keep-alive: reactive pays a
+        // main-model cold start on every request, a warm floor of one
+        // only on the first
+        let trace: Vec<Request> = test
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(id, prompt)| Request { id, arrival_s: 30.0 * id as f64, prompt, n_out: 8 })
+            .collect();
+        let serve = |engine: &mut Engine<crate::model::NativeBackend>,
+                     autoscale: crate::autoscale::AutoscalePolicy| {
+            // keep-alive above the 5 s control tick so a held floor
+            // cannot decay between ticks, yet far below the 30 s
+            // arrival gap so the reactive pool always expires
+            let opts = ServeOptions {
+                keepalive_s: 6.0,
+                autoscale,
+                ..ServeOptions::default()
+            };
+            let mut platform = Platform::new(&planner.platform, opts.seed);
+            let mut policy = RemoePolicy { engine, planner: &planner, predictor: &sps };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+            let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+            let ledger = platform.billing.total();
+            assert!(
+                (ledger - agg.total_cost() - prewarm).abs() <= 1e-9 * ledger.max(1.0),
+                "ledger {ledger} != Σ costs {} + prewarm {prewarm}",
+                agg.total_cost()
+            );
+            (agg, prewarm)
+        };
+        let (reactive, p0) = serve(&mut engine, crate::autoscale::AutoscalePolicy::Reactive);
+        assert_eq!(p0, 0.0, "the null policy never pre-warms");
+        assert!(reactive.records.iter().all(|r| r.main_cold_s > 0.0));
+        let (warmed, p1) = serve(
+            &mut engine,
+            crate::autoscale::AutoscalePolicy::FixedWarmPool { floor: 1 },
+        );
+        assert!(p1 > 0.0, "the warm floor must have provisioned capacity");
+        assert!(warmed.records[0].main_cold_s > 0.0, "nothing to pre-warm before request 0");
+        for r in &warmed.records[1..] {
+            assert_eq!(r.main_cold_s, 0.0, "warm floor must absorb the main cold start");
+        }
     }
 
     #[test]

@@ -138,3 +138,26 @@ pub fn write_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) -> Result<(
     println!("  [csv] {path}");
     Ok(())
 }
+
+/// Update one section of the machine-readable benchmark report
+/// (`BENCH_serving.json` at the working directory root).
+/// Read-modify-write: `exp serving` and `exp autoscale` each own one
+/// top-level key, so the serving perf trajectory can be tracked
+/// across PRs from a single artifact. A process-wide lock serializes
+/// the read-modify-write — the experiment tests run on parallel
+/// threads of one test binary and must not drop each other's section.
+pub fn update_bench_json(section: &str, value: crate::util::json::Json) -> Result<()> {
+    use crate::util::json::Json;
+    static BENCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = BENCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let path = "BENCH_serving.json";
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    root.insert(section.to_string(), value);
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))?;
+    println!("  [json] {path} ({section})");
+    Ok(())
+}

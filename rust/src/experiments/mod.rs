@@ -4,6 +4,7 @@
 //! Every experiment prints the paper's rows/series and writes a CSV
 //! under `results/`.
 
+pub mod autoscale_exps;
 pub mod common;
 pub mod overall_exps;
 pub mod prediction_exps;
@@ -15,7 +16,7 @@ use anyhow::{bail, Result};
 
 pub const ALL: &[&str] = &[
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11",
-    "serving", "summary",
+    "serving", "autoscale", "summary",
 ];
 
 /// Run one experiment by id.
@@ -32,6 +33,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "fig10" => overall_exps::fig10(scale),
         "fig11" => overall_exps::fig11(scale),
         "serving" => overall_exps::serving(scale),
+        "autoscale" => autoscale_exps::autoscale(scale),
         "summary" => overall_exps::summary(scale),
         "all" => {
             for id in ALL {

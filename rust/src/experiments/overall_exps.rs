@@ -11,13 +11,15 @@ use crate::coordinator::{prompt_signature, serve_on_platform, RemoePolicy, Serve
 use crate::metrics::{fmt_f, Aggregator, Table};
 use crate::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
 use crate::serverless::Platform;
+use crate::util::json::Json;
 use crate::util::stats::summarize;
 use crate::workload::trace::poisson_trace_over;
 
-use super::common::{corpus_data, exp_rng, write_csv, ModelCtx, Scale};
+use super::common::{corpus_data, exp_rng, update_bench_json, write_csv, ModelCtx, Scale};
 
-/// Build the two model contexts + SPS predictors used by fig9/10/11.
-fn setup_model(
+/// Build the two model contexts + SPS predictors used by fig9/10/11
+/// and the autoscale experiment.
+pub(crate) fn setup_model(
     which: &str,
     scale: Scale,
 ) -> Result<(ModelCtx, SpsPredictor, Vec<crate::workload::corpus::Prompt>)> {
@@ -246,6 +248,23 @@ pub fn fig11(scale: Scale) -> Result<()> {
     Ok(())
 }
 
+/// One strategy's serving outcome as a `BENCH_serving.json` record
+/// (numeric fields, unlike the human-oriented CSV strings).
+fn serving_bench_row(model: &str, agg: &Aggregator, capacity: usize) -> Json {
+    let q = agg.queue_delay_summary();
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("model".to_string(), Json::Str(model.to_string()));
+    o.insert("strategy".to_string(), Json::Str(agg.records[0].strategy.to_string()));
+    o.insert("batch".to_string(), Json::Num(capacity as f64));
+    o.insert("total_cost".to_string(), Json::Num(agg.total_cost()));
+    o.insert("mean_ttft_s".to_string(), Json::Num(agg.ttft_summary().mean));
+    o.insert("mean_queue_s".to_string(), Json::Num(q.mean));
+    o.insert("p90_queue_s".to_string(), Json::Num(q.p90));
+    o.insert("mean_batch".to_string(), Json::Num(agg.mean_batch()));
+    o.insert("cold_starts".to_string(), Json::Num(agg.cold_paid() as f64));
+    Json::Obj(o)
+}
+
 /// Event-driven serving comparison: every strategy under the *same*
 /// concurrent open-loop Poisson trace, executed through the platform
 /// simulator (queueing, cold starts and keep-alive included), each
@@ -262,6 +281,7 @@ pub fn serving(scale: Scale) -> Result<()> {
     let rate_per_s = 5.0;
     let batch_capacity = 8;
     let mut csv_rows = Vec::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
     for which in ["gpt2", "dsv2"] {
         let small = Scale { requests: scale.requests.min(8), ..scale };
         let (mut ctx, sps, test) = setup_model(which, small)?;
@@ -315,6 +335,7 @@ pub fn serving(scale: Scale) -> Result<()> {
                 if s == Strategy::Gpu && opts.batch_capacity == 1 {
                     gpu_total = agg.total_cost();
                 }
+                bench_rows.push(serving_bench_row(&ctx.dims.name, &agg, opts.batch_capacity));
                 let row = serving_row(&agg, opts.batch_capacity);
                 t.row(row.clone());
                 csv_rows.push({
@@ -343,6 +364,7 @@ pub fn serving(scale: Scale) -> Result<()> {
         let agg_unbatched = remoe_audited(&unbatched)?;
         let agg_batched = remoe_audited(&batched)?;
         for (agg, opts) in [(&agg_unbatched, &unbatched), (&agg_batched, &batched)] {
+            bench_rows.push(serving_bench_row(&ctx.dims.name, agg, opts.batch_capacity));
             let row = serving_row(agg, opts.batch_capacity);
             t.row(row.clone());
             csv_rows.push({
@@ -386,6 +408,7 @@ pub fn serving(scale: Scale) -> Result<()> {
         ],
         &csv_rows,
     )?;
+    update_bench_json("serving", Json::Arr(bench_rows))?;
     Ok(())
 }
 

@@ -29,6 +29,7 @@ pub mod allocation;
 pub mod selection;
 pub mod optimizer;
 pub mod partition;
+pub mod autoscale;
 pub mod coordinator;
 pub mod baselines;
 pub mod workload;

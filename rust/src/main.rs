@@ -4,6 +4,8 @@
 //! remoe exp <id|all> [--scale tiny|default|paper]   reproduce a paper figure/table
 //! remoe serve [--model M] [--requests N] [--rate R] serve a Poisson trace end-to-end
 //!             [--instances I] [--batch C]           (C>1: continuous batching)
+//!             [--autoscale P] [--autoscale-tick S]  P: reactive | warmpool[:floor]
+//!                                                      | predictive[:window_s]
 //! remoe plan  [--model M]                           plan one request, print the deployment
 //! remoe info                                        artifact + model inventory
 //! ```
@@ -17,14 +19,16 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
+use remoe::autoscale::AutoscalePolicy;
 use remoe::baselines::Strategy;
 use remoe::config::{CostDims, SlaConfig, SystemConfig};
-use remoe::coordinator::{build_history, serve_remoe_with, Planner, ServeOptions};
+use remoe::coordinator::{build_history, serve_on_platform, Planner, RemoePolicy, ServeOptions};
 use remoe::experiments::{self, Scale};
 use remoe::metrics::{fmt_f, Table};
 use remoe::model::{self, Backend, Engine};
 use remoe::prediction::{SpsPredictor, TreeParams};
 use remoe::runtime::ArtifactStore;
+use remoe::serverless::{CostComponent, Platform};
 use remoe::util::cli::Args;
 use remoe::util::logger;
 use remoe::util::rng::Rng;
@@ -85,11 +89,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_out = args.usize_or("n-out", 32);
     let seed = args.u64_or("seed", 7);
     let (hyper, dims) = dims_for(model_name)?;
+    let defaults = ServeOptions::default();
     let opts = ServeOptions {
-        keepalive_s: args.f64_or("keepalive", 60.0),
+        keepalive_s: args.f64_or("keepalive", defaults.keepalive_s),
         main_instances: args.usize_or("instances", 1),
         batch_capacity: args.usize_or("batch", 1),
-        ..ServeOptions::default()
+        autoscale: match args.flag("autoscale") {
+            Some(spec) => AutoscalePolicy::parse(spec)?,
+            None => AutoscalePolicy::Reactive,
+        },
+        autoscale_tick_s: args.f64_or("autoscale-tick", defaults.autoscale_tick_s),
+        ..defaults
     };
 
     let cfg = SystemConfig::default();
@@ -130,7 +140,11 @@ fn serve_and_report<B: Backend>(
     let history = build_history(engine, train)?;
     let params = TreeParams { beta: 40, fanout: 4, ..TreeParams::default() };
     let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
-    let agg = serve_remoe_with(engine, planner, &sps, trace, opts)?;
+    let mut platform = Platform::new(&planner.platform, opts.seed);
+    let agg = {
+        let mut policy = RemoePolicy { engine, planner, predictor: &sps };
+        serve_on_platform(&mut policy, trace, &mut platform, opts)?
+    };
 
     let mut t = Table::new(&[
         "req",
@@ -159,6 +173,7 @@ fn serve_and_report<B: Backend>(
         ]);
     }
     t.print();
+    let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
     println!(
         "totals: cost={:.1}  mean ttft={:.2}s  mean tpot={:.4}s  mean queue={:.2}s  \
          mean batch={:.2}  cold starts={}  makespan={:.1}s  \
@@ -172,6 +187,12 @@ fn serve_and_report<B: Backend>(
         agg.makespan_s(),
         agg.engine_throughput(),
         agg.token_throughput(),
+    );
+    println!(
+        "autoscale [{}]: prewarm idle cost={prewarm:.1}  ledger total={:.1}  \
+         (= Σ request costs + prewarm)",
+        opts.autoscale.name(),
+        platform.billing.total(),
     );
     Ok(())
 }

@@ -12,6 +12,13 @@ pub enum CostComponent {
     RemoteExpertPrefill,
     RemoteExpertDecode,
     ColdStart,
+    /// Pre-warmed capacity (autoscaling): the cold start plus the idle
+    /// keep-alive an instance spends between being provisioned and its
+    /// first invocation (or its expiry, if never used). Charged by the
+    /// platform's pre-warm path, never by a request, so per-request
+    /// cost attribution excludes it: `ledger == Σ request costs +
+    /// PrewarmIdle`.
+    PrewarmIdle,
     Other,
 }
 
@@ -63,6 +70,19 @@ impl BillingMeter {
     /// Sum of entry costs appended since `mark` (per-request deltas).
     pub fn total_since(&self, mark: usize) -> f64 {
         self.entries[mark..].iter().map(BillingEntry::cost).sum()
+    }
+
+    /// Sum of one component's entry costs appended since `mark`. The
+    /// serving scheduler uses this to keep pre-warm idle settlements
+    /// (which can land inside a request's billing window when the
+    /// request is the first to use a pre-warmed instance) out of that
+    /// request's cost attribution.
+    pub fn component_total_since(&self, mark: usize, c: CostComponent) -> f64 {
+        self.entries[mark..]
+            .iter()
+            .filter(|e| e.component == c)
+            .map(BillingEntry::cost)
+            .sum()
     }
 
     pub fn by_component(&self) -> BTreeMap<CostComponent, f64> {
@@ -120,6 +140,22 @@ mod tests {
         c.charge(CostComponent::Other, 100.0, 2.0, 1.0);
         assert!(b.total() > a.total());
         assert!(c.total() > a.total());
+    }
+
+    #[test]
+    fn component_total_since_isolates_prewarm_entries() {
+        let mut m = BillingMeter::new();
+        m.charge(CostComponent::PrewarmIdle, 100.0, 1.0, 1.0);
+        let mark = m.mark();
+        m.charge(CostComponent::MainCpu, 100.0, 2.0, 1.0);
+        m.charge(CostComponent::PrewarmIdle, 50.0, 1.0, 1.0);
+        assert_eq!(m.component_total_since(mark, CostComponent::PrewarmIdle), 50.0);
+        assert_eq!(m.total_since(mark), 250.0);
+        assert_eq!(m.component_total(CostComponent::PrewarmIdle), 150.0);
+        // the attribution identity the scheduler relies on
+        let attributed =
+            m.total_since(mark) - m.component_total_since(mark, CostComponent::PrewarmIdle);
+        assert_eq!(attributed, 200.0);
     }
 
     #[test]

@@ -20,6 +20,21 @@
 //! instance that was still warm at an earlier event time and
 //! manufacture spurious cold starts.
 //!
+//! Instances can also be **pre-warmed** ahead of arrivals
+//! ([`Platform::prewarm_at`], the autoscaling subsystem's entry
+//! point): a pre-warmed instance pays its cold start plus the idle
+//! time until its first invocation (or its expiry, if never used)
+//! into the ledger as the [`CostComponent::PrewarmIdle`] component —
+//! settled lazily, through the same union-billing span set as
+//! occupancy, so a request landing on pre-warmed capacity is never
+//! double-charged. [`Platform::keep_warm_at`] holds a warm floor in
+//! place — extending an instance past its organic expiry opens such a
+//! PrewarmIdle window at that expiry, so serving-granted keep-alive
+//! stays free while provisioned hold time is paid for. The matching
+//! scale-down path ([`Platform::retire_idle_at`]) truncates the
+//! keep-alive of surplus idle instances; earlier-time (out-of-order)
+//! callers still see a retired instance as it was while live.
+//!
 //! When every admissible instance's slots are busy the platform either
 //! *scales out* (spawns a cold instance, if under the function's
 //! instance limit) or *queues* the invocation on the earliest-free
@@ -93,6 +108,12 @@ struct Instance {
     /// where covered, so co-batched requests share one instance-time
     /// bill without a bigger co-batched plan ever riding fully free.
     billed: Vec<BilledSpan>,
+    /// `Some(spawn time)` while this instance is pre-warmed capacity
+    /// whose cold start + idle window has not been settled yet; the
+    /// settlement (at first use, retirement, pruning, or final
+    /// [`Platform::settle_prewarm_idle`]) charges it as
+    /// [`CostComponent::PrewarmIdle`] and takes the marker.
+    prewarm_idle_from: Option<f64>,
 }
 
 impl Instance {
@@ -198,6 +219,34 @@ impl Instance {
     }
 }
 
+/// Settle a pre-warmed instance's pending cold-start + idle window
+/// `[spawn, until]` as [`CostComponent::PrewarmIdle`]. Runs through
+/// [`Instance::bill_occupancy`] so the idle window joins the billed
+/// span set: occupancy that later overlaps it (an out-of-order
+/// earlier-time invocation) charges only its uncovered excess instead
+/// of double-billing. No-op once settled.
+fn settle_prewarm_span(
+    billing: &mut BillingMeter,
+    inst: &mut Instance,
+    spec: &FunctionSpec,
+    cpu_rate: f64,
+    gpu_rate: f64,
+    until: f64,
+) {
+    let Some(from) = inst.prewarm_idle_from.take() else {
+        return;
+    };
+    let until = until.max(from);
+    for (mem_mb, gpu_mb, dur) in inst.bill_occupancy(from, until, spec.mem_mb, spec.gpu_mb) {
+        if mem_mb > 0.0 {
+            billing.charge(CostComponent::PrewarmIdle, mem_mb, dur, cpu_rate);
+        }
+        if gpu_mb > 0.0 {
+            billing.charge(CostComponent::PrewarmIdle, gpu_mb, dur, gpu_rate);
+        }
+    }
+}
+
 /// Charge one occupancy `[queue_exit, finished_at]` of `inst` under
 /// union billing (see [`Instance::bill_occupancy`]).
 fn charge_union(
@@ -273,7 +322,7 @@ impl Platform {
     pub fn new(cfg: &PlatformConfig, seed: u64) -> Platform {
         Platform {
             clock: 0.0,
-            keepalive_s: 60.0,
+            keepalive_s: cfg.keepalive_s,
             cold: ColdStartModel::from_platform(cfg),
             net: NetworkModel::from_platform(cfg),
             cpu_rate: cfg.cpu_rate_per_mb_s,
@@ -396,6 +445,7 @@ impl Platform {
                     warm_until: at,
                     slots: vec![at; capacity],
                     billed: Vec::new(),
+                    prewarm_idle_from: None,
                 });
                 (pool.len() - 1, 0, at, cold_start_s)
             }
@@ -428,6 +478,17 @@ impl Platform {
         let finished_at = started_at + work_s;
 
         let inst = &mut pool[idx];
+        // first use of pre-warmed capacity: the provisioning cold
+        // start + idle window up to this admission settles as
+        // PrewarmIdle, outside the request's own occupancy bill
+        settle_prewarm_span(
+            &mut self.billing,
+            inst,
+            &spec,
+            self.cpu_rate,
+            self.gpu_rate,
+            queue_exit,
+        );
         let batch = inst.occupied_at(queue_exit) + 1;
         inst.slots[slot] = finished_at;
         inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
@@ -499,6 +560,14 @@ impl Platform {
         let queue_delay_s = queue_exit - at;
         let started_at = queue_exit;
         let finished_at = started_at + work_s;
+        settle_prewarm_span(
+            &mut self.billing,
+            inst,
+            &spec,
+            self.cpu_rate,
+            self.gpu_rate,
+            queue_exit,
+        );
         let batch = inst.occupied_at(queue_exit) + 1;
         inst.slots[slot] = finished_at;
         inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
@@ -557,6 +626,152 @@ impl Platform {
         Ok(results)
     }
 
+    /// Pre-warm up to `n` fresh instances of `name` at virtual time
+    /// `at` — the autoscaling subsystem's provisioning primitive. Each
+    /// spawned instance pays its cold start immediately (ready at
+    /// `at + cold`), then idles on keep-alive from readiness; the cold
+    /// start plus the idle window until its first invocation (or its
+    /// expiry, if never used) is billed as
+    /// [`CostComponent::PrewarmIdle`], settled lazily. Spawning
+    /// respects the function's instance limit against the pool live at
+    /// `at`. Returns how many instances were actually spawned.
+    pub fn prewarm_at(&mut self, name: &str, at: f64, n: usize) -> usize {
+        let Some(spec) = self.specs.get(name).cloned() else {
+            return 0;
+        };
+        let limit = self.instance_limit(name);
+        let cold_start_s = self.cold.function(spec.footprint_mb).total();
+        let capacity = spec.batch_capacity.max(1);
+        let pool = self.pool.get_mut(name).unwrap();
+        let live = pool.iter().filter(|i| i.live_at(at)).count();
+        let room = limit.saturating_sub(live).min(n);
+        for _ in 0..room {
+            let id = self.next_instance;
+            self.next_instance += 1;
+            let ready_at = at + cold_start_s;
+            pool.push(Instance {
+                id,
+                spawned_at: at,
+                ready_at,
+                warm_until: ready_at + self.keepalive_s,
+                slots: vec![at; capacity],
+                billed: Vec::new(),
+                prewarm_idle_from: Some(at),
+            });
+        }
+        room
+    }
+
+    /// Keep-alive hold: extend up to `n` live instances of `name`
+    /// (most recently active first) so they stay warm until at least
+    /// `at + keepalive_s` — the autoscaler's floor primitive. Without
+    /// it a warm floor decays between control ticks: an instance that
+    /// expires just after a tick leaves a cold window of up to one
+    /// tick plus a cold start before the next re-provision. Holding
+    /// an instance past its organic expiry converts the extension
+    /// into billed pre-warm idle: the PrewarmIdle window starts at
+    /// the expiry the instance would have had, so keep-alive granted
+    /// by serving stays free while provisioned hold time is paid
+    /// for. Returns how many instances were held (including those
+    /// already warm long enough).
+    pub fn keep_warm_at(&mut self, name: &str, at: f64, n: usize) -> usize {
+        let Some(pool) = self.pool.get_mut(name) else {
+            return 0;
+        };
+        let mut live: Vec<(f64, u64, usize)> = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.live_at(at))
+            .map(|(idx, i)| (i.last_activity(), i.id, idx))
+            .collect();
+        // hottest first: hold the instances most likely to serve again
+        live.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let target_until = at + self.keepalive_s;
+        let mut held = 0;
+        for &(_, _, idx) in live.iter().take(n) {
+            let inst = &mut pool[idx];
+            if inst.warm_until < target_until {
+                if inst.prewarm_idle_from.is_none() {
+                    inst.prewarm_idle_from = Some(inst.warm_until);
+                }
+                inst.warm_until = target_until;
+            }
+            held += 1;
+        }
+        held
+    }
+
+    /// Scale-down: retire up to `n` instances of `name` that are idle
+    /// (no slot serving) at `at`, least-recent activity first — ties
+    /// by *youngest* spawn first, the exact reverse of
+    /// [`keep_warm_at`](Self::keep_warm_at)'s hottest-first order, so
+    /// a floor's held set and a surplus's retired set can never
+    /// overlap (same-tick pre-warmed instances all tie on activity).
+    /// Retirement truncates the instance's keep-alive to
+    /// `at`, so it stops admitting new work from `at` on while
+    /// earlier-time (out-of-order) callers still see it as it was; a
+    /// retired pre-warmed instance settles its PrewarmIdle window
+    /// `[spawn, at]` immediately. Returns how many were retired.
+    pub fn retire_idle_at(&mut self, name: &str, at: f64, n: usize) -> usize {
+        let Some(spec) = self.specs.get(name).cloned() else {
+            return 0;
+        };
+        let Some(pool) = self.pool.get_mut(name) else {
+            return 0;
+        };
+        let mut idle: Vec<(f64, u64, usize)> = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.live_at(at) && i.occupied_at(at) == 0)
+            .map(|(idx, i)| (i.last_activity(), i.id, idx))
+            .collect();
+        idle.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut retired = 0;
+        for &(_, _, idx) in idle.iter().take(n) {
+            let inst = &mut pool[idx];
+            settle_prewarm_span(&mut self.billing, inst, &spec, self.cpu_rate, self.gpu_rate, at);
+            inst.warm_until = inst.warm_until.min(at);
+            retired += 1;
+        }
+        retired
+    }
+
+    /// Settle the pending PrewarmIdle window of every never-used
+    /// pre-warmed instance up to its keep-alive expiry. The serving
+    /// scheduler calls this once after the event queue drains so the
+    /// ledger closes with `total == Σ request costs + PrewarmIdle`.
+    /// Idempotent; instances already settled (used, retired or pruned)
+    /// are untouched.
+    pub fn settle_prewarm_idle(&mut self) {
+        for (name, pool) in self.pool.iter_mut() {
+            let Some(spec) = self.specs.get(name) else {
+                continue;
+            };
+            for inst in pool.iter_mut() {
+                let until = inst.warm_until;
+                settle_prewarm_span(
+                    &mut self.billing,
+                    inst,
+                    spec,
+                    self.cpu_rate,
+                    self.gpu_rate,
+                    until,
+                );
+            }
+        }
+    }
+
+    /// Names of all deployed functions (sorted — deterministic
+    /// iteration for the autoscaling control loop).
+    pub fn function_names(&self) -> Vec<String> {
+        self.specs.keys().cloned().collect()
+    }
+
+    /// Current deployed spec of a function.
+    pub fn spec(&self, name: &str) -> Option<&FunctionSpec> {
+        self.specs.get(name)
+    }
+
     /// Number of live (warm or busy) instances of a function at an
     /// explicit virtual time. Read-only: lazy eviction means the pool
     /// is filtered, never pruned, so event-driven callers at any
@@ -574,7 +789,24 @@ impl Platform {
     /// complement to lazy eviction — the pool itself never prunes on
     /// a timestamp that can regress.
     pub fn prune_expired_before(&mut self, low_water: f64) {
-        for pool in self.pool.values_mut() {
+        for (name, pool) in self.pool.iter_mut() {
+            // a never-used pre-warmed instance settles its idle bill
+            // (spawn → expiry) before it becomes unreachable
+            if let Some(spec) = self.specs.get(name) {
+                for inst in pool.iter_mut() {
+                    if inst.warm_until < low_water {
+                        let until = inst.warm_until;
+                        settle_prewarm_span(
+                            &mut self.billing,
+                            inst,
+                            spec,
+                            self.cpu_rate,
+                            self.gpu_rate,
+                            until,
+                        );
+                    }
+                }
+            }
             pool.retain(|i| i.warm_until >= low_water);
             // billed spans that end before `low_water` can never
             // overlap a future occupancy either — drop them too
@@ -582,12 +814,6 @@ impl Platform {
                 inst.billed.retain(|s| s.end > low_water);
             }
         }
-    }
-
-    /// [`warm_count_at`](Self::warm_count_at) evaluated at the
-    /// platform clock — the sequential-caller convenience.
-    pub fn warm_count(&self, name: &str) -> usize {
-        self.warm_count_at(name, self.clock)
     }
 }
 
@@ -690,9 +916,9 @@ mod tests {
     #[test]
     fn warm_count_tracks_pool() {
         let mut p = platform();
-        assert_eq!(p.warm_count("main"), 0);
-        p.invoke("main", 0.5, 0.0).unwrap();
-        assert_eq!(p.warm_count("main"), 1);
+        assert_eq!(p.warm_count_at("main", 0.0), 0);
+        let inv = p.invoke("main", 0.5, 0.0).unwrap();
+        assert_eq!(p.warm_count_at("main", inv.finished_at), 1);
     }
 
     #[test]
@@ -724,8 +950,7 @@ mod tests {
         assert_eq!(b.queue_delay_s, 0.0);
         assert_eq!(c.cold_start_s, 0.0);
         assert!(c.queue_delay_s > 0.0);
-        p.advance_to(0.5);
-        assert_eq!(p.warm_count("expert0"), 2);
+        assert_eq!(p.warm_count_at("expert0", 0.5), 2);
     }
 
     #[test]
@@ -783,8 +1008,7 @@ mod tests {
         for inv in [&a, &b, &c, &d] {
             assert_eq!(inv.instance, warm.instance, "join-in-flight shares the instance");
         }
-        p.advance_to(t);
-        assert_eq!(p.warm_count("f"), 1, "one instance serves the whole batch");
+        assert_eq!(p.warm_count_at("f", t), 1, "one instance serves the whole batch");
     }
 
     #[test]
@@ -919,9 +1143,6 @@ mod tests {
         // the read at the expired time must not prune the pool: the
         // earlier-time view still sees the instance
         assert_eq!(p.warm_count_at("main", a.finished_at), 1);
-        // the clock-based wrapper agrees with the explicit form
-        p.advance_to(expired);
-        assert_eq!(p.warm_count("main"), p.warm_count_at("main", expired));
     }
 
     #[test]
@@ -975,5 +1196,125 @@ mod tests {
     fn invoke_on_unknown_instance_errors() {
         let mut p = batched_platform(2);
         assert!(p.invoke_on("f", 999, 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn prewarmed_instance_serves_warm_and_bills_idle_separately() {
+        let mut p = platform();
+        assert_eq!(p.prewarm_at("main", 0.0, 1), 1);
+        assert_eq!(p.warm_count_at("main", 0.0), 1);
+        let inv = p.invoke_at("main", 10.0, 1.0, 0.0).unwrap();
+        assert_eq!(inv.cold_start_s, 0.0, "pre-warmed hit must not pay a cold start");
+        assert_eq!(inv.queue_delay_s, 0.0);
+        assert!(inv.invoke_overhead_s > 0.0, "warm admission path");
+        // cold start + idle until first use: [0, 10] at the full spec
+        // (1000 MB CPU at 1x + 500 MB GPU at 3x = 2500 per second)
+        let idle = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!((idle - 10.0 * 2500.0).abs() < 1e-6, "idle={idle}");
+        // the request pays exactly its own occupancy on top
+        let active = inv.finished_at - inv.service_start();
+        let total = p.billing.total();
+        assert!((total - idle - active * 2500.0).abs() < 1e-6, "total={total}");
+    }
+
+    #[test]
+    fn prewarm_respects_the_instance_limit() {
+        let mut p = platform();
+        p.set_instance_limit("main", 2);
+        assert_eq!(p.prewarm_at("main", 0.0, 5), 2);
+        assert_eq!(p.prewarm_at("main", 1.0, 1), 0, "pool full while both live");
+        assert_eq!(p.warm_count_at("main", 1.0), 2);
+    }
+
+    #[test]
+    fn unused_prewarm_settles_cold_start_plus_keepalive() {
+        let mut p = platform();
+        p.prewarm_at("main", 0.0, 1);
+        p.settle_prewarm_idle();
+        let idle = p.billing.component_total(CostComponent::PrewarmIdle);
+        // cold start (2 s container + 1000/500 s load) + keep-alive
+        let window = 4.0 + p.keepalive_s;
+        assert!((idle - window * 2500.0).abs() < 1e-6, "idle={idle}");
+        assert!((p.billing.total() - idle).abs() < 1e-12, "only PrewarmIdle was charged");
+        p.settle_prewarm_idle();
+        assert!((p.billing.total() - idle).abs() < 1e-12, "settlement must be idempotent");
+    }
+
+    #[test]
+    fn retire_stops_admission_but_keeps_earlier_time_views() {
+        let mut p = platform();
+        p.prewarm_at("main", 0.0, 1);
+        assert_eq!(p.retire_idle_at("main", 10.0, 3), 1);
+        let idle = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!((idle - 10.0 * 2500.0).abs() < 1e-6, "retired idle window [0, 10]");
+        // from the retirement on, the instance no longer admits work
+        let b = p.invoke_at("main", 11.0, 1.0, 0.0).unwrap();
+        assert!(b.cold_start_s > 0.0, "retired capacity forces a fresh cold spawn");
+        // an earlier-time (out-of-order) caller still sees it warm,
+        // and its occupancy inside the settled idle window re-bills
+        // nothing (union billing covers it)
+        let mark = p.billing.mark();
+        let c = p.invoke_at("main", 5.0, 1.0, 0.0).unwrap();
+        assert_eq!(c.cold_start_s, 0.0);
+        assert_ne!(c.instance, b.instance);
+        assert_eq!(p.billing.total_since(mark), 0.0, "covered occupancy re-billed");
+    }
+
+    #[test]
+    fn keep_warm_extension_bills_only_beyond_organic_expiry() {
+        let mut p = platform();
+        let a = p.invoke_at("main", 0.0, 1.0, 0.0).unwrap();
+        let organic = a.finished_at + p.keepalive_s;
+        // a hold inside the organic window extends nothing and is free
+        assert_eq!(p.keep_warm_at("main", a.finished_at, 1), 1);
+        assert_eq!(p.billing.component_total(CostComponent::PrewarmIdle), 0.0);
+        // a hold near the organic expiry keeps the instance warm past
+        // it; the extension becomes a pending PrewarmIdle window
+        assert_eq!(p.keep_warm_at("main", organic - 1.0, 1), 1);
+        let use_at = organic + 20.0;
+        let b = p.invoke_at("main", use_at, 1.0, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        assert_eq!(b.cold_start_s, 0.0, "held instance serves warm past its organic expiry");
+        // the hold billed exactly [organic expiry, first use]
+        let idle = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!((idle - (use_at - organic) * 2500.0).abs() < 1e-6, "idle={idle}");
+        // after serving, the instance is organic again: nothing pending
+        p.settle_prewarm_idle();
+        let idle2 = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!((idle2 - idle).abs() < 1e-12, "hold window must settle once");
+    }
+
+    #[test]
+    fn retire_skips_busy_instances_and_organic_retirement_is_free() {
+        let mut p = batched_platform(2);
+        let a = p.invoke_at("f", 0.0, 5.0, 0.0).unwrap();
+        assert_eq!(p.retire_idle_at("f", a.finished_at - 0.5, 1), 0, "busy ⇒ not retirable");
+        assert_eq!(p.retire_idle_at("f", a.finished_at + 1.0, 1), 1);
+        assert_eq!(p.billing.component_total(CostComponent::PrewarmIdle), 0.0);
+    }
+
+    #[test]
+    fn hold_and_retire_orders_are_complementary_under_ties() {
+        let mut p = platform();
+        p.set_instance_limit("main", 3);
+        assert_eq!(p.prewarm_at("main", 0.0, 3), 3);
+        // all three tie on activity (slots at spawn time): the hold
+        // takes the lowest id; the retire order must take the others
+        assert_eq!(p.keep_warm_at("main", 10.0, 1), 1);
+        assert_eq!(p.retire_idle_at("main", 10.0, 2), 2);
+        assert_eq!(p.warm_count_at("main", 11.0), 1);
+        // the survivor is the held instance: it still serves warm
+        let inv = p.invoke_at("main", 30.0, 1.0, 0.0).unwrap();
+        assert_eq!(inv.cold_start_s, 0.0, "the held instance must survive the retire");
+    }
+
+    #[test]
+    fn prune_settles_unused_prewarm_idle() {
+        let mut p = platform();
+        p.prewarm_at("main", 0.0, 1);
+        p.prune_expired_before(1000.0);
+        assert_eq!(p.warm_count_at("main", 1000.0), 0);
+        let idle = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!((idle - (4.0 + p.keepalive_s) * 2500.0).abs() < 1e-6, "idle={idle}");
     }
 }

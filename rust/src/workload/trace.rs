@@ -56,6 +56,31 @@ pub fn poisson_trace_over(
         .collect()
 }
 
+/// Deterministic bursty trace: `bursts` groups of `burst` requests,
+/// the k-th group arriving together at `k * period_s`. Prompts cycle
+/// through the given set. The canonical autoscaling workload: with a
+/// keep-alive shorter than the inter-burst gap, a reactive pool
+/// re-cold-starts one instance *per request* every burst, while a
+/// pre-warmed instance with enough batch slots absorbs the whole
+/// group warm.
+pub fn bursty_trace_over(
+    prompts: &[Prompt],
+    burst: usize,
+    bursts: usize,
+    period_s: f64,
+    n_out: usize,
+) -> Vec<Request> {
+    assert!(!prompts.is_empty() && burst > 0);
+    (0..burst * bursts)
+        .map(|id| Request {
+            id,
+            arrival_s: (id / burst) as f64 * period_s,
+            prompt: prompts[id % prompts.len()].clone(),
+            n_out,
+        })
+        .collect()
+}
+
 /// Closed trace from pre-sampled prompts (Fig. 9's "50 tasks from the
 /// test set", all available immediately).
 pub fn batch_trace(prompts: &[Prompt], n_out: usize) -> Vec<Request> {
@@ -100,6 +125,19 @@ mod tests {
         for w in a.windows(2) {
             assert!(w[1].arrival_s > w[0].arrival_s);
         }
+    }
+
+    #[test]
+    fn bursty_trace_groups_arrivals() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = c.split(0, 4, 3);
+        let trace = bursty_trace_over(&test, 3, 2, 30.0, 16);
+        assert_eq!(trace.len(), 6);
+        assert!(trace[..3].iter().all(|r| r.arrival_s == 0.0));
+        assert!(trace[3..].iter().all(|r| r.arrival_s == 30.0));
+        // prompts cycle through the set, ids stay sequential
+        assert_eq!(trace[4].id, 4);
+        assert_eq!(trace[4].prompt.text, test[0].text);
     }
 
     #[test]

@@ -145,5 +145,5 @@ fn platform_simulator_bills_remoe_topology() {
         p.invoke("experts-l0", 0.004, 1536.0).unwrap();
     }
     assert!(p.billing.total() > before);
-    assert_eq!(p.warm_count("experts-l0"), 1);
+    assert_eq!(p.warm_count_at("experts-l0", p.clock), 1);
 }

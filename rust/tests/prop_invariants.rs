@@ -265,8 +265,7 @@ fn prop_platform_scheduler_invariants() {
             }
             last_finish.insert(inv.instance, inv.finished_at);
             // live instances never exceed the cap
-            p.advance_to(t);
-            assert!(p.warm_count("f") <= limit, "instance cap exceeded");
+            assert!(p.warm_count_at("f", t) <= limit, "instance cap exceeded");
         }
         // billing-ledger total equals the sum of the per-call deltas
         assert!(
@@ -393,6 +392,132 @@ fn prop_batching_slots_and_union_billing_invariants() {
             p.billing.total()
         );
     });
+}
+
+#[test]
+fn prop_prewarm_billing_identity_and_pool_cap() {
+    // Pre-warm billing invariants under random op sequences: the
+    // ledger always splits exactly into Σ per-request attributions +
+    // the PrewarmIdle component, and the warm pool never exceeds the
+    // instance limit at any swept timestamp (event times + midpoints).
+    Prop::new("prewarm: ledger identity + pool cap").with_cases(30).check(|rng, case| {
+        use remoe::serverless::{CostComponent, FunctionSpec, Platform};
+        let mut p = Platform::new(&PlatformConfig::default(), case as u64 ^ 0x9A7E);
+        p.keepalive_s = rng.range_f64(2.0, 20.0);
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: rng.range_f64(100.0, 2000.0),
+            gpu_mb: if rng.bool(0.3) { 200.0 } else { 0.0 },
+            footprint_mb: rng.range_f64(0.0, 1000.0),
+            batch_capacity: rng.range_u(1, 3),
+            component: CostComponent::MainCpu,
+        });
+        let limit = rng.range_u(1, 4);
+        p.set_instance_limit("f", limit);
+
+        let mut t = 0.0f64;
+        let mut times = vec![0.0];
+        let mut attributed = 0.0;
+        let n = small_size(rng, 2, 40);
+        for _ in 0..n {
+            t += rng.range_f64(0.0, 8.0);
+            times.push(t);
+            match rng.below(5) {
+                0 => {
+                    p.prewarm_at("f", t, rng.range_u(1, 3));
+                }
+                1 => {
+                    p.retire_idle_at("f", t, rng.range_u(1, 3));
+                }
+                2 => {
+                    p.keep_warm_at("f", t, rng.range_u(1, 3));
+                }
+                _ => {
+                    let mark = p.billing.mark();
+                    let inv = p.invoke_at("f", t, rng.range_f64(0.01, 3.0), 0.0).unwrap();
+                    attributed += p.billing.total_since(mark)
+                        - p.billing.component_total_since(mark, CostComponent::PrewarmIdle);
+                    assert!(inv.started_at >= t - 1e-12);
+                    times.push(inv.finished_at);
+                }
+            }
+        }
+        let mut sweep = times.clone();
+        for w in times.windows(2) {
+            sweep.push(0.5 * (w[0] + w[1]));
+        }
+        for &s in &sweep {
+            assert!(p.warm_count_at("f", s) <= limit, "pool over limit at t={s}");
+        }
+        p.settle_prewarm_idle();
+        let prewarm = p.billing.component_total(CostComponent::PrewarmIdle);
+        let total = p.billing.total();
+        assert!(
+            (total - attributed - prewarm).abs() <= 1e-9 * total.max(1.0),
+            "ledger {total} != Σ request costs {attributed} + prewarm {prewarm}"
+        );
+    });
+}
+
+#[test]
+fn prop_autoscaled_serve_ledger_includes_prewarm_component() {
+    // End-to-end: under randomized scaling policies, seeds and knobs,
+    // the serving ledger still splits exactly into per-request costs
+    // plus the pre-warm idle component; the null policy never
+    // pre-warms.
+    Prop::new("serve: ledger == Σ costs + prewarm under random policies").with_cases(3).check(
+        |rng, case| {
+            use remoe::autoscale::AutoscalePolicy;
+            use remoe::config::SystemConfig;
+            use remoe::coordinator::{
+                build_history, serve_on_platform, Planner, RemoePolicy, ServeOptions,
+            };
+            use remoe::model::{self, Engine};
+            use remoe::prediction::{SpsPredictor, TreeParams};
+            use remoe::serverless::{CostComponent, Platform};
+            use remoe::workload::corpus::{standard_corpora, Corpus};
+            use remoe::workload::trace::bursty_trace_over;
+
+            let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+            let corpus = Corpus::new(standard_corpora()[0].clone());
+            let (train, test) = corpus.split(12, small_size(rng, 2, 4), case as u64 + 9);
+            let history = build_history(&mut engine, &train).unwrap();
+            let params = TreeParams { beta: 10, fanout: 3, ..TreeParams::default() };
+            let sps = SpsPredictor::build(history, 4, params, &mut Rng::new(case as u64));
+            let dims = CostDims::gpt2_moe(4);
+            let planner =
+                Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
+
+            let autoscale = match rng.below(3) {
+                0 => AutoscalePolicy::Reactive,
+                1 => AutoscalePolicy::FixedWarmPool { floor: rng.range_u(1, 2) },
+                _ => AutoscalePolicy::predictive(),
+            };
+            let trace = bursty_trace_over(&test, 2, 2, rng.range_f64(5.0, 40.0), 6);
+            let opts = ServeOptions {
+                keepalive_s: rng.range_f64(2.0, 15.0),
+                main_instances: rng.range_u(1, 3),
+                batch_capacity: rng.range_u(1, 4),
+                autoscale,
+                ..ServeOptions::default()
+            };
+            let mut platform = Platform::new(&planner.platform, opts.seed);
+            let mut policy =
+                RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+
+            let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+            let ledger = platform.billing.total();
+            let records = agg.total_cost();
+            assert!(
+                (ledger - records - prewarm).abs() <= 1e-9 * ledger.max(1.0),
+                "ledger {ledger} != Σ records {records} + prewarm {prewarm}"
+            );
+            if autoscale == AutoscalePolicy::Reactive {
+                assert_eq!(prewarm, 0.0, "the null policy must never pre-warm");
+            }
+        },
+    );
 }
 
 #[test]
