@@ -93,7 +93,7 @@ fn run<B: Backend>(
     ]);
     let row = |agg: &Aggregator| -> Vec<String> {
         vec![
-            agg.records[0].strategy.to_string(),
+            agg.strategy().to_string(),
             fmt_f(agg.total_cost(), 1),
             fmt_f(agg.ttft_summary().mean, 2),
             fmt_f(agg.tpot_summary().mean, 4),

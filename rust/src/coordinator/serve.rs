@@ -90,6 +90,13 @@ pub struct ServeOptions {
     /// Control-tick period (virtual seconds); ticks stop at the last
     /// arrival. `0.0` disables ticks entirely.
     pub autoscale_tick_s: f64,
+    /// Aggregate records in bounded memory
+    /// ([`Aggregator::streaming`]) instead of retaining every
+    /// [`RequestRecord`] — required for 10^6-request traces, where the
+    /// full-record vector alone dominates RSS. Summaries stay
+    /// available; per-record access and `canonical()` do not (use
+    /// [`Aggregator::canonical_hash`] for determinism checks).
+    pub streaming: bool,
 }
 
 impl Default for ServeOptions {
@@ -102,6 +109,7 @@ impl Default for ServeOptions {
             seed: 0x5E47,
             autoscale: AutoscalePolicy::Reactive,
             autoscale_tick_s: 5.0,
+            streaming: false,
         }
     }
 }
@@ -250,7 +258,7 @@ pub fn serve_on_platform(
     }
 
     let mut in_flight = 0usize;
-    let mut agg = Aggregator::default();
+    let mut agg = if opts.streaming { Aggregator::streaming() } else { Aggregator::default() };
     while let Some(Reverse(event)) = heap.pop() {
         let i = match event.kind {
             EventKind::Completion => {
@@ -509,6 +517,59 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
     }
 }
 
+/// Analytic-only [`ServePolicy`] for scheduler-scale measurement:
+/// every request maps to the same fixed [`ServicePlan`] — no engine,
+/// no planner, no prediction — so a serve over a
+/// [`synthetic_trace`](crate::workload::trace::synthetic_trace)
+/// exercises exactly the event loop and the platform hot paths
+/// (admission, billing, pruning). `bench_serve` and the `exp serving`
+/// throughput row are built on it.
+#[derive(Debug, Clone)]
+pub struct SyntheticServePolicy {
+    pub n_in: usize,
+    pub prefill_s: f64,
+    pub decode_per_token_s: f64,
+    pub main_mem_mb: f64,
+    pub main_gpu_mb: f64,
+    pub main_footprint_mb: f64,
+}
+
+impl Default for SyntheticServePolicy {
+    fn default() -> Self {
+        // magnitudes in the ballpark of the gpt2 serving experiment:
+        // sub-second prefill, tens-of-ms decode steps, GB-scale memory
+        SyntheticServePolicy {
+            n_in: 128,
+            prefill_s: 0.05,
+            decode_per_token_s: 0.01,
+            main_mem_mb: 1000.0,
+            main_gpu_mb: 500.0,
+            main_footprint_mb: 1000.0,
+        }
+    }
+}
+
+impl ServePolicy for SyntheticServePolicy {
+    fn strategy(&self) -> &'static str {
+        "Synthetic"
+    }
+
+    fn plan(&mut self, req: &Request) -> Result<ServicePlan> {
+        Ok(ServicePlan {
+            n_in: self.n_in,
+            n_out: req.n_out,
+            prefill_s: self.prefill_s,
+            decode_s: self.decode_per_token_s * req.n_out as f64,
+            main_mem_mb: self.main_mem_mb,
+            main_gpu_mb: self.main_gpu_mb,
+            main_footprint_mb: self.main_footprint_mb,
+            remote: Vec::new(),
+            calc_time_s: 0.0,
+            engine_wall_s: 0.0,
+        })
+    }
+}
+
 /// Serve a trace through Remoe with explicit scheduler options.
 pub fn serve_remoe_with<B: Backend>(
     engine: &mut Engine<B>,
@@ -647,6 +708,36 @@ mod tests {
         for r in &warmed.records[1..] {
             assert_eq!(r.main_cold_s, 0.0, "warm floor must absorb the main cold start");
         }
+    }
+
+    #[test]
+    fn streaming_serve_matches_full_serve_on_a_synthetic_trace() {
+        let trace = crate::workload::trace::synthetic_trace(300, 5.0, 16, 7);
+        let run = |streaming: bool| {
+            let opts = ServeOptions {
+                main_instances: 4,
+                batch_capacity: 4,
+                overhead: InvokeOverhead::Expected,
+                streaming,
+                ..ServeOptions::default()
+            };
+            let mut platform =
+                Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+            let mut policy = SyntheticServePolicy::default();
+            serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
+        };
+        let full = run(false);
+        let stream = run(true);
+        assert_eq!(full.len(), 300);
+        assert_eq!(full.records.len(), 300);
+        assert!(stream.records.is_empty(), "streaming mode must not retain records");
+        assert_eq!(stream.len(), 300);
+        // identical virtual-time outcome, witnessed by the rolling hash
+        assert_eq!(full.canonical_hash(), stream.canonical_hash());
+        assert_eq!(full.strategy(), stream.strategy());
+        assert!((full.total_cost() - stream.total_cost()).abs() < 1e-9);
+        assert_eq!(full.cold_paid(), stream.cold_paid());
+        assert!((full.makespan_s() - stream.makespan_s()).abs() < 1e-12);
     }
 
     #[test]

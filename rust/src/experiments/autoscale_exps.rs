@@ -55,7 +55,7 @@ fn audited_run(
     );
     Ok(PolicyRun {
         policy,
-        strategy: agg.records[0].strategy.to_string(),
+        strategy: agg.strategy().to_string(),
         request_cost,
         prewarm_cost,
         total_cost,

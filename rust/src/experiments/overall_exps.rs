@@ -7,13 +7,16 @@ use anyhow::Result;
 
 use crate::baselines::{serve_baseline_profiles, BaselineEvaluator, Strategy};
 use crate::config::SystemConfig;
-use crate::coordinator::{prompt_signature, serve_on_platform, RemoePolicy, ServeOptions};
+use crate::coordinator::{
+    prompt_signature, serve_on_platform, RemoePolicy, ServeOptions, SyntheticServePolicy,
+};
 use crate::metrics::{fmt_f, Aggregator, Table};
 use crate::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
-use crate::serverless::Platform;
+use crate::serverless::{InvokeOverhead, Platform};
+use crate::util::bench::peak_rss_kb;
 use crate::util::json::Json;
 use crate::util::stats::summarize;
-use crate::workload::trace::poisson_trace_over;
+use crate::workload::trace::{poisson_trace_over, synthetic_trace};
 
 use super::common::{corpus_data, exp_rng, update_bench_json, write_csv, ModelCtx, Scale};
 
@@ -254,7 +257,7 @@ fn serving_bench_row(model: &str, agg: &Aggregator, capacity: usize) -> Json {
     let q = agg.queue_delay_summary();
     let mut o = std::collections::BTreeMap::new();
     o.insert("model".to_string(), Json::Str(model.to_string()));
-    o.insert("strategy".to_string(), Json::Str(agg.records[0].strategy.to_string()));
+    o.insert("strategy".to_string(), Json::Str(agg.strategy().to_string()));
     o.insert("batch".to_string(), Json::Num(capacity as f64));
     o.insert("total_cost".to_string(), Json::Num(agg.total_cost()));
     o.insert("mean_ttft_s".to_string(), Json::Num(agg.ttft_summary().mean));
@@ -263,6 +266,61 @@ fn serving_bench_row(model: &str, agg: &Aggregator, capacity: usize) -> Json {
     o.insert("mean_batch".to_string(), Json::Num(agg.mean_batch()));
     o.insert("cold_starts".to_string(), Json::Num(agg.cold_paid() as f64));
     Json::Obj(o)
+}
+
+/// Scheduler-scale throughput row: stream a large content-free trace
+/// through the event loop with the [`SyntheticServePolicy`] (no
+/// engine, no planner) so the timing isolates the platform hot paths
+/// — admission over the expiry index, union billing with on-the-fly
+/// span compaction, pruning — and the streaming aggregator keeps
+/// memory bounded. At the default/paper scale this simulates 10^6
+/// requests; the tiny scale used by the debug-profile experiment
+/// tests takes a 2·10^4 sweep so `cargo test` stays fast.
+fn serve_scale(scale: Scale) -> Result<Json> {
+    let n: usize = if scale.requests >= 50 { 1_000_000 } else { 20_000 };
+    let trace = synthetic_trace(n, 50.0, 16, 0xBE9C);
+    let opts = ServeOptions {
+        main_instances: 8,
+        batch_capacity: 4,
+        overhead: InvokeOverhead::Expected,
+        streaming: true,
+        ..ServeOptions::default()
+    };
+    let mut platform = Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+    let mut policy = SyntheticServePolicy::default();
+    let t0 = std::time::Instant::now();
+    let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(agg.len() == n, "scale run dropped requests: {} != {n}", agg.len());
+    anyhow::ensure!(agg.records.is_empty(), "scale run must stream, not retain records");
+    let req_per_s = n as f64 / wall_s.max(1e-9);
+    let rss_kb = peak_rss_kb();
+    println!(
+        "serve-scale: {n} requests in {wall_s:.2}s — {req_per_s:.0} req/s, \
+         peak {} live instances, {} spans retained, peak RSS {}",
+        platform.peak_retained_instances(),
+        platform.billed_spans(),
+        rss_kb.map_or("n/a".to_string(), |kb| format!("{} MiB", kb / 1024)),
+    );
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("n_requests".to_string(), Json::Num(n as f64));
+    o.insert("wall_s".to_string(), Json::Num(wall_s));
+    o.insert("req_per_s".to_string(), Json::Num(req_per_s));
+    o.insert(
+        "peak_live_instances".to_string(),
+        Json::Num(platform.peak_retained_instances() as f64),
+    );
+    o.insert("instances_spawned".to_string(), Json::Num(platform.instances_spawned() as f64));
+    o.insert("billed_spans_end".to_string(), Json::Num(platform.billed_spans() as f64));
+    o.insert(
+        "peak_rss_kb".to_string(),
+        rss_kb.map_or(Json::Null, |kb| Json::Num(kb as f64)),
+    );
+    o.insert(
+        "canonical_hash".to_string(),
+        Json::Str(format!("{:016x}", agg.canonical_hash())),
+    );
+    Ok(Json::Obj(o))
 }
 
 /// Event-driven serving comparison: every strategy under the *same*
@@ -316,7 +374,7 @@ pub fn serving(scale: Scale) -> Result<()> {
         ]);
         let serving_row = |agg: &Aggregator, capacity: usize| -> Vec<String> {
             vec![
-                agg.records[0].strategy.to_string(),
+                agg.strategy().to_string(),
                 capacity.to_string(),
                 fmt_f(agg.total_cost(), 1),
                 fmt_f(agg.ttft_summary().mean, 2),
@@ -409,6 +467,7 @@ pub fn serving(scale: Scale) -> Result<()> {
         &csv_rows,
     )?;
     update_bench_json("serving", Json::Arr(bench_rows))?;
+    update_bench_json("serve_scale", serve_scale(scale)?)?;
     Ok(())
 }
 
@@ -467,5 +526,28 @@ mod tests {
     #[test]
     fn serving_trace_runs_all_strategies_under_contention() {
         serving(tiny()).unwrap();
+    }
+
+    #[test]
+    fn empty_aggregator_bench_row_round_trips_through_json() {
+        // regression: an empty aggregator's NaN summaries used to be
+        // serialized verbatim, corrupting BENCH_serving.json for every
+        // later reader (our own parser included)
+        let agg = Aggregator::default();
+        let row = serving_bench_row("none", &agg, 1);
+        let text = row.to_string();
+        assert!(
+            !text.contains("NaN") && !text.contains("inf"),
+            "non-finite summary leaked into JSON: {text}"
+        );
+        update_bench_json("test_empty_aggregator", Json::Arr(vec![row])).unwrap();
+        let file = std::fs::read_to_string("BENCH_serving.json").unwrap();
+        let parsed = Json::parse(&file).expect("BENCH_serving.json must stay parseable");
+        let rows = parsed.get("test_empty_aggregator").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("strategy").as_str(), Some("none"));
+        assert_eq!(rows[0].get("cold_starts").as_f64(), Some(0.0));
+        // the NaN mean round-trips as null, not as a number
+        assert_eq!(rows[0].get("mean_ttft_s"), &Json::Null);
     }
 }

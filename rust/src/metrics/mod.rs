@@ -1,7 +1,27 @@
 //! Per-request records, aggregation and report printing (markdown
 //! tables + CSV) for the experiment harness and the serving loop.
+//!
+//! Two aggregation modes share one interface:
+//!
+//! * **Full** ([`Aggregator::default`]): every [`RequestRecord`] is
+//!   retained; summaries are exact and per-record access
+//!   (`agg.records`) works. The right mode for experiments that read
+//!   individual records.
+//! * **Streaming** ([`Aggregator::streaming`]): records are folded
+//!   into running summaries (Welford mean/variance, exact min/max and
+//!   totals, reservoir-sampled percentiles) and dropped — memory
+//!   stays bounded regardless of trace length, which is what lets the
+//!   serving scheduler sweep 10^6-request traces. Percentiles are
+//!   exact while the sample count is within the reservoir capacity
+//!   and an unbiased deterministic approximation beyond it.
+//!
+//! Both modes maintain a rolling FNV-1a hash over the canonical
+//! per-record serialization ([`Aggregator::canonical_hash`]), so
+//! determinism checks no longer need the full [`Aggregator::canonical`]
+//! string (unavailable in streaming mode).
 
-use crate::util::stats::{summarize, Summary};
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, summarize, Summary};
 
 /// One served request's outcome.
 ///
@@ -53,23 +73,251 @@ impl RequestRecord {
     }
 }
 
-/// Aggregation over a run.
-#[derive(Debug, Default)]
+/// Canonical per-record line: every *virtual-time* field, excluding
+/// the host wall-clock measurements `calc_time_s` / `engine_wall_s`
+/// (which legitimately vary across runs). Both the full canonical
+/// string and the rolling determinism hash are built from these lines.
+fn canonical_line(r: &RequestRecord) -> String {
+    format!(
+        "id={} strategy={} n_in={} n_out={} arrival={:?} queue={:?} start={:?} \
+         finish={:?} ttft={:?} tpot={:?} cost={:?} cold={:?} main_cold={:?} \
+         inst={} batch={} conc={}\n",
+        r.id,
+        r.strategy,
+        r.n_in,
+        r.n_out,
+        r.arrival_s,
+        r.queue_delay_s,
+        r.start_s,
+        r.finish_s,
+        r.ttft_s,
+        r.tpot_s,
+        r.cost,
+        r.cold_start_s,
+        r.main_cold_s,
+        r.instance,
+        r.batch,
+        r.concurrency,
+    )
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a byte slice, continuing from `hash`.
+fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    hash
+}
+
+/// Welford running mean/variance with exact min/max — one streamed
+/// metric's summary state.
+#[derive(Debug, Clone, Copy)]
+struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl Welford {
+    fn new() -> Welford {
+        Welford { n: 0, mean: 0.0, m2: 0.0, lo: f64::INFINITY, hi: f64::NEG_INFINITY }
+    }
+
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.lo = self.lo.min(x);
+        self.hi = self.hi.max(x);
+    }
+
+    /// Summary with percentiles read from `sample` (the reservoir's
+    /// view of this metric). Matches `stats::summarize` conventions:
+    /// NaN mean/min/max and zero std on degenerate inputs.
+    fn summary(&self, sample: &[f64]) -> Summary {
+        Summary {
+            n: self.n as usize,
+            mean: if self.n == 0 { f64::NAN } else { self.mean },
+            std: if self.n < 2 { 0.0 } else { (self.m2 / (self.n - 1) as f64).sqrt() },
+            min: if self.n == 0 { f64::NAN } else { self.lo },
+            p50: percentile(sample, 50.0),
+            p90: percentile(sample, 90.0),
+            p99: percentile(sample, 99.0),
+            max: if self.n == 0 { f64::NAN } else { self.hi },
+        }
+    }
+}
+
+/// One reservoir-sampled record: the percentile-bearing metrics only.
+#[derive(Debug, Clone, Copy)]
+struct SamplePoint {
+    ttft: f64,
+    tpot: f64,
+    queue: f64,
+    cost: f64,
+}
+
+/// Bounded-memory running aggregate of a record stream. Maintained in
+/// both aggregation modes (it is cheap relative to simulating a
+/// request); the streaming mode answers every summary query from it.
+#[derive(Debug, Clone)]
+struct StreamStats {
+    count: u64,
+    strategy: Option<&'static str>,
+    ttft: Welford,
+    tpot: Welford,
+    queue: Welford,
+    cost: Welford,
+    total_cost: f64,
+    cold_paid: usize,
+    concurrency_sum: f64,
+    batch_sum: f64,
+    engine_wall_sum: f64,
+    tokens: u64,
+    first_arrival: f64,
+    last_finish: f64,
+    /// Rolling FNV-1a over the canonical lines in push order.
+    hash: u64,
+    /// Algorithm-R reservoir (deterministic seeded RNG): uniform
+    /// sample of the stream for percentile estimation.
+    reservoir_cap: usize,
+    reservoir: Vec<SamplePoint>,
+    reservoir_rng: Rng,
+}
+
+impl StreamStats {
+    fn new(reservoir_cap: usize) -> StreamStats {
+        StreamStats {
+            count: 0,
+            strategy: None,
+            ttft: Welford::new(),
+            tpot: Welford::new(),
+            queue: Welford::new(),
+            cost: Welford::new(),
+            total_cost: 0.0,
+            cold_paid: 0,
+            concurrency_sum: 0.0,
+            batch_sum: 0.0,
+            engine_wall_sum: 0.0,
+            tokens: 0,
+            first_arrival: f64::INFINITY,
+            last_finish: 0.0,
+            hash: FNV_OFFSET,
+            reservoir_cap: reservoir_cap.max(1),
+            reservoir: Vec::new(),
+            reservoir_rng: Rng::new(0x5EA5_0A1D),
+        }
+    }
+
+    fn push(&mut self, r: &RequestRecord) {
+        self.count += 1;
+        self.strategy.get_or_insert(r.strategy);
+        self.ttft.push(r.ttft_s);
+        self.tpot.push(r.tpot_s);
+        self.queue.push(r.queue_delay_s);
+        self.cost.push(r.cost);
+        self.total_cost += r.cost;
+        if r.cold_start_s > 0.0 {
+            self.cold_paid += 1;
+        }
+        self.concurrency_sum += r.concurrency as f64;
+        self.batch_sum += r.batch as f64;
+        self.engine_wall_sum += r.engine_wall_s;
+        self.tokens += (r.n_in + r.n_out) as u64;
+        self.first_arrival = self.first_arrival.min(r.arrival_s);
+        self.last_finish = self.last_finish.max(r.finish_s);
+        self.hash = fnv1a(self.hash, canonical_line(r).as_bytes());
+        let pt = SamplePoint {
+            ttft: r.ttft_s,
+            tpot: r.tpot_s,
+            queue: r.queue_delay_s,
+            cost: r.cost,
+        };
+        if self.reservoir.len() < self.reservoir_cap {
+            self.reservoir.push(pt);
+        } else {
+            let j = self.reservoir_rng.below(self.count) as usize;
+            if j < self.reservoir_cap {
+                self.reservoir[j] = pt;
+            }
+        }
+    }
+
+    fn sample(&self, f: impl Fn(&SamplePoint) -> f64) -> Vec<f64> {
+        self.reservoir.iter().map(f).collect()
+    }
+}
+
+/// Default reservoir capacity of the streaming mode: percentiles are
+/// exact up to this many records and sampled beyond.
+pub const STREAM_RESERVOIR: usize = 4096;
+
+/// Aggregation over a run (see the module docs for the two modes).
+#[derive(Debug)]
 pub struct Aggregator {
+    /// Retained records (empty in streaming mode).
     pub records: Vec<RequestRecord>,
+    streaming: bool,
+    stream: StreamStats,
+}
+
+impl Default for Aggregator {
+    /// Full mode: every record retained, summaries exact.
+    fn default() -> Self {
+        Aggregator {
+            records: Vec::new(),
+            streaming: false,
+            stream: StreamStats::new(STREAM_RESERVOIR),
+        }
+    }
 }
 
 impl Aggregator {
+    /// Bounded-memory mode: records are folded into running summaries
+    /// and dropped. Per-record access (`.records`, [`Self::canonical`])
+    /// is unavailable; everything else answers from the stream state.
+    pub fn streaming() -> Aggregator {
+        Self::streaming_with_capacity(STREAM_RESERVOIR)
+    }
+
+    pub fn streaming_with_capacity(reservoir_cap: usize) -> Aggregator {
+        Aggregator {
+            records: Vec::new(),
+            streaming: true,
+            stream: StreamStats::new(reservoir_cap),
+        }
+    }
+
+    pub fn is_streaming(&self) -> bool {
+        self.streaming
+    }
+
     pub fn push(&mut self, r: RequestRecord) {
-        self.records.push(r);
+        self.stream.push(&r);
+        if !self.streaming {
+            self.records.push(r);
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.records.len()
+        self.stream.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.stream.count == 0
+    }
+
+    /// Strategy of the first pushed record (`"none"` before any push) —
+    /// the streaming-safe replacement for `records[0].strategy`.
+    pub fn strategy(&self) -> &'static str {
+        self.stream.strategy.unwrap_or("none")
     }
 
     fn field(&self, f: impl Fn(&RequestRecord) -> f64) -> Vec<f64> {
@@ -77,105 +325,110 @@ impl Aggregator {
     }
 
     pub fn cost_summary(&self) -> Summary {
-        summarize(&self.field(|r| r.cost))
+        if self.streaming {
+            self.stream.cost.summary(&self.stream.sample(|p| p.cost))
+        } else {
+            summarize(&self.field(|r| r.cost))
+        }
     }
 
     pub fn queue_delay_summary(&self) -> Summary {
-        summarize(&self.field(|r| r.queue_delay_s))
+        if self.streaming {
+            self.stream.queue.summary(&self.stream.sample(|p| p.queue))
+        } else {
+            summarize(&self.field(|r| r.queue_delay_s))
+        }
     }
 
     /// Mean number of in-flight requests observed at admission.
     pub fn mean_concurrency(&self) -> f64 {
-        if self.records.is_empty() {
+        if self.is_empty() {
             return 0.0;
         }
-        self.records.iter().map(|r| r.concurrency as f64).sum::<f64>()
-            / self.records.len() as f64
+        self.stream.concurrency_sum / self.stream.count as f64
     }
 
     /// Mean continuous-batching batch size observed at admission.
     pub fn mean_batch(&self) -> f64 {
-        if self.records.is_empty() {
+        if self.is_empty() {
             return 0.0;
         }
-        self.records.iter().map(|r| r.batch as f64).sum::<f64>() / self.records.len() as f64
+        self.stream.batch_sum / self.stream.count as f64
     }
 
     /// Requests that paid any cold start.
     pub fn cold_paid(&self) -> usize {
-        self.records.iter().filter(|r| r.cold_start_s > 0.0).count()
+        self.stream.cold_paid
     }
 
     /// Virtual-time span of the run: first arrival → last completion.
     pub fn makespan_s(&self) -> f64 {
-        let first = self.records.iter().map(|r| r.arrival_s).fold(f64::INFINITY, f64::min);
-        let last = self.records.iter().map(|r| r.finish_s).fold(0.0, f64::max);
-        (last - first).max(0.0)
+        (self.stream.last_finish - self.stream.first_arrival).max(0.0)
     }
 
-    /// Canonical serialization of the *virtual-time* outcome: every
-    /// field except `calc_time_s` / `engine_wall_s`, which are host
-    /// wall-clock measurements and legitimately vary across runs. Two
-    /// serves of the same seeded trace must produce byte-identical
-    /// canonical strings — the determinism regression tests diff this.
+    /// Canonical serialization of the *virtual-time* outcome (one
+    /// [`canonical_line`] per record). Two serves of the same seeded
+    /// trace must produce byte-identical canonical strings — the
+    /// determinism regression tests diff this. Requires full mode; at
+    /// streaming scale use [`Self::canonical_hash`] instead.
     pub fn canonical(&self) -> String {
+        assert!(
+            !self.streaming,
+            "canonical() needs retained records; streaming mode keeps only canonical_hash()"
+        );
         let mut out = String::new();
         for r in &self.records {
-            out.push_str(&format!(
-                "id={} strategy={} n_in={} n_out={} arrival={:?} queue={:?} start={:?} \
-                 finish={:?} ttft={:?} tpot={:?} cost={:?} cold={:?} main_cold={:?} \
-                 inst={} batch={} conc={}\n",
-                r.id,
-                r.strategy,
-                r.n_in,
-                r.n_out,
-                r.arrival_s,
-                r.queue_delay_s,
-                r.start_s,
-                r.finish_s,
-                r.ttft_s,
-                r.tpot_s,
-                r.cost,
-                r.cold_start_s,
-                r.main_cold_s,
-                r.instance,
-                r.batch,
-                r.concurrency,
-            ));
+            out.push_str(&canonical_line(r));
         }
         out
     }
 
+    /// Rolling FNV-1a 64 hash of the canonical serialization,
+    /// available in both modes and byte-stable across reruns of a
+    /// seeded trace: `canonical_hash() == fnv1a(OFFSET, canonical())`
+    /// whenever the full string exists. The determinism check that
+    /// scales to million-request traces.
+    pub fn canonical_hash(&self) -> u64 {
+        self.stream.hash
+    }
+
     pub fn ttft_summary(&self) -> Summary {
-        summarize(&self.field(|r| r.ttft_s))
+        if self.streaming {
+            self.stream.ttft.summary(&self.stream.sample(|p| p.ttft))
+        } else {
+            summarize(&self.field(|r| r.ttft_s))
+        }
     }
 
     pub fn tpot_summary(&self) -> Summary {
-        summarize(&self.field(|r| r.tpot_s))
+        if self.streaming {
+            self.stream.tpot.summary(&self.stream.sample(|p| p.tpot))
+        } else {
+            summarize(&self.field(|r| r.tpot_s))
+        }
     }
 
     pub fn total_cost(&self) -> f64 {
-        self.records.iter().map(|r| r.cost).sum()
+        self.stream.total_cost
     }
 
     /// Requests per second of real engine compute.
     pub fn engine_throughput(&self) -> f64 {
-        let wall: f64 = self.records.iter().map(|r| r.engine_wall_s).sum();
+        let wall = self.stream.engine_wall_sum;
         if wall <= 0.0 {
             0.0
         } else {
-            self.records.len() as f64 / wall
+            self.stream.count as f64 / wall
         }
     }
 
     /// Tokens (in+out) per second of real engine compute.
     pub fn token_throughput(&self) -> f64 {
-        let wall: f64 = self.records.iter().map(|r| r.engine_wall_s).sum();
-        let toks: usize = self.records.iter().map(|r| r.n_in + r.n_out).sum();
+        let wall = self.stream.engine_wall_sum;
         if wall <= 0.0 {
             0.0
         } else {
-            toks as f64 / wall
+            self.stream.tokens as f64 / wall
         }
     }
 }
@@ -312,6 +565,115 @@ mod tests {
         assert!(a.canonical().contains("queue="));
         assert!(a.canonical().contains("cold="));
         assert!(a.canonical().contains("batch="));
+    }
+
+    #[test]
+    fn streaming_matches_full_for_small_runs() {
+        // below the reservoir capacity the streaming percentiles are
+        // exact, so every summary must agree with the full mode
+        let mut full = Aggregator::default();
+        let mut stream = Aggregator::streaming();
+        for id in 0..32 {
+            full.push(rec(id, 3.0 * id as f64));
+            stream.push(rec(id, 3.0 * id as f64));
+        }
+        assert!(stream.is_streaming() && !full.is_streaming());
+        assert!(stream.records.is_empty());
+        assert_eq!(stream.len(), full.len());
+        assert_eq!(stream.strategy(), full.strategy());
+        assert_eq!(stream.cold_paid(), full.cold_paid());
+        assert!((stream.total_cost() - full.total_cost()).abs() < 1e-9);
+        assert!((stream.makespan_s() - full.makespan_s()).abs() < 1e-12);
+        assert!((stream.mean_batch() - full.mean_batch()).abs() < 1e-12);
+        for (s, f) in [
+            (stream.cost_summary(), full.cost_summary()),
+            (stream.ttft_summary(), full.ttft_summary()),
+            (stream.tpot_summary(), full.tpot_summary()),
+            (stream.queue_delay_summary(), full.queue_delay_summary()),
+        ] {
+            assert_eq!(s.n, f.n);
+            assert!((s.mean - f.mean).abs() < 1e-9);
+            assert!((s.std - f.std).abs() < 1e-9);
+            assert_eq!(s.min, f.min);
+            assert_eq!(s.max, f.max);
+            assert!((s.p50 - f.p50).abs() < 1e-9);
+            assert!((s.p99 - f.p99).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rolling_hash_matches_full_canonical() {
+        let mut full = Aggregator::default();
+        let mut stream = Aggregator::streaming();
+        for id in 0..10 {
+            full.push(rec(id, 1.5 * id as f64));
+            stream.push(rec(id, 1.5 * id as f64));
+        }
+        // the rolling hash is exactly FNV-1a of the canonical string,
+        // and identical whether or not records were retained
+        assert_eq!(full.canonical_hash(), fnv1a(FNV_OFFSET, full.canonical().as_bytes()));
+        assert_eq!(full.canonical_hash(), stream.canonical_hash());
+        // and it, too, ignores wall-clock fields
+        let mut c = Aggregator::streaming();
+        for id in 0..10 {
+            let mut r = rec(id, 1.5 * id as f64);
+            r.calc_time_s = 7.0;
+            r.engine_wall_s = 7.0;
+            c.push(r);
+        }
+        assert_eq!(c.canonical_hash(), stream.canonical_hash());
+        // any virtual-time difference changes it
+        let mut d = Aggregator::streaming();
+        for id in 0..10 {
+            let mut r = rec(id, 1.5 * id as f64);
+            r.finish_s += 1e-9;
+            d.push(r);
+        }
+        assert_ne!(d.canonical_hash(), stream.canonical_hash());
+    }
+
+    #[test]
+    fn empty_aggregators_stay_finite_where_defined() {
+        for a in [Aggregator::default(), Aggregator::streaming()] {
+            assert!(a.is_empty());
+            assert_eq!(a.strategy(), "none");
+            assert_eq!(a.total_cost(), 0.0);
+            assert_eq!(a.cold_paid(), 0);
+            assert_eq!(a.mean_concurrency(), 0.0);
+            assert_eq!(a.mean_batch(), 0.0);
+            assert_eq!(a.makespan_s(), 0.0);
+            assert_eq!(a.engine_throughput(), 0.0);
+            // summaries of nothing are NaN by convention — callers
+            // sanitize at the JSON boundary
+            assert!(a.cost_summary().mean.is_nan());
+            assert!(a.ttft_summary().p99.is_nan());
+        }
+    }
+
+    #[test]
+    fn reservoir_keeps_bounded_memory_and_sane_percentiles() {
+        let mut a = Aggregator::streaming_with_capacity(64);
+        for id in 0..10_000 {
+            a.push(rec(id, id as f64));
+        }
+        assert_eq!(a.len(), 10_000);
+        assert!(a.records.is_empty());
+        assert_eq!(a.stream.reservoir.len(), 64);
+        // mean/min/max/std are exact regardless of the reservoir
+        let s = a.cost_summary();
+        assert!((s.mean - 4999.5).abs() < 1e-6);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 9999.0);
+        // sampled percentiles stay ordered and in-range
+        assert!(s.p50 >= s.min && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    #[should_panic]
+    fn canonical_unavailable_in_streaming_mode() {
+        let mut a = Aggregator::streaming();
+        a.push(rec(0, 1.0));
+        let _ = a.canonical();
     }
 
     #[test]

@@ -48,7 +48,7 @@
 //! covered occupancy at a larger memory spec re-bills only the
 //! excess over what that sub-interval already billed.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::PlatformConfig;
 use crate::util::rng::Rng;
@@ -153,6 +153,22 @@ impl Instance {
         mem_mb: f64,
         gpu_mb: f64,
     ) -> Vec<(f64, f64, f64)> {
+        // Fast path — occupancy entirely past the last billed span
+        // (spans are sorted and disjoint, so past-the-last means past
+        // them all): the in-order common case. Bills the full spec and
+        // appends (or extends a touching same-spec tail) in O(1)
+        // instead of rebuilding the span set.
+        if end > start && self.billed.last().map_or(true, |l| l.end <= start) {
+            match self.billed.last_mut() {
+                Some(last)
+                    if start <= last.end && last.mem_mb == mem_mb && last.gpu_mb == gpu_mb =>
+                {
+                    last.end = last.end.max(end);
+                }
+                _ => self.billed.push(BilledSpan { start, end, mem_mb, gpu_mb }),
+            }
+            return vec![(mem_mb, gpu_mb, end - start)];
+        }
         let mut pieces = Vec::new();
         let mut spans = Vec::with_capacity(self.billed.len() + 3);
         let mut cursor = start;
@@ -216,6 +232,85 @@ impl Instance {
         }
         self.billed = merged;
         pieces
+    }
+}
+
+/// Order-preserving integer key for a non-negative virtual time: for
+/// finite `t >= 0.0`, `a <= b ⇔ tkey(a) <= tkey(b)`, so expiry times
+/// can live in an integer-keyed ordered set without float-Ord
+/// workarounds. Virtual times in the simulator are never negative.
+fn tkey(t: f64) -> u64 {
+    debug_assert!(t >= 0.0, "virtual times are non-negative, got {t}");
+    t.to_bits()
+}
+
+/// One function's instance pool, indexed for the scheduler hot paths.
+///
+/// `by_expiry` orders instances by `(tkey(warm_until), id)`, so "live
+/// at `t`" resolves as a range query from `(tkey(t), 0)` instead of a
+/// linear scan over every instance ever spawned — the difference
+/// between O(live) and O(history) per lookup on million-request
+/// traces. Lazy-eviction semantics are unchanged: the index is a view,
+/// instances leave it only through [`Platform::prune_expired_before`],
+/// and out-of-order callers see exactly the set `live_at` would grant
+/// them (the range picks `warm_until >= t`; a `spawned_at <= t` filter
+/// removes instances from the caller's future).
+#[derive(Debug)]
+struct FunctionPool {
+    /// Instances keyed by id. Ids ascend in spawn order, so iteration
+    /// and sorted id lists reproduce the old Vec's spawn order.
+    by_id: BTreeMap<u64, Instance>,
+    /// `(tkey(warm_until), id)` — kept in lockstep with every
+    /// `warm_until` write.
+    by_expiry: BTreeSet<(u64, u64)>,
+    /// Conservative lower bound on the earliest `BilledSpan::end` in
+    /// this pool: lets `prune_expired_before` skip its span-drop pass
+    /// (an O(instances) walk) when nothing can be dropped.
+    min_span_end: f64,
+}
+
+impl Default for FunctionPool {
+    fn default() -> Self {
+        FunctionPool {
+            by_id: BTreeMap::new(),
+            by_expiry: BTreeSet::new(),
+            min_span_end: f64::INFINITY,
+        }
+    }
+}
+
+impl FunctionPool {
+    fn spawn(&mut self, inst: Instance) {
+        self.by_expiry.insert((tkey(inst.warm_until), inst.id));
+        self.by_id.insert(inst.id, inst);
+    }
+
+    /// Ids of instances live at `at`, in spawn (= id) order — the
+    /// admission and draining-clamp order.
+    fn live_ids(&self, at: f64) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .by_expiry
+            .range((tkey(at), 0)..)
+            .map(|&(_, id)| id)
+            .filter(|id| self.by_id[id].spawned_at <= at)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    fn live_count(&self, at: f64) -> usize {
+        self.by_expiry
+            .range((tkey(at), 0)..)
+            .filter(|(_, id)| self.by_id[id].spawned_at <= at)
+            .count()
+    }
+
+    /// Re-key `id` in the expiry index after a `warm_until` write.
+    fn reindex(&mut self, id: u64, old_key: u64, new_key: u64) {
+        if new_key != old_key {
+            self.by_expiry.remove(&(old_key, id));
+            self.by_expiry.insert((new_key, id));
+        }
     }
 }
 
@@ -309,10 +404,15 @@ pub struct Platform {
     cpu_rate: f64,
     gpu_rate: f64,
     specs: BTreeMap<String, FunctionSpec>,
-    pool: BTreeMap<String, Vec<Instance>>,
+    pool: BTreeMap<String, FunctionPool>,
     /// Per-function instance cap (scale-out limit); absent ⇒ unlimited.
     limits: BTreeMap<String, usize>,
     next_instance: u64,
+    /// Instances currently retained (spawned, not yet pruned) across
+    /// all functions, and its lifetime high-water mark — the memory
+    /// footprint the throughput row reports.
+    retained: usize,
+    peak_retained: usize,
     pub billing: BillingMeter,
     rng: Rng,
     pub overhead_mode: InvokeOverhead,
@@ -331,6 +431,8 @@ impl Platform {
             pool: BTreeMap::new(),
             limits: BTreeMap::new(),
             next_instance: 0,
+            retained: 0,
+            peak_retained: 0,
             billing: BillingMeter::new(),
             rng: Rng::new(seed ^ 0x504c_4154), // "PLAT"
             overhead_mode: InvokeOverhead::Sampled,
@@ -394,22 +496,23 @@ impl Platform {
         let limit = self.instance_limit(name);
         let pool = self.pool.get_mut(name).unwrap();
 
-        // Lazy liveness: never prune on `at` (it can regress); the pool
-        // is in spawn order, so ids ascend with the index.
-        let live_idx: Vec<usize> = (0..pool.len()).filter(|&i| pool[i].live_at(at)).collect();
+        // Lazy liveness: never prune on `at` (it can regress); the
+        // expiry index answers "live at `at`" as a range query, in
+        // spawn (= id) order.
+        let live_ids = pool.live_ids(at);
         // Draining clamp: if a caller lowered the instance limit below
         // the live pool, only the `limit` oldest live instances admit
         // new work; the rest drain (finish, then expire by keep-alive).
-        let admissible = &live_idx[..live_idx.len().min(limit)];
+        let admissible = &live_ids[..live_ids.len().min(limit)];
 
         // Join-in-flight admission: prefer the instance already serving
         // the largest batch (maximises the billed-time union shared),
         // then the most recently used (LIFO warm pool), ties broken by
         // spawn order for determinism. Within an instance the lowest
         // free slot index wins.
-        let mut hit: Option<(usize, usize, usize, f64)> = None; // (idx, slot, occupied, mru)
+        let mut hit: Option<(u64, usize, usize, f64)> = None; // (id, slot, occupied, mru)
         for &i in admissible {
-            let inst = &pool[i];
+            let inst = &pool.by_id[&i];
             let Some(slot) = (0..inst.slots.len()).find(|&s| inst.slot_free_at(s) <= at) else {
                 continue;
             };
@@ -424,21 +527,23 @@ impl Platform {
             }
         }
 
-        let (idx, slot, queue_exit, cold_start_s) = match hit {
+        let (id, slot, queue_exit, cold_start_s) = match hit {
             // warm hit: a free slot on a live instance never pays a
             // cold start
-            Some((idx, slot, _, _)) => (idx, slot, at, 0.0),
+            Some((id, slot, _, _)) => (id, slot, at, 0.0),
             // scale-out: spawn a fresh (cold) instance under the cap.
             // Spare slots open only at `ready_at` — a joiner arriving
             // during the cold window queues until the container is up
             // and the weights are loaded, it does not time-travel onto
             // an instance that is not serving yet.
-            None if live_idx.len() < limit => {
+            None if live_ids.len() < limit => {
                 let id = self.next_instance;
                 self.next_instance += 1;
+                self.retained += 1;
+                self.peak_retained = self.peak_retained.max(self.retained);
                 let capacity = spec.batch_capacity.max(1);
                 let cold_start_s = self.cold.function(spec.footprint_mb).total();
-                pool.push(Instance {
+                pool.spawn(Instance {
                     id,
                     spawned_at: at,
                     ready_at: at + cold_start_s,
@@ -447,23 +552,24 @@ impl Platform {
                     billed: Vec::new(),
                     prewarm_idle_from: None,
                 });
-                (pool.len() - 1, 0, at, cold_start_s)
+                (id, 0, at, cold_start_s)
             }
             // saturated: queue on the earliest-free slot of an
             // admissible instance (warm by construction — it is busy
             // or warming right up to the queue exit)
             None => {
-                let mut best: Option<(usize, usize)> = None;
+                let mut best: Option<(u64, usize, f64)> = None; // (id, slot, free)
                 for &i in admissible {
-                    for s in 0..pool[i].slots.len() {
-                        let free = pool[i].slot_free_at(s);
-                        if best.map_or(true, |(bi, bs)| free < pool[bi].slot_free_at(bs)) {
-                            best = Some((i, s));
+                    let inst = &pool.by_id[&i];
+                    for s in 0..inst.slots.len() {
+                        let free = inst.slot_free_at(s);
+                        if best.map_or(true, |(_, _, bf)| free < bf) {
+                            best = Some((i, s, free));
                         }
                     }
                 }
-                let (i, s) = best.expect("saturated pool must have a live instance");
-                (i, s, pool[i].slot_free_at(s), 0.0)
+                let (i, s, free) = best.expect("saturated pool must have a live instance");
+                (i, s, free, 0.0)
             }
         };
 
@@ -477,7 +583,10 @@ impl Platform {
         let started_at = queue_exit + cold_start_s + invoke_overhead_s + transfer;
         let finished_at = started_at + work_s;
 
-        let inst = &mut pool[idx];
+        let inst = pool.by_id.get_mut(&id).expect("admitted instance is in the pool");
+        // new billed spans start no earlier than the pending prewarm
+        // window (settled next) or this occupancy's start
+        let span_low = inst.prewarm_idle_from.unwrap_or(queue_exit).min(queue_exit);
         // first use of pre-warmed capacity: the provisioning cold
         // start + idle window up to this admission settles as
         // PrewarmIdle, outside the request's own occupancy bill
@@ -491,7 +600,9 @@ impl Platform {
         );
         let batch = inst.occupied_at(queue_exit) + 1;
         inst.slots[slot] = finished_at;
+        let old_expiry = tkey(inst.warm_until);
         inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
+        let new_expiry = tkey(inst.warm_until);
         let instance = inst.id;
         // billed duration: active time incl. cold start (the paper's
         // Fig. 1: charged for the entire runtime of the function), but
@@ -506,6 +617,8 @@ impl Platform {
             queue_exit,
             finished_at,
         );
+        pool.reindex(id, old_expiry, new_expiry);
+        pool.min_span_end = pool.min_span_end.min(span_low);
 
         Ok(Invocation {
             queued_at: at,
@@ -536,8 +649,8 @@ impl Platform {
         let spec = self.specs.get(name).expect("function not deployed").clone();
         let pool = self.pool.get_mut(name).unwrap();
         let inst = pool
-            .iter_mut()
-            .find(|i| i.id == instance)
+            .by_id
+            .get_mut(&instance)
             .ok_or_else(|| anyhow::anyhow!("instance {instance} of {name} is not in the pool"))?;
         // Prefer the slot that freed most recently but is free by
         // `at` (slot reuse keeps a segment chain on one slot); if none
@@ -560,6 +673,7 @@ impl Platform {
         let queue_delay_s = queue_exit - at;
         let started_at = queue_exit;
         let finished_at = started_at + work_s;
+        let span_low = inst.prewarm_idle_from.unwrap_or(queue_exit).min(queue_exit);
         settle_prewarm_span(
             &mut self.billing,
             inst,
@@ -570,7 +684,9 @@ impl Platform {
         );
         let batch = inst.occupied_at(queue_exit) + 1;
         inst.slots[slot] = finished_at;
+        let old_expiry = tkey(inst.warm_until);
         inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
+        let new_expiry = tkey(inst.warm_until);
         charge_union(
             &mut self.billing,
             inst,
@@ -580,6 +696,8 @@ impl Platform {
             queue_exit,
             finished_at,
         );
+        pool.reindex(instance, old_expiry, new_expiry);
+        pool.min_span_end = pool.min_span_end.min(span_low);
 
         Ok(Invocation {
             queued_at: at,
@@ -643,13 +761,15 @@ impl Platform {
         let cold_start_s = self.cold.function(spec.footprint_mb).total();
         let capacity = spec.batch_capacity.max(1);
         let pool = self.pool.get_mut(name).unwrap();
-        let live = pool.iter().filter(|i| i.live_at(at)).count();
+        let live = pool.live_count(at);
         let room = limit.saturating_sub(live).min(n);
         for _ in 0..room {
             let id = self.next_instance;
             self.next_instance += 1;
+            self.retained += 1;
+            self.peak_retained = self.peak_retained.max(self.retained);
             let ready_at = at + cold_start_s;
-            pool.push(Instance {
+            pool.spawn(Instance {
                 id,
                 spawned_at: at,
                 ready_at,
@@ -678,23 +798,27 @@ impl Platform {
         let Some(pool) = self.pool.get_mut(name) else {
             return 0;
         };
-        let mut live: Vec<(f64, u64, usize)> = pool
+        let mut live: Vec<(f64, u64)> = pool
+            .live_ids(at)
             .iter()
-            .enumerate()
-            .filter(|(_, i)| i.live_at(at))
-            .map(|(idx, i)| (i.last_activity(), i.id, idx))
+            .map(|id| {
+                let i = &pool.by_id[id];
+                (i.last_activity(), i.id)
+            })
             .collect();
         // hottest first: hold the instances most likely to serve again
         live.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         let target_until = at + self.keepalive_s;
         let mut held = 0;
-        for &(_, _, idx) in live.iter().take(n) {
-            let inst = &mut pool[idx];
+        for &(_, id) in live.iter().take(n) {
+            let inst = pool.by_id.get_mut(&id).expect("held instance is in the pool");
             if inst.warm_until < target_until {
                 if inst.prewarm_idle_from.is_none() {
                     inst.prewarm_idle_from = Some(inst.warm_until);
                 }
+                let old_expiry = tkey(inst.warm_until);
                 inst.warm_until = target_until;
+                pool.reindex(id, old_expiry, tkey(target_until));
             }
             held += 1;
         }
@@ -719,20 +843,29 @@ impl Platform {
         let Some(pool) = self.pool.get_mut(name) else {
             return 0;
         };
-        let mut idle: Vec<(f64, u64, usize)> = pool
+        let mut idle: Vec<(f64, u64)> = pool
+            .live_ids(at)
             .iter()
-            .enumerate()
-            .filter(|(_, i)| i.live_at(at) && i.occupied_at(at) == 0)
-            .map(|(idx, i)| (i.last_activity(), i.id, idx))
+            .map(|id| &pool.by_id[id])
+            .filter(|i| i.occupied_at(at) == 0)
+            .map(|i| (i.last_activity(), i.id))
             .collect();
         idle.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
         let mut retired = 0;
-        for &(_, _, idx) in idle.iter().take(n) {
-            let inst = &mut pool[idx];
+        let mut span_low = pool.min_span_end;
+        for &(_, id) in idle.iter().take(n) {
+            let inst = pool.by_id.get_mut(&id).expect("retired instance is in the pool");
+            if let Some(from) = inst.prewarm_idle_from {
+                span_low = span_low.min(from);
+            }
             settle_prewarm_span(&mut self.billing, inst, &spec, self.cpu_rate, self.gpu_rate, at);
+            let old_expiry = tkey(inst.warm_until);
             inst.warm_until = inst.warm_until.min(at);
+            let new_expiry = tkey(inst.warm_until);
+            pool.reindex(id, old_expiry, new_expiry);
             retired += 1;
         }
+        pool.min_span_end = span_low;
         retired
     }
 
@@ -747,7 +880,11 @@ impl Platform {
             let Some(spec) = self.specs.get(name) else {
                 continue;
             };
-            for inst in pool.iter_mut() {
+            let mut span_low = pool.min_span_end;
+            for inst in pool.by_id.values_mut() {
+                if let Some(from) = inst.prewarm_idle_from {
+                    span_low = span_low.min(from);
+                }
                 let until = inst.warm_until;
                 settle_prewarm_span(
                     &mut self.billing,
@@ -758,6 +895,7 @@ impl Platform {
                     until,
                 );
             }
+            pool.min_span_end = span_low;
         }
     }
 
@@ -777,7 +915,34 @@ impl Platform {
     /// is filtered, never pruned, so event-driven callers at any
     /// timestamp see consistent state.
     pub fn warm_count_at(&self, name: &str, at: f64) -> usize {
-        self.pool.get(name).map_or(0, |p| p.iter().filter(|i| i.live_at(at)).count())
+        self.pool.get(name).map_or(0, |p| p.live_count(at))
+    }
+
+    /// Lifetime count of instances ever spawned (cold scale-outs plus
+    /// pre-warms, across all functions).
+    pub fn instances_spawned(&self) -> u64 {
+        self.next_instance
+    }
+
+    /// Instances currently retained in the pools (spawned, not yet
+    /// pruned).
+    pub fn retained_instances(&self) -> usize {
+        self.retained
+    }
+
+    /// High-water mark of [`Self::retained_instances`] — with periodic
+    /// pruning this bounds the simulator's instance memory footprint.
+    pub fn peak_retained_instances(&self) -> usize {
+        self.peak_retained
+    }
+
+    /// Billed spans currently retained across all instances — the
+    /// other memory dimension pruning keeps bounded.
+    pub fn billed_spans(&self) -> usize {
+        self.pool
+            .values()
+            .map(|p| p.by_id.values().map(|i| i.billed.len()).sum::<usize>())
+            .sum()
     }
 
     /// Drop instances that can never serve again. `low_water` is the
@@ -789,29 +954,47 @@ impl Platform {
     /// complement to lazy eviction — the pool itself never prunes on
     /// a timestamp that can regress.
     pub fn prune_expired_before(&mut self, low_water: f64) {
+        let lw = tkey(low_water);
         for (name, pool) in self.pool.iter_mut() {
-            // a never-used pre-warmed instance settles its idle bill
-            // (spawn → expiry) before it becomes unreachable
-            if let Some(spec) = self.specs.get(name) {
-                for inst in pool.iter_mut() {
-                    if inst.warm_until < low_water {
-                        let until = inst.warm_until;
-                        settle_prewarm_span(
-                            &mut self.billing,
-                            inst,
-                            spec,
-                            self.cpu_rate,
-                            self.gpu_rate,
-                            until,
-                        );
-                    }
+            let spec = self.specs.get(name);
+            // expired instances sit at the front of the expiry index:
+            // pop until the first survivor instead of scanning the
+            // whole pool. A never-used pre-warmed instance settles its
+            // idle bill (spawn → expiry) before it becomes unreachable.
+            while let Some(&(key, id)) = pool.by_expiry.iter().next() {
+                if key >= lw {
+                    break;
+                }
+                pool.by_expiry.remove(&(key, id));
+                let mut inst = pool.by_id.remove(&id).expect("index and pool in lockstep");
+                self.retained -= 1;
+                if let Some(spec) = spec {
+                    let until = inst.warm_until;
+                    settle_prewarm_span(
+                        &mut self.billing,
+                        &mut inst,
+                        spec,
+                        self.cpu_rate,
+                        self.gpu_rate,
+                        until,
+                    );
                 }
             }
-            pool.retain(|i| i.warm_until >= low_water);
             // billed spans that end before `low_water` can never
-            // overlap a future occupancy either — drop them too
-            for inst in pool.iter_mut() {
-                inst.billed.retain(|s| s.end > low_water);
+            // overlap a future occupancy either — drop them too.
+            // `min_span_end` gates the walk: skip it when no retained
+            // span can possibly end before the low-water mark.
+            if pool.min_span_end < low_water {
+                let mut new_min = f64::INFINITY;
+                for inst in pool.by_id.values_mut() {
+                    inst.billed.retain(|s| s.end > low_water);
+                    // sorted disjoint spans have ascending ends: the
+                    // first span carries the pool-wide minimum
+                    if let Some(first) = inst.billed.first() {
+                        new_min = new_min.min(first.end);
+                    }
+                }
+                pool.min_span_end = new_min;
             }
         }
     }
@@ -1316,5 +1499,80 @@ mod tests {
         assert_eq!(p.warm_count_at("main", 1000.0), 0);
         let idle = p.billing.component_total(CostComponent::PrewarmIdle);
         assert!((idle - (4.0 + p.keepalive_s) * 2500.0).abs() < 1e-6, "idle={idle}");
+    }
+
+    #[test]
+    fn expiry_index_matches_a_linear_scan() {
+        let mut p = platform();
+        p.set_instance_limit("main", 4);
+        let times = [0.0, 3.0, 1.0, 50.0, 120.0, 60.0, 200.0];
+        for (k, &t) in times.iter().enumerate() {
+            if k % 3 == 0 {
+                p.prewarm_at("main", t, 1);
+            }
+            let _ = p.invoke_at("main", t, 0.5, 0.0).unwrap();
+            if k % 2 == 0 {
+                p.keep_warm_at("main", t, 1);
+            }
+            if k % 4 == 3 {
+                p.retire_idle_at("main", t, 1);
+            }
+            let pool = &p.pool["main"];
+            assert_eq!(pool.by_expiry.len(), pool.by_id.len(), "index out of lockstep");
+            for (&id, inst) in &pool.by_id {
+                assert!(
+                    pool.by_expiry.contains(&(tkey(inst.warm_until), id)),
+                    "stale expiry key for instance {id}"
+                );
+            }
+            for probe in [0.0, 1.0, 10.0, 55.0, 130.0, 500.0] {
+                let scan = pool.by_id.values().filter(|i| i.live_at(probe)).count();
+                assert_eq!(p.warm_count_at("main", probe), scan, "probe={probe}");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_keeps_spans_straddling_the_low_water_mark() {
+        let mut p = batched_platform(2);
+        let a = p.invoke_at("f", 0.0, 50.0, 0.0).unwrap();
+        let lw = a.finished_at - 10.0;
+        p.prune_expired_before(lw);
+        // the span [0, a.finished_at] straddles `lw` and must survive:
+        // a joiner inside it is covered occupancy and re-bills nothing
+        let mark = p.billing.mark();
+        let b = p.invoke_at("f", lw, 1.0, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        assert!(b.finished_at < a.finished_at, "joiner must sit inside a's occupancy");
+        assert_eq!(p.billing.total_since(mark), 0.0, "straddling span was dropped");
+    }
+
+    #[test]
+    fn pruning_bounds_retained_instances_and_spans() {
+        let mut p = platform();
+        let mut t = 0.0;
+        for _ in 0..100 {
+            let inv = p.invoke_at("main", t, 0.1, 0.0).unwrap();
+            // past the keep-alive: every request cold-starts a fresh
+            // instance and the previous one becomes unreachable
+            t = inv.finished_at + p.keepalive_s + 1.0;
+            p.prune_expired_before(t);
+        }
+        assert_eq!(p.instances_spawned(), 100);
+        assert_eq!(p.retained_instances(), 0, "expired instances must be pruned");
+        assert!(p.peak_retained_instances() <= 2, "peak={}", p.peak_retained_instances());
+        assert_eq!(p.billed_spans(), 0, "spans of pruned instances must go with them");
+
+        // same-instance traffic: spans are dropped as the low-water
+        // mark passes them, so the set stays O(1), not O(requests)
+        let mut p = batched_platform(1);
+        let mut t = 0.0;
+        for _ in 0..200 {
+            let inv = p.invoke_at("f", t, 0.1, 0.0).unwrap();
+            t = inv.finished_at + 0.05; // gap < keep-alive: stays warm
+            p.prune_expired_before(t);
+        }
+        assert_eq!(p.retained_instances(), 1, "one warm instance serves the whole run");
+        assert!(p.billed_spans() <= 2, "spans={}", p.billed_spans());
     }
 }

@@ -106,6 +106,16 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Peak resident set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`), the bounded-memory proxy the serving
+/// throughput row records. Returns `None` off Linux or if the field
+/// is unavailable — callers should degrade gracefully.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +134,13 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.50 µs");
         assert_eq!(fmt_ns(2.5e6), "2.50 ms");
         assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_is_positive_on_linux() {
+        let kb = peak_rss_kb().expect("VmHWM must exist on Linux");
+        assert!(kb > 0);
     }
 
     #[test]

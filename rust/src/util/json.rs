@@ -262,7 +262,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting them
+                    // verbatim would make the document unparseable
+                    // (empty-aggregator summaries reach this path)
+                    write!(f, "null")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
                     write!(f, "{x}")
@@ -339,6 +344,18 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // regression: NaN/Inf formatted as literal `NaN`/`inf`, which
+        // no JSON parser (including ours) accepts
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let doc = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)]);
+        let re = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(re, Json::Arr(vec![Json::Num(1.0), Json::Null]));
     }
 
     #[test]

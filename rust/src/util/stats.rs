@@ -46,6 +46,11 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     let n = sorted.len();
+    if n == 0 {
+        // mirror `percentile`: an empty sample has no percentiles —
+        // `(n - 1)` below would underflow usize
+        return f64::NAN;
+    }
     if n == 1 {
         return sorted[0];
     }
@@ -159,6 +164,18 @@ mod tests {
     #[test]
     fn percentile_single_value() {
         assert_eq!(percentile(&[3.0], 99.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan_not_panic() {
+        // regression: `(n - 1) as f64` underflowed usize on an empty
+        // slice (debug panic / release garbage)
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+        assert!(percentile(&[], 99.0).is_nan());
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan() && s.p50.is_nan() && s.p99.is_nan());
+        assert!(s.min.is_nan() && s.max.is_nan());
     }
 
     #[test]

@@ -570,6 +570,232 @@ fn prop_batched_serve_is_deterministic_and_respects_capacity() {
 }
 
 #[test]
+fn prop_prune_is_invisible_to_ledger_and_live_views() {
+    // Twin-run identity: interleaving `prune_expired_before` at the
+    // serve loop's low-water marks must be unobservable to any caller
+    // whose timestamps stay at or beyond the mark — identical
+    // invocation outcomes (ids, timing, cold starts, batch sizes),
+    // identical warm counts at swept probes, and the same settled
+    // ledger split. Billed spans straddling the mark and un-settled
+    // PrewarmIdle capacity must survive; only memory may shrink.
+    Prop::new("prune: twin-run identity under interleaved prunes").with_cases(30).check(
+        |rng, case| {
+            use remoe::serverless::{CostComponent, FunctionSpec, Platform};
+            let spec = FunctionSpec {
+                name: "f".into(),
+                mem_mb: rng.range_f64(100.0, 2000.0),
+                gpu_mb: if rng.bool(0.3) { 200.0 } else { 0.0 },
+                footprint_mb: rng.range_f64(0.0, 1000.0),
+                batch_capacity: rng.range_u(1, 3),
+                component: CostComponent::MainCpu,
+            };
+            let limit = rng.range_u(1, 4);
+            let keepalive = rng.range_f64(1.0, 8.0);
+            let seed = case as u64 ^ 0x9121;
+            let mut pruned = Platform::new(&PlatformConfig::default(), seed);
+            let mut plain = Platform::new(&PlatformConfig::default(), seed);
+            for p in [&mut pruned, &mut plain] {
+                p.keepalive_s = keepalive;
+                p.deploy(spec.clone());
+                p.set_instance_limit("f", limit);
+            }
+
+            let mut t = 0.0f64;
+            let mut attributed = (0.0, 0.0);
+            let n = small_size(rng, 2, 40);
+            for _ in 0..n {
+                // gaps regularly exceed the keep-alive so prunes
+                // actually evict (expired pools) *and* regularly fall
+                // inside it so straddling spans are exercised
+                t += rng.range_f64(0.0, 2.5 * keepalive);
+                pruned.prune_expired_before(t);
+                match rng.below(5) {
+                    0 => {
+                        let k = rng.range_u(1, 3);
+                        assert_eq!(pruned.prewarm_at("f", t, k), plain.prewarm_at("f", t, k));
+                    }
+                    1 => {
+                        let k = rng.range_u(1, 3);
+                        assert_eq!(
+                            pruned.retire_idle_at("f", t, k),
+                            plain.retire_idle_at("f", t, k)
+                        );
+                    }
+                    2 => {
+                        let k = rng.range_u(1, 3);
+                        assert_eq!(pruned.keep_warm_at("f", t, k), plain.keep_warm_at("f", t, k));
+                    }
+                    _ => {
+                        let work = rng.range_f64(0.01, 3.0);
+                        let ma = pruned.billing.mark();
+                        let mb = plain.billing.mark();
+                        let a = pruned.invoke_at("f", t, work, 0.0).unwrap();
+                        let b = plain.invoke_at("f", t, work, 0.0).unwrap();
+                        assert_eq!(a.instance, b.instance, "admission diverged after prune");
+                        assert_eq!(a.started_at, b.started_at);
+                        assert_eq!(a.finished_at, b.finished_at);
+                        assert_eq!(a.cold_start_s, b.cold_start_s);
+                        assert_eq!(a.queue_delay_s, b.queue_delay_s);
+                        assert_eq!(a.batch, b.batch);
+                        attributed.0 += pruned.billing.total_since(ma)
+                            - pruned.billing.component_total_since(ma, CostComponent::PrewarmIdle);
+                        attributed.1 += plain.billing.total_since(mb)
+                            - plain.billing.component_total_since(mb, CostComponent::PrewarmIdle);
+                    }
+                }
+                // live views agree at the mark and beyond it
+                for probe in [t, t + 0.5 * keepalive, t + 3.0 * keepalive] {
+                    assert_eq!(
+                        pruned.warm_count_at("f", probe),
+                        plain.warm_count_at("f", probe),
+                        "warm count diverged at t={probe}"
+                    );
+                }
+            }
+            assert!(
+                (attributed.0 - attributed.1).abs() <= 1e-9 * attributed.1.abs().max(1.0),
+                "request attribution diverged: {} vs {}",
+                attributed.0,
+                attributed.1
+            );
+            // pruning only sheds memory, never spawns or leaks
+            assert_eq!(pruned.instances_spawned(), plain.instances_spawned());
+            assert!(pruned.retained_instances() <= plain.retained_instances());
+            assert!(pruned.billed_spans() <= plain.billed_spans());
+            // settled ledgers split identically (fp-tolerant: pruning
+            // settles PrewarmIdle earlier, so summation order differs)
+            pruned.settle_prewarm_idle();
+            plain.settle_prewarm_idle();
+            let (ta, tb) = (pruned.billing.total(), plain.billing.total());
+            assert!(
+                (ta - tb).abs() <= 1e-9 * tb.abs().max(1.0),
+                "ledger totals diverged: pruned {ta} vs plain {tb}"
+            );
+            let pa = pruned.billing.component_total(CostComponent::PrewarmIdle);
+            let pb = plain.billing.component_total(CostComponent::PrewarmIdle);
+            assert!(
+                (pa - pb).abs() <= 1e-9 * pb.abs().max(1.0),
+                "prewarm components diverged: pruned {pa} vs plain {pb}"
+            );
+        },
+    );
+}
+
+#[test]
+fn prop_streaming_summaries_match_full_and_hash_is_rerun_stable() {
+    // The streaming aggregator must be a faithful bounded-memory view
+    // of the full one: identical counts/totals, fp-equivalent summary
+    // statistics (Welford vs two-pass), exact percentiles while the
+    // reservoir holds the whole stream, and a rolling canonical hash
+    // that is byte-stable across reruns of the same seeded stream.
+    Prop::new("streaming ≡ full aggregation + stable hash").with_cases(30).check(|rng, case| {
+        use remoe::metrics::{Aggregator, RequestRecord};
+        let n = small_size(rng, 1, 250);
+        let seed = case as u64 ^ 0xA66E;
+        let gen = |seed: u64, n: usize| -> Vec<RequestRecord> {
+            let mut r = Rng::new(seed);
+            (0..n)
+                .map(|id| {
+                    let arrival = id as f64 * 0.3 + r.f64();
+                    let queue = if r.bool(0.5) { r.range_f64(0.0, 2.0) } else { 0.0 };
+                    let start = arrival + queue;
+                    let n_out = 1 + r.below(64) as usize;
+                    let decode = n_out as f64 * r.range_f64(0.005, 0.05);
+                    let cold = if r.bool(0.3) { r.range_f64(0.5, 4.0) } else { 0.0 };
+                    let prefill = r.range_f64(0.01, 1.0);
+                    RequestRecord {
+                        id,
+                        strategy: "Prop",
+                        n_in: 1 + r.below(256) as usize,
+                        n_out,
+                        ttft_s: queue + cold + prefill,
+                        tpot_s: decode / n_out as f64,
+                        cost: r.range_f64(0.1, 50.0),
+                        cold_start_s: cold,
+                        calc_time_s: r.f64() * 1e-3,
+                        engine_wall_s: r.f64() * 1e-2,
+                        arrival_s: arrival,
+                        queue_delay_s: queue,
+                        start_s: start,
+                        finish_s: start + cold + prefill + decode,
+                        main_cold_s: cold,
+                        instance: r.below(8),
+                        batch: 1 + r.below(4) as usize,
+                        concurrency: 1 + r.below(6) as usize,
+                    }
+                })
+                .collect()
+        };
+
+        let records = gen(seed, n);
+        let mut full = Aggregator::default();
+        let mut stream = Aggregator::streaming();
+        for r in &records {
+            full.push(r.clone());
+            stream.push(r.clone());
+        }
+        assert_eq!(full.len(), n);
+        assert_eq!(stream.len(), n);
+        assert!(stream.records.is_empty());
+        assert_eq!(full.strategy(), stream.strategy());
+        assert_eq!(full.total_cost(), stream.total_cost());
+        assert_eq!(full.cold_paid(), stream.cold_paid());
+        assert_eq!(full.makespan_s(), stream.makespan_s());
+        assert_eq!(full.mean_batch(), stream.mean_batch());
+        assert_eq!(full.mean_concurrency(), stream.mean_concurrency());
+
+        // summary statistics: Welford vs two-pass agree to fp noise;
+        // n ≤ the default reservoir capacity, so the percentile sample
+        // is the whole stream and percentiles are exact
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs().max(1e-9);
+        for (f, s) in [
+            (full.cost_summary(), stream.cost_summary()),
+            (full.ttft_summary(), stream.ttft_summary()),
+            (full.tpot_summary(), stream.tpot_summary()),
+            (full.queue_delay_summary(), stream.queue_delay_summary()),
+        ] {
+            assert_eq!(f.n, s.n);
+            assert!(close(f.mean, s.mean), "mean {} vs {}", f.mean, s.mean);
+            assert!((f.std - s.std).abs() <= 1e-6 * f.std.abs().max(1e-6));
+            assert_eq!(f.min, s.min);
+            assert_eq!(f.max, s.max);
+            assert_eq!(f.p50, s.p50);
+            assert_eq!(f.p90, s.p90);
+            assert_eq!(f.p99, s.p99);
+        }
+
+        // the rolling hash equals the full mode's and is byte-stable
+        // across an independent rerun of the same seeded stream
+        assert_eq!(full.canonical_hash(), stream.canonical_hash());
+        let mut rerun = Aggregator::streaming();
+        for r in gen(seed, n) {
+            rerun.push(r);
+        }
+        assert_eq!(rerun.canonical_hash(), stream.canonical_hash(), "hash not rerun-stable");
+        // and it is sensitive: any virtual-time perturbation changes it
+        let mut perturbed = Aggregator::streaming();
+        for (i, mut r) in gen(seed, n).into_iter().enumerate() {
+            if i == n / 2 {
+                r.finish_s += 1e-9;
+            }
+            perturbed.push(r);
+        }
+        assert_ne!(perturbed.canonical_hash(), stream.canonical_hash());
+
+        // a small reservoir stays bounded and keeps ordered, in-range
+        // percentile estimates
+        let mut tiny = Aggregator::streaming_with_capacity(16);
+        for r in gen(seed, n) {
+            tiny.push(r);
+        }
+        let q = tiny.cost_summary();
+        assert_eq!(q.n, n);
+        assert!(q.p50 <= q.p90 + 1e-12 && q.p90 <= q.p99 + 1e-12);
+        assert!(q.p50 >= q.min - 1e-12 && q.p99 <= q.max + 1e-12);
+    });
+}
+
+#[test]
 fn prop_deployment_plan_from_planner_always_validates() {
     Prop::new("planner plans validate + respect catalogs").with_cases(12).check(|rng, _| {
         use remoe::config::SystemConfig;
