@@ -73,8 +73,12 @@ fn main() -> anyhow::Result<()> {
         };
         let mut platform = Platform::new(&planner.platform, opts.seed);
         let agg = {
-            let mut policy =
-                RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+            let mut policy = RemoePolicy {
+                engine: &mut engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+            };
             serve_on_platform(&mut policy, &trace, &mut platform, &opts)?
         };
         let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);

@@ -1,0 +1,167 @@
+//! History-based admission for the main-model function: an online
+//! estimator of the P95 *realized* memory requirement, replacing
+//! MMP's static worst-case gate once enough observations accumulate.
+//!
+//! MMP certifies SLO feasibility against the Theorem-1 worst case,
+//! which also sizes the main-model spec against loads that almost
+//! never materialize — the realized staging + local-expert footprint
+//! of a served request is routinely far below the certified
+//! requirement. [`MemEstimator`] folds each served request's realized
+//! requirement into a bounded reservoir (the same Algorithm-R /
+//! percentile machinery the metrics layer uses) and, once `min_obs`
+//! observations are in, gates admission on the history's P95 instead:
+//! clamped below by the request's structural floor (weights + staging
+//! that physically must fit) and above by the static worst case, so
+//! the estimator can only ever *shrink* the gate, never loosen the
+//! certified ceiling.
+
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Online P95 estimator over realized per-request memory (MB).
+#[derive(Debug, Clone)]
+pub struct MemEstimator {
+    /// Observations required before the history overrides the static
+    /// worst case.
+    min_obs: usize,
+    /// Total observations folded in (reservoir holds a uniform sample).
+    n: u64,
+    cap: usize,
+    reservoir: Vec<f64>,
+    rng: Rng,
+}
+
+/// Default warm-up before the history gate activates.
+pub const DEFAULT_MIN_OBS: usize = 16;
+
+impl MemEstimator {
+    pub fn new(min_obs: usize) -> Self {
+        Self::with_capacity(min_obs, 1024)
+    }
+
+    /// `cap` bounds the reservoir: percentiles are exact up to `cap`
+    /// observations and an unbiased deterministic sample beyond.
+    pub fn with_capacity(min_obs: usize, cap: usize) -> Self {
+        MemEstimator {
+            min_obs: min_obs.max(1),
+            n: 0,
+            cap: cap.max(1),
+            reservoir: Vec::new(),
+            rng: Rng::new(0x9E5_71A7),
+        }
+    }
+
+    /// Fold one served request's realized memory requirement in.
+    pub fn observe(&mut self, mem_mb: f64) {
+        debug_assert!(mem_mb.is_finite() && mem_mb >= 0.0);
+        self.n += 1;
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(mem_mb);
+        } else {
+            let j = self.rng.below(self.n) as usize;
+            if j < self.cap {
+                self.reservoir[j] = mem_mb;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Whether enough history accumulated for the P95 gate.
+    pub fn ready(&self) -> bool {
+        self.n as usize >= self.min_obs
+    }
+
+    /// P95 of the observed requirements; `None` until [`Self::ready`].
+    pub fn p95_mb(&self) -> Option<f64> {
+        if !self.ready() {
+            return None;
+        }
+        Some(percentile(&self.reservoir, 95.0))
+    }
+
+    /// The admission gate: the history's P95 clamped to
+    /// `[floor_mb, worst_case_mb]`, or the static worst case while the
+    /// history is still warming up. `floor_mb` is the request's
+    /// structural minimum (weights + staging that must fit
+    /// regardless); `worst_case_mb` is MMP's certified requirement.
+    pub fn required_mb(&self, worst_case_mb: f64, floor_mb: f64) -> f64 {
+        match self.p95_mb() {
+            Some(p95) => p95.max(floor_mb).min(worst_case_mb),
+            None => worst_case_mb,
+        }
+    }
+}
+
+impl Default for MemEstimator {
+    fn default() -> Self {
+        MemEstimator::new(DEFAULT_MIN_OBS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn falls_back_to_worst_case_until_warm() {
+        let mut e = MemEstimator::new(4);
+        assert!(e.is_empty());
+        for _ in 0..3 {
+            e.observe(100.0);
+            assert!(!e.ready());
+            assert_eq!(e.p95_mb(), None);
+            assert_eq!(e.required_mb(5000.0, 50.0), 5000.0);
+        }
+        e.observe(100.0);
+        assert!(e.ready());
+        assert_eq!(e.len(), 4);
+        // constant history: P95 == the observed value, inside the clamp
+        assert_eq!(e.required_mb(5000.0, 50.0), 100.0);
+    }
+
+    #[test]
+    fn gate_clamps_between_floor_and_worst_case() {
+        let mut e = MemEstimator::new(2);
+        e.observe(10.0);
+        e.observe(10.0);
+        // history below the structural floor: floor wins
+        assert_eq!(e.required_mb(5000.0, 300.0), 300.0);
+        let mut f = MemEstimator::new(2);
+        f.observe(9000.0);
+        f.observe(9000.0);
+        // history above the certified worst case: ceiling wins
+        assert_eq!(f.required_mb(5000.0, 300.0), 5000.0);
+    }
+
+    #[test]
+    fn p95_tracks_the_distribution_tail() {
+        let mut e = MemEstimator::new(10);
+        for i in 0..100 {
+            e.observe(100.0 + i as f64); // 100..199
+        }
+        let p95 = e.p95_mb().unwrap();
+        assert!((190.0..=199.0).contains(&p95), "p95 {p95}");
+        // well below a 10x worst case, above the floor
+        let gated = e.required_mb(2000.0, 50.0);
+        assert_eq!(gated, p95);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let mut e = MemEstimator::with_capacity(1, 32);
+        for i in 0..10_000 {
+            e.observe(i as f64);
+        }
+        assert_eq!(e.len(), 10_000);
+        assert!(e.reservoir.len() <= 32);
+        let p95 = e.p95_mb().unwrap();
+        assert!((0.0..=9999.0).contains(&p95));
+    }
+}

@@ -10,6 +10,7 @@ use crate::config::{CostDims, PlatformConfig, SlaConfig};
 use crate::serverless::{ColdStartModel, NetworkModel, PerfModel};
 
 use super::bounds::corollary1_bound;
+use super::estimator::MemEstimator;
 
 /// MMP output: the chosen remote ratio and main-model spec.
 #[derive(Debug, Clone)]
@@ -145,6 +146,24 @@ impl<'a> Mmp<'a> {
     /// The Alg.-2 body at one fixed ratio: memory sizing + worst-case
     /// SLO check. Returns the decision plus whether it is feasible.
     pub fn decision_for(&self, b: f64, n_in: usize, n_out: usize) -> (MmpDecision, bool) {
+        self.decision_with_history(b, n_in, n_out, None)
+    }
+
+    /// [`Mmp::decision_for`] with history-based admission: when the
+    /// estimator has accumulated enough served-request observations,
+    /// the memory gate becomes the history's P95 instead of the static
+    /// worst case — clamped below by the structural floor (local
+    /// expert weights + token staging, which must fit regardless of
+    /// history) and above by the certified worst-case requirement.
+    /// With `None` (or a cold estimator) this is byte-identical to the
+    /// static gate.
+    pub fn decision_with_history(
+        &self,
+        b: f64,
+        n_in: usize,
+        n_out: usize,
+        history: Option<&MemEstimator>,
+    ) -> (MmpDecision, bool) {
         let k = self.dims.experts;
         let m_min = (n_in + n_out) as f64 * self.dims.token_bytes / 1e6;
         // M_cal: enough main memory that local experts run no slower
@@ -157,7 +176,11 @@ impl<'a> Mmp<'a> {
         let m_remote = (b * k as f64).floor() as usize;
         let m_local = k - m_remote;
         let m_e = m_local as f64 * self.dims.layers as f64 * self.dims.expert_mb;
-        let required = (m_min + m_e).max(m_cal);
+        let worst = (m_min + m_e).max(m_cal);
+        let required = match history {
+            Some(est) => est.required_mb(worst, m_min + m_e),
+            None => worst,
+        };
         let main_mb = self.dims.main_specs.round_up(required);
         let (ttft, tpot) = self.worst_case_n(b, main_mb, n_in, n_out);
         let feasible = ttft <= self.sla.ttft_s && tpot <= self.sla.tpot_s;
@@ -277,6 +300,34 @@ mod tests {
             assert!(d.worst_ttft_s <= sla.ttft_s + 1e-9, "{:?}", d);
             assert!(d.worst_tpot_s <= sla.tpot_s + 1e-9, "{:?}", d);
         }
+    }
+
+    #[test]
+    fn history_gate_shrinks_requirement_but_keeps_the_structural_floor() {
+        let (dims, platform, sla) = setup();
+        let mmp = Mmp::new(&dims, &platform, &sla, 0.05);
+        let (d_static, _) = mmp.decision_for(0.5, 128, 48);
+        // a cold estimator is byte-identical to the static gate
+        let mut est = MemEstimator::new(2);
+        let (d_cold, _) = mmp.decision_with_history(0.5, 128, 48, Some(&est));
+        assert_eq!(d_cold.required_mb, d_static.required_mb);
+        assert_eq!(d_cold.main_mem_mb, d_static.main_mem_mb);
+        // a history of tiny realized requirements shrinks the gate to
+        // exactly the structural floor: staging + local expert weights
+        est.observe(1.0);
+        est.observe(1.0);
+        let (d_hist, _) = mmp.decision_with_history(0.5, 128, 48, Some(&est));
+        let m_min = (128 + 48) as f64 * dims.token_bytes / 1e6;
+        let m_local = dims.experts - (0.5 * dims.experts as f64).floor() as usize;
+        let floor = m_min + m_local as f64 * dims.layers as f64 * dims.expert_mb;
+        assert!(d_hist.required_mb <= d_static.required_mb);
+        assert!((d_hist.required_mb - floor).abs() < 1e-9);
+        // a history *above* the worst case never loosens the ceiling
+        let mut hot = MemEstimator::new(2);
+        hot.observe(1e9);
+        hot.observe(1e9);
+        let (d_hot, _) = mmp.decision_with_history(0.5, 128, 48, Some(&hot));
+        assert_eq!(d_hot.required_mb, d_static.required_mb);
     }
 
     #[test]

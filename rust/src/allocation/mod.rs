@@ -2,7 +2,9 @@
 //! load bounds and the MMP algorithm (Alg. 2).
 
 pub mod bounds;
+pub mod estimator;
 pub mod mmp;
 
 pub use bounds::{corollary1_bound, theorem1_bound};
+pub use estimator::MemEstimator;
 pub use mmp::{Mmp, MmpDecision};

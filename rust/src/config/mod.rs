@@ -146,6 +146,168 @@ impl SlaConfig {
     }
 }
 
+/// Per-class service objective: the TTFT target a request of this
+/// class must meet to count as attained, and its scheduling priority
+/// (higher wins ties in the event queue and admission order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloClass {
+    pub ttft_target_s: f64,
+    pub priority: u8,
+}
+
+/// One tenant / SLO class sharing the platform: identity, SLO,
+/// concurrency quota (0 = unlimited) and a price weight scaling its
+/// attributed cost in reports.
+#[derive(Debug, Clone)]
+pub struct TenantClass {
+    pub id: String,
+    pub slo: SloClass,
+    /// Max requests of this class in flight at once; 0 = unlimited.
+    /// Arrivals beyond the quota wait in the class's admission queue
+    /// until a completion frees a slot.
+    pub quota: usize,
+    pub price_weight: f64,
+}
+
+impl TenantClass {
+    fn named(id: &str) -> Self {
+        TenantClass {
+            id: id.to_string(),
+            slo: SloClass { ttft_target_s: SlaConfig::default().ttft_s, priority: 0 },
+            quota: 0,
+            price_weight: 1.0,
+        }
+    }
+}
+
+/// The set of tenant classes a serving run schedules across. Never
+/// empty: the default is a single anonymous class, which reproduces
+/// tenant-blind FIFO scheduling exactly.
+#[derive(Debug, Clone)]
+pub struct TenantRegistry {
+    classes: Vec<TenantClass>,
+}
+
+impl Default for TenantRegistry {
+    fn default() -> Self {
+        TenantRegistry { classes: vec![TenantClass::named("default")] }
+    }
+}
+
+impl TenantRegistry {
+    pub fn new(classes: Vec<TenantClass>) -> Self {
+        if classes.is_empty() {
+            TenantRegistry::default()
+        } else {
+            TenantRegistry { classes }
+        }
+    }
+
+    /// Class for a tenant index; out-of-range tags (e.g. a trace tagged
+    /// for a larger registry) fall back to class 0.
+    pub fn class(&self, tenant: usize) -> &TenantClass {
+        self.classes.get(tenant).unwrap_or(&self.classes[0])
+    }
+
+    pub fn classes(&self) -> &[TenantClass] {
+        &self.classes
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn index_of(&self, id: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c.id == id)
+    }
+
+    /// The same classes with flat priority and no quotas: the
+    /// tenant-blind FIFO control for A/B comparisons — SLO targets
+    /// (and therefore attainment accounting) stay identical while all
+    /// scheduling preference disappears.
+    pub fn flattened(&self) -> TenantRegistry {
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| TenantClass {
+                id: c.id.clone(),
+                slo: SloClass { ttft_target_s: c.slo.ttft_target_s, priority: 0 },
+                quota: 0,
+                price_weight: c.price_weight,
+            })
+            .collect();
+        TenantRegistry { classes }
+    }
+
+    /// Read `[tenants.<id>]` tables: each dotted section declares one
+    /// class (`priority`, `ttft_target_s`, `quota`, `price_weight`,
+    /// each falling back to the anonymous-class default — the same
+    /// layered defaults-merge the platform tables use). Classes are
+    /// indexed in section-name order (sorted, deterministic).
+    pub fn from_toml(t: &Toml) -> Self {
+        let mut names: Vec<&str> = Vec::new();
+        for key in t.entries.keys() {
+            if let Some(rest) = key.strip_prefix("tenants.") {
+                if let Some((name, _field)) = rest.split_once('.') {
+                    if names.last() != Some(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+        let classes = names
+            .iter()
+            .map(|name| {
+                let d = TenantClass::named(name);
+                let key = |field: &str| format!("tenants.{name}.{field}");
+                TenantClass {
+                    id: name.to_string(),
+                    slo: SloClass {
+                        ttft_target_s: t.f64_or(&key("ttft_target_s"), d.slo.ttft_target_s),
+                        priority: t.usize_or(&key("priority"), d.slo.priority as usize) as u8,
+                    },
+                    quota: t.usize_or(&key("quota"), d.quota),
+                    price_weight: t.f64_or(&key("price_weight"), d.price_weight),
+                }
+            })
+            .collect();
+        TenantRegistry::new(classes)
+    }
+
+    /// Parse the CLI spec `remoe serve --tenants` accepts: classes
+    /// separated by `;`, fields by `,`; the first field is the class
+    /// id, the rest are `prio=`, `ttft=`, `quota=`, `weight=` pairs.
+    /// Example: `gold,prio=2,ttft=4,quota=2;bronze,ttft=10`.
+    pub fn parse_spec(spec: &str) -> anyhow::Result<Self> {
+        let mut classes = Vec::new();
+        for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+            let mut fields = part.split(',').map(str::trim);
+            let id = fields.next().unwrap_or("");
+            anyhow::ensure!(!id.is_empty(), "tenant class in {spec:?} has an empty id");
+            let mut class = TenantClass::named(id);
+            for f in fields {
+                let (k, v) = f
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("expected key=value, got {f:?}"))?;
+                match k {
+                    "prio" | "priority" => class.slo.priority = v.parse()?,
+                    "ttft" => class.slo.ttft_target_s = v.parse()?,
+                    "quota" => class.quota = v.parse()?,
+                    "weight" => class.price_weight = v.parse()?,
+                    _ => anyhow::bail!("unknown tenant field {k:?} in {spec:?}"),
+                }
+            }
+            classes.push(class);
+        }
+        anyhow::ensure!(!classes.is_empty(), "tenant spec {spec:?} declares no classes");
+        Ok(TenantRegistry::new(classes))
+    }
+}
+
 /// Memory-specification catalog M = {m_1..m_V} (§III-A): a range with a
 /// fixed step, as in the paper (step 100 MB).
 #[derive(Debug, Clone)]
@@ -334,6 +496,9 @@ impl CostDims {
 pub struct SystemConfig {
     pub platform: PlatformConfig,
     pub sla: SlaConfig,
+    /// Tenant/SLO classes sharing the platform (`[tenants.<id>]`
+    /// tables; default: one anonymous class = tenant-blind FIFO).
+    pub tenants: TenantRegistry,
     /// SPS hyper-parameters (§IV-B): top-α similar prompts, β split
     /// threshold for the clustering tree.
     pub alpha: usize,
@@ -351,6 +516,7 @@ impl Default for SystemConfig {
         SystemConfig {
             platform: PlatformConfig::default(),
             sla: SlaConfig::default(),
+            tenants: TenantRegistry::default(),
             alpha: 15,
             beta: 150,
             epsilon: 0.05,
@@ -367,6 +533,7 @@ impl SystemConfig {
         Ok(SystemConfig {
             platform: PlatformConfig::from_toml(&t),
             sla: SlaConfig::from_toml(&t),
+            tenants: TenantRegistry::from_toml(&t),
             alpha: t.usize_or("sps.alpha", d.alpha),
             beta: t.usize_or("sps.beta", d.beta),
             epsilon: t.f64_or("mmp.epsilon", d.epsilon),
@@ -433,5 +600,54 @@ mod tests {
         assert_eq!(cfg.alpha, 7);
         assert_eq!(cfg.sla.ttft_s, 3.5);
         assert_eq!(cfg.eta, 0.1); // default preserved
+        // no [tenants.*] tables → the anonymous single class
+        assert_eq!(cfg.tenants.len(), 1);
+        assert_eq!(cfg.tenants.class(0).id, "default");
+        assert_eq!(cfg.tenants.class(0).quota, 0);
+    }
+
+    #[test]
+    fn tenant_registry_from_toml_tables() {
+        let cfg = SystemConfig::from_toml_str(
+            "[tenants.gold]\npriority = 2\nttft_target_s = 4.0\nquota = 2\n\
+             price_weight = 3.0\n[tenants.bronze]\nttft_target_s = 12.0\n",
+        )
+        .unwrap();
+        let t = &cfg.tenants;
+        assert_eq!(t.len(), 2);
+        // sorted section order: bronze before gold
+        assert_eq!(t.class(0).id, "bronze");
+        assert_eq!(t.class(0).slo.priority, 0);
+        assert_eq!(t.class(0).slo.ttft_target_s, 12.0);
+        assert_eq!(t.class(0).quota, 0);
+        assert_eq!(t.class(1).id, "gold");
+        assert_eq!(t.class(1).slo.priority, 2);
+        assert_eq!(t.class(1).slo.ttft_target_s, 4.0);
+        assert_eq!(t.class(1).quota, 2);
+        assert_eq!(t.class(1).price_weight, 3.0);
+        assert_eq!(t.index_of("gold"), Some(1));
+        // out-of-range tags fall back to class 0
+        assert_eq!(t.class(7).id, "bronze");
+    }
+
+    #[test]
+    fn tenant_registry_cli_spec_and_flatten() {
+        let t = TenantRegistry::parse_spec("gold,prio=2,ttft=4,quota=2,weight=3;bronze,ttft=10")
+            .unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.class(0).id, "gold");
+        assert_eq!(t.class(0).slo.priority, 2);
+        assert_eq!(t.class(0).slo.ttft_target_s, 4.0);
+        assert_eq!(t.class(0).quota, 2);
+        assert_eq!(t.class(0).price_weight, 3.0);
+        assert_eq!(t.class(1).id, "bronze");
+        assert_eq!(t.class(1).slo.ttft_target_s, 10.0);
+        let flat = t.flattened();
+        assert_eq!(flat.len(), 2);
+        assert_eq!(flat.class(0).slo.priority, 0);
+        assert_eq!(flat.class(0).quota, 0);
+        assert_eq!(flat.class(0).slo.ttft_target_s, 4.0, "SLO targets survive flattening");
+        assert!(TenantRegistry::parse_spec("").is_err());
+        assert!(TenantRegistry::parse_spec("gold,bogus=1").is_err());
     }
 }

@@ -4,7 +4,7 @@
 
 use std::time::Instant;
 
-use crate::allocation::{Mmp, MmpDecision};
+use crate::allocation::{MemEstimator, Mmp, MmpDecision};
 use crate::config::{CostDims, PlatformConfig, SlaConfig, SystemConfig};
 use crate::costmodel::{CostModel, DeploymentPlan, LatencyModel, RequestProfile};
 use crate::optimizer::{
@@ -97,6 +97,21 @@ impl Planner {
     /// evaluates a handful of feasible candidates and keeps the
     /// cheapest (all candidates keep MMP's worst-case guarantee).
     pub fn plan(&self, dist: &[Vec<f64>], n_in: usize, n_out: usize) -> PlanOutput {
+        self.plan_with_memory(dist, n_in, n_out, None)
+    }
+
+    /// [`Planner::plan`] with history-based admission: when `history`
+    /// holds a warm [`MemEstimator`], MMP's per-candidate memory gate
+    /// uses the history's P95 realized requirement (floored at the
+    /// structural minimum, capped at the static worst case) instead of
+    /// the worst case alone. `None` is byte-identical to `plan`.
+    pub fn plan_with_memory(
+        &self,
+        dist: &[Vec<f64>],
+        n_in: usize,
+        n_out: usize,
+        history: Option<&MemEstimator>,
+    ) -> PlanOutput {
         let t0 = Instant::now();
         let mmp = Mmp::new(&self.dims, &self.platform, &self.sla, self.cfg.epsilon);
         let candidates = mmp.feasible_ratios(n_in, n_out, 5);
@@ -104,7 +119,7 @@ impl Planner {
         let mut best: Option<PlanOutput> = None;
         let mut best_b0: Option<PlanOutput> = None;
         for b in candidates {
-            let (decision, _) = mmp.decision_for(b, n_in, n_out);
+            let (decision, _) = mmp.decision_with_history(b, n_in, n_out, history);
             // MMP returns the *minimum* SLO-safe spec; more memory can
             // still be cheaper (faster local experts shorten the billed
             // duration), so try scaled variants of the spec too.

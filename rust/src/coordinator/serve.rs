@@ -40,6 +40,20 @@
 //! routing. What changed is the substrate those analytic service
 //! times run on.
 //!
+//! **Multi-tenancy** (`ServeOptions::tenants`): every request carries
+//! a tenant-class index into a [`TenantRegistry`]. Same-time arrivals
+//! admit in strict SLO-priority order (the event queue breaks
+//! time-ties on class priority before insertion order), so under
+//! contention the high-priority class grabs free batch slots first.
+//! A class with a nonzero concurrency quota is admission-controlled:
+//! once `quota` of its requests are in flight, further arrivals are
+//! deferred until one of them completes, and the wait is charged to
+//! the deferred request's queue delay / TTFT. Each request's billed
+//! spans carry its tenant tag, so the platform ledger decomposes as
+//! `total == Σ_tenant(request costs) + PrewarmIdle`, and each record
+//! carries an SLO witness (`slo_ok`: TTFT ≤ the class's target) that
+//! [`Aggregator`] folds into per-class attainment in both modes.
+//!
 //! Determinism: all virtual-time quantities derive from the analytic
 //! models plus the seeded platform RNG. Host wall-clock only enters
 //! `calc_time_s` / `engine_wall_s`, which
@@ -48,12 +62,13 @@
 //! under that serialization (see the determinism regression tests).
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::autoscale::{AutoscalePolicy, Autoscaler};
+use crate::config::TenantRegistry;
 use crate::costmodel::RequestProfile;
 use crate::metrics::{Aggregator, RequestRecord};
 use crate::model::{Backend, Engine};
@@ -97,6 +112,11 @@ pub struct ServeOptions {
     /// available; per-record access and `canonical()` do not (use
     /// [`Aggregator::canonical_hash`] for determinism checks).
     pub streaming: bool,
+    /// Tenant classes: SLO targets/priorities and concurrency quotas,
+    /// indexed by `Request::tenant`. The default single-class registry
+    /// (priority 0, unlimited quota, default TTFT target) reproduces
+    /// tenant-blind FIFO scheduling exactly.
+    pub tenants: TenantRegistry,
 }
 
 impl Default for ServeOptions {
@@ -110,6 +130,7 @@ impl Default for ServeOptions {
             autoscale: AutoscalePolicy::Reactive,
             autoscale_tick_s: 5.0,
             streaming: false,
+            tenants: TenantRegistry::default(),
         }
     }
 }
@@ -157,7 +178,8 @@ pub trait ServePolicy {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EventKind {
-    Completion,
+    /// A request of the given tenant class finished decoding.
+    Completion(usize),
     Arrival(usize),
     /// Autoscaling control tick: run the scale controller, then
     /// re-arm the next tick.
@@ -167,6 +189,9 @@ enum EventKind {
 #[derive(Debug, Clone, Copy)]
 struct Event {
     time: f64,
+    /// SLO-class priority of the arriving request (0 for completions
+    /// and ticks): same-time arrivals admit high-priority-first.
+    prio: u8,
     seq: u64,
     kind: EventKind,
 }
@@ -174,7 +199,7 @@ struct Event {
 impl Event {
     fn rank(&self) -> u8 {
         match self.kind {
-            EventKind::Completion => 0, // completions drain first at ties
+            EventKind::Completion(_) => 0, // completions drain first at ties
             EventKind::Arrival(_) => 1,
             // ticks run after same-time arrivals so a control action
             // can never perturb an admission at its own timestamp
@@ -202,6 +227,9 @@ impl Ord for Event {
         self.time
             .total_cmp(&other.time)
             .then_with(|| self.rank().cmp(&other.rank()))
+            // strict-priority tie-break: a higher-priority class's
+            // arrival is admitted (and grabs free batch slots) first
+            .then_with(|| other.prio.cmp(&self.prio))
             .then_with(|| self.seq.cmp(&other.seq))
     }
 }
@@ -239,7 +267,8 @@ pub fn serve_on_platform(
     let mut horizon = f64::NEG_INFINITY;
     for (i, req) in trace.iter().enumerate() {
         seq += 1;
-        heap.push(Reverse(Event { time: req.arrival_s, seq, kind: EventKind::Arrival(i) }));
+        let prio = opts.tenants.class(req.tenant).slo.priority;
+        heap.push(Reverse(Event { time: req.arrival_s, prio, seq, kind: EventKind::Arrival(i) }));
         horizon = horizon.max(req.arrival_s);
     }
     // autoscaling control loop: ticks start one period in and stop at
@@ -252,33 +281,63 @@ pub fn serve_on_platform(
         seq += 1;
         heap.push(Reverse(Event {
             time: opts.autoscale_tick_s,
+            prio: 0,
             seq,
             kind: EventKind::ControlTick,
         }));
     }
 
+    let ntenants = opts.tenants.len();
     let mut in_flight = 0usize;
+    // per-class admitted-not-finished counters and quota-deferred FIFO
+    // queues (indices into `trace`), both keyed by tenant-class index
+    let mut tenant_busy = vec![0usize; ntenants];
+    let mut deferred: Vec<VecDeque<usize>> = vec![VecDeque::new(); ntenants];
     let mut agg = if opts.streaming { Aggregator::streaming() } else { Aggregator::default() };
     while let Some(Reverse(event)) = heap.pop() {
-        let i = match event.kind {
-            EventKind::Completion => {
+        let (i, t) = match event.kind {
+            EventKind::Completion(tn) => {
                 in_flight -= 1;
-                continue;
+                tenant_busy[tn] -= 1;
+                // the freed quota slot admits the class's oldest
+                // deferred request at this completion's timestamp
+                match deferred[tn].pop_front() {
+                    Some(j) => (j, event.time),
+                    None => continue,
+                }
             }
             EventKind::ControlTick => {
                 scaler.tick(platform, event.time);
                 let next = event.time + opts.autoscale_tick_s;
                 if next <= horizon {
                     seq += 1;
-                    heap.push(Reverse(Event { time: next, seq, kind: EventKind::ControlTick }));
+                    heap.push(Reverse(Event {
+                        time: next,
+                        prio: 0,
+                        seq,
+                        kind: EventKind::ControlTick,
+                    }));
                 }
                 continue;
             }
-            EventKind::Arrival(i) => i,
+            EventKind::Arrival(i) => (i, event.time),
         };
-        in_flight += 1;
         let req = &trace[i];
-        let t = req.arrival_s;
+        // out-of-range tenant tags fall back to class 0, mirroring
+        // `TenantRegistry::class`
+        let tn = if req.tenant < ntenants { req.tenant } else { 0 };
+        let class = opts.tenants.class(tn);
+        if class.quota > 0 && tenant_busy[tn] >= class.quota {
+            // admission control: the class is at its concurrency
+            // quota — defer until one of its requests completes; the
+            // wait lands in the request's queue delay and TTFT
+            deferred[tn].push_back(i);
+            continue;
+        }
+        in_flight += 1;
+        tenant_busy[tn] += 1;
+        // admission lag: zero unless the quota deferred this request
+        let admit_wait_s = t - req.arrival_s;
         // arrivals are processed in time order and every invocation
         // this loop still issues carries a timestamp ≥ t, so instances
         // expired before t are unreachable — prune them to keep the
@@ -309,6 +368,9 @@ pub fn serve_on_platform(
             component: CostComponent::MainCpu,
         });
 
+        // every span this request's invocations bill is attributed to
+        // its tenant class (pre-warm idle stays untagged by design)
+        platform.set_tenant(Some(tn));
         let mark = platform.billing.mark();
         // Continuous-batching split: the prefill segment resolves slot
         // contention (join-in-flight, cold scale-out, or queueing);
@@ -385,39 +447,46 @@ pub fn serve_on_platform(
         seq += 1;
         heap.push(Reverse(Event {
             time: decode_inv.finished_at,
+            prio: 0,
             seq,
-            kind: EventKind::Completion,
+            kind: EventKind::Completion(tn),
         }));
 
+        // TTFT includes the admission lag (quota deferral), the
+        // queueing delay and the warm-invoke overhead: a request that
+        // waited for a free main-model slot cannot see its first token
+        // before its prefill segment even started (cold admissions
+        // have overhead 0 — the cold start already covers container +
+        // load).
+        let ttft_s = admit_wait_s
+            + prefill_inv.queue_delay_s
+            + cold_eff
+            + prefill_inv.invoke_overhead_s
+            + sp.prefill_s;
         agg.push(RequestRecord {
             id: req.id,
             strategy: policy.strategy(),
             n_in: sp.n_in,
             n_out: sp.n_out,
-            // TTFT includes the queueing delay and the warm-invoke
-            // overhead: a request that waited for a free main-model
-            // slot cannot see its first token before its prefill
-            // segment even started (cold admissions have overhead 0 —
-            // the cold start already covers container + load).
-            ttft_s: prefill_inv.queue_delay_s
-                + cold_eff
-                + prefill_inv.invoke_overhead_s
-                + sp.prefill_s,
+            ttft_s,
             tpot_s: if sp.n_out == 0 { 0.0 } else { sp.decode_s / sp.n_out as f64 },
             cost,
             cold_start_s: cold_eff,
             calc_time_s: sp.calc_time_s,
             engine_wall_s: sp.engine_wall_s,
-            arrival_s: t,
-            queue_delay_s: prefill_inv.queue_delay_s,
+            arrival_s: req.arrival_s,
+            queue_delay_s: admit_wait_s + prefill_inv.queue_delay_s,
             start_s: prefill_inv.started_at,
             finish_s: decode_inv.finished_at,
             main_cold_s: prefill_inv.cold_start_s,
             instance: prefill_inv.instance,
             batch: prefill_inv.batch,
             concurrency: in_flight,
+            tenant: tn,
+            slo_ok: ttft_s <= class.slo.ttft_target_s,
         });
     }
+    platform.set_tenant(None);
     // close the ledger: pre-warmed capacity that never served settles
     // its cold start + idle keep-alive, so
     // `total == Σ record costs + PrewarmIdle` holds exactly
@@ -431,6 +500,13 @@ pub struct RemoePolicy<'a, B: Backend> {
     pub engine: &'a mut Engine<B>,
     pub planner: &'a Planner,
     pub predictor: &'a dyn ActivationPredictor,
+    /// History-based admission (opt-in): online P95 estimator of
+    /// realized main-model memory. Each served request's measured
+    /// staging + local-expert footprint is folded in, and once warm
+    /// the planner's MMP gate uses the history's P95 instead of the
+    /// static worst case. `None` (the default everywhere) keeps the
+    /// worst-case gate byte-identical.
+    pub mem_history: Option<crate::allocation::MemEstimator>,
 }
 
 impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
@@ -443,10 +519,12 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
         let sig = prompt_signature(self.engine, &req.prompt.text);
         let dist = self.predictor.predict(&sig);
 
-        // steps ii–v — the planner (its wall time is CALCULATE)
+        // steps ii–v — the planner (its wall time is CALCULATE);
+        // with history-based admission the MMP gate uses the P95 of
+        // realized requirements once the estimator is warm
         let ids = prompt_ids(self.engine, &req.prompt.text);
         let n_in = ids.len();
-        let out = self.planner.plan(&dist, n_in, req.n_out);
+        let out = self.planner.plan_with_memory(&dist, n_in, req.n_out, self.mem_history.as_ref());
 
         // real execution (the request path: PJRT artifacts, no python)
         let t0 = Instant::now();
@@ -462,6 +540,12 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
 
         let local_experts: usize =
             (0..plan.layers()).map(|l| dims.experts - plan.remote_count(l)).sum();
+        if let Some(est) = self.mem_history.as_mut() {
+            // realized requirement of this request: measured token
+            // staging plus the local expert weights it actually kept
+            let staged_mb = (n_in + profile.n_out) as f64 * dims.token_bytes / 1e6;
+            est.observe(staged_mb + local_experts as f64 * dims.expert_mb);
+        }
         let mut remote = Vec::new();
         for l in 0..plan.layers() {
             if plan.remote_count(l) == 0 {
@@ -579,7 +663,7 @@ pub fn serve_remoe_with<B: Backend>(
     opts: &ServeOptions,
 ) -> Result<Aggregator> {
     let mut platform = Platform::new(&planner.platform, opts.seed);
-    let mut policy = RemoePolicy { engine, planner, predictor };
+    let mut policy = RemoePolicy { engine, planner, predictor, mem_history: None };
     serve_on_platform(&mut policy, trace, &mut platform, opts)
 }
 
@@ -672,7 +756,13 @@ mod tests {
             .iter()
             .cloned()
             .enumerate()
-            .map(|(id, prompt)| Request { id, arrival_s: 30.0 * id as f64, prompt, n_out: 8 })
+            .map(|(id, prompt)| Request {
+                id,
+                arrival_s: 30.0 * id as f64,
+                prompt,
+                n_out: 8,
+                tenant: 0,
+            })
             .collect();
         let serve = |engine: &mut Engine<crate::model::NativeBackend>,
                      autoscale: crate::autoscale::AutoscalePolicy| {
@@ -685,7 +775,8 @@ mod tests {
                 ..ServeOptions::default()
             };
             let mut platform = Platform::new(&planner.platform, opts.seed);
-            let mut policy = RemoePolicy { engine, planner: &planner, predictor: &sps };
+            let mut policy =
+                RemoePolicy { engine, planner: &planner, predictor: &sps, mem_history: None };
             let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
             let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
             let ledger = platform.billing.total();
@@ -740,6 +831,171 @@ mod tests {
         assert!((full.makespan_s() - stream.makespan_s()).abs() < 1e-12);
     }
 
+    fn synthetic_two_tenant_trace(n: usize) -> Vec<Request> {
+        use crate::workload::trace::{multi_tenant_trace_over, ArrivalProcess, TenantTraceSpec};
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, prompts) = corpus.split(4, 6, 5);
+        multi_tenant_trace_over(
+            &prompts,
+            &[
+                TenantTraceSpec {
+                    tenant: 0,
+                    arrivals: ArrivalProcess::Bursty { burst: 4, period_s: 1.0 },
+                    n_requests: n,
+                    n_out: 16,
+                },
+                TenantTraceSpec {
+                    tenant: 1,
+                    arrivals: ArrivalProcess::Bursty { burst: 4, period_s: 1.0 },
+                    n_requests: n,
+                    n_out: 16,
+                },
+            ],
+            11,
+        )
+    }
+
+    fn tenant_registry(specs: &str) -> TenantRegistry {
+        TenantRegistry::parse_spec(specs).unwrap()
+    }
+
+    #[test]
+    fn priority_class_preempts_slot_order_at_simultaneous_arrivals() {
+        // both classes arrive in lockstep bursts; one main instance,
+        // batch 1 → every burst serializes. With priorities, tenant 1
+        // (high) must always be admitted before the same-time tenant 0.
+        let trace = synthetic_two_tenant_trace(8);
+        let run = |tenants: TenantRegistry| {
+            let opts = ServeOptions {
+                overhead: InvokeOverhead::Expected,
+                tenants,
+                ..ServeOptions::default()
+            };
+            let mut platform =
+                Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+            let mut policy = SyntheticServePolicy::default();
+            serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
+        };
+        let agg = run(tenant_registry("bronze;gold,prio=5,ttft=1.0"));
+        // records land in admission order: within each same-time
+        // burst, all tenant-1 starts precede all tenant-0 starts
+        for pair in agg.records.windows(2) {
+            if pair[0].arrival_s == pair[1].arrival_s {
+                assert!(
+                    pair[0].tenant >= pair[1].tenant,
+                    "low-priority admitted before a same-time high-priority request"
+                );
+            }
+        }
+        // the tenant-blind control admits in insertion order instead
+        let flat = run(tenant_registry("bronze;gold,prio=5,ttft=1.0").flattened());
+        let first_flat = flat.records.first().unwrap();
+        assert_eq!(first_flat.tenant, 0, "flattened registry must keep FIFO order");
+        // per-tenant queueing: the prioritized class waits strictly
+        // less than the deprioritized one on the same trace
+        let mean_queue = |a: &Aggregator, tn: usize| {
+            let rs: Vec<&RequestRecord> =
+                a.records.iter().filter(|r| r.tenant == tn).collect();
+            rs.iter().map(|r| r.queue_delay_s).sum::<f64>() / rs.len() as f64
+        };
+        assert!(mean_queue(&agg, 1) < mean_queue(&agg, 0));
+    }
+
+    #[test]
+    fn quota_defers_admissions_and_charges_the_wait() {
+        // a one-slot quota on tenant 0 serializes its burst: only one
+        // of its requests may be in flight, the rest wait for
+        // completions and the wait shows up in queue delay
+        let trace = synthetic_two_tenant_trace(6);
+        let run = |spec: &str| {
+            let opts = ServeOptions {
+                main_instances: 8,
+                batch_capacity: 8,
+                overhead: InvokeOverhead::Expected,
+                tenants: tenant_registry(spec),
+                ..ServeOptions::default()
+            };
+            let mut platform =
+                Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+            let mut policy = SyntheticServePolicy::default();
+            serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
+        };
+        let free = run("bronze;gold");
+        let quoted = run("bronze,quota=1;gold");
+        assert_eq!(free.len(), quoted.len());
+        // ample instances: without quotas nothing queues
+        assert!(free.records.iter().all(|r| r.queue_delay_s == 0.0));
+        // with the quota, some tenant-0 requests must have waited for
+        // a completion, and only tenant-0 ones
+        let t0_waits = quoted
+            .records
+            .iter()
+            .filter(|r| r.tenant == 0 && r.queue_delay_s > 0.0)
+            .count();
+        assert!(t0_waits > 0, "quota of 1 must defer burst arrivals");
+        assert!(quoted
+            .records
+            .iter()
+            .filter(|r| r.tenant == 1)
+            .all(|r| r.queue_delay_s == 0.0));
+        // deferred requests still start after their arrival and the
+        // wait is folded into TTFT
+        for r in &quoted.records {
+            assert!(r.start_s >= r.arrival_s);
+            assert!(r.ttft_s >= r.queue_delay_s);
+        }
+        // quota never admits two tenant-0 requests concurrently:
+        // service intervals of tenant 0 are pairwise disjoint
+        let mut spans: Vec<(f64, f64)> = quoted
+            .records
+            .iter()
+            .filter(|r| r.tenant == 0)
+            .map(|r| (r.start_s, r.finish_s))
+            .collect();
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for pair in spans.windows(2) {
+            assert!(pair[1].0 >= pair[0].1 - 1e-9, "quota=1 admitted overlapping requests");
+        }
+    }
+
+    #[test]
+    fn per_tenant_ledger_attribution_and_slo_metric() {
+        let trace = synthetic_two_tenant_trace(6);
+        let opts = ServeOptions {
+            batch_capacity: 2,
+            overhead: InvokeOverhead::Expected,
+            tenants: tenant_registry("bronze,ttft=0.0;gold,prio=3,ttft=30.0"),
+            ..ServeOptions::default()
+        };
+        let mut platform = Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+        let mut policy = SyntheticServePolicy::default();
+        let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+        // ledger identity: every tagged cost belongs to a tenant and
+        // sums (with untagged pre-warm idle) to the grand total
+        let by_tenant = platform.billing.by_tenant();
+        let tagged: f64 = by_tenant.iter().filter_map(|(tn, v)| tn.map(|_| *v)).sum();
+        let untagged = by_tenant.get(&None).copied().unwrap_or(0.0);
+        let total = platform.billing.total();
+        assert!((total - tagged - untagged).abs() <= 1e-9 * total.max(1.0));
+        // per-tenant record costs match the per-tenant ledger cuts
+        for tn in 0..2 {
+            let rec_sum: f64 =
+                agg.records.iter().filter(|r| r.tenant == tn).map(|r| r.cost).sum();
+            let led = platform.billing.tenant_total(tn);
+            assert!(
+                (rec_sum - led).abs() <= 1e-9 * led.max(1.0),
+                "tenant {tn}: records {rec_sum} != ledger {led}"
+            );
+        }
+        // ttft=0 is unattainable, ttft=30 s is trivially attained on
+        // this tiny trace — the witness and per-class metric agree
+        assert!(agg.records.iter().filter(|r| r.tenant == 0).all(|r| !r.slo_ok));
+        assert!(agg.records.iter().filter(|r| r.tenant == 1).all(|r| r.slo_ok));
+        assert_eq!(agg.tenant_stats(0).unwrap().attainment(), 0.0);
+        assert_eq!(agg.tenant_stats(1).unwrap().attainment(), 1.0);
+        assert!((agg.slo_attainment() - 0.5).abs() < 1e-12);
+    }
+
     #[test]
     fn ledger_total_matches_record_costs() {
         let (mut engine, planner, sps) = setup();
@@ -748,7 +1004,12 @@ mod tests {
         let trace = batch_trace(&test, 8);
         let opts = ServeOptions::default();
         let mut platform = Platform::new(&planner.platform, opts.seed);
-        let mut policy = RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+        let mut policy = RemoePolicy {
+            engine: &mut engine,
+            planner: &planner,
+            predictor: &sps,
+            mem_history: None,
+        };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
         let ledger = platform.billing.total();
         let records: f64 = agg.total_cost();
@@ -757,5 +1018,4 @@ mod tests {
             "ledger {ledger} != Σ records {records}"
         );
     }
-
 }

@@ -103,8 +103,12 @@ pub fn autoscale(scale: Scale) -> Result<()> {
     for &pol in &policies {
         let opts = ServeOptions { autoscale: pol, ..base.clone() };
         let mut platform = Platform::new(&planner.platform, opts.seed);
-        let mut policy =
-            RemoePolicy { engine: &mut ctx.engine, planner: &planner, predictor: &sps };
+        let mut policy = RemoePolicy {
+            engine: &mut ctx.engine,
+            planner: &planner,
+            predictor: &sps,
+            mem_history: None,
+        };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts)?;
         runs.push(audited_run(pol.name(), &agg, &platform)?);
 

@@ -6,6 +6,7 @@
 
 pub mod autoscale_exps;
 pub mod common;
+pub mod multitenant_exps;
 pub mod overall_exps;
 pub mod prediction_exps;
 pub mod profile_exps;
@@ -16,7 +17,7 @@ use anyhow::{bail, Result};
 
 pub const ALL: &[&str] = &[
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11",
-    "serving", "autoscale", "summary",
+    "serving", "autoscale", "multitenant", "summary",
 ];
 
 /// Run one experiment by id.
@@ -34,6 +35,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "fig11" => overall_exps::fig11(scale),
         "serving" => overall_exps::serving(scale),
         "autoscale" => autoscale_exps::autoscale(scale),
+        "multitenant" => multitenant_exps::multitenant(scale),
         "summary" => overall_exps::summary(scale),
         "all" => {
             for id in ALL {

@@ -407,8 +407,12 @@ pub fn serving(scale: Scale) -> Result<()> {
         // against the per-request cost attribution each time
         let mut remoe_audited = |opts: &ServeOptions| -> Result<Aggregator> {
             let mut platform = Platform::new(&planner.platform, opts.seed);
-            let mut policy =
-                RemoePolicy { engine: &mut ctx.engine, planner: &planner, predictor: &sps };
+            let mut policy = RemoePolicy {
+                engine: &mut ctx.engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+            };
             let agg = serve_on_platform(&mut policy, &trace, &mut platform, opts)?;
             let ledger = platform.billing.total();
             anyhow::ensure!(

@@ -6,6 +6,8 @@
 //!             [--instances I] [--batch C]           (C>1: continuous batching)
 //!             [--autoscale P] [--autoscale-tick S]  P: reactive | warmpool[:floor]
 //!                                                      | predictive[:window_s]
+//!             [--tenants SPEC]                      SLO classes, e.g.
+//!                                                      "gold,prio=2,ttft=4,quota=2;bronze"
 //! remoe plan  [--model M]                           plan one request, print the deployment
 //! remoe info                                        artifact + model inventory
 //! ```
@@ -21,7 +23,7 @@ use anyhow::{bail, Result};
 
 use remoe::autoscale::AutoscalePolicy;
 use remoe::baselines::Strategy;
-use remoe::config::{CostDims, SlaConfig, SystemConfig};
+use remoe::config::{CostDims, SlaConfig, SystemConfig, TenantRegistry};
 use remoe::coordinator::{build_history, serve_on_platform, Planner, RemoePolicy, ServeOptions};
 use remoe::experiments::{self, Scale};
 use remoe::metrics::{fmt_f, Table};
@@ -33,7 +35,9 @@ use remoe::util::cli::Args;
 use remoe::util::logger;
 use remoe::util::rng::Rng;
 use remoe::workload::corpus::{standard_corpora, Corpus};
-use remoe::workload::trace::{poisson_trace, TraceSpec};
+use remoe::workload::trace::{
+    multi_tenant_trace_over, poisson_trace, ArrivalProcess, TenantTraceSpec, TraceSpec,
+};
 
 fn main() {
     logger::init();
@@ -89,6 +93,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_out = args.usize_or("n-out", 32);
     let seed = args.u64_or("seed", 7);
     let (hyper, dims) = dims_for(model_name)?;
+    let tenants = match args.flag("tenants") {
+        Some(spec) => TenantRegistry::parse_spec(spec)?,
+        None => TenantRegistry::default(),
+    };
     let defaults = ServeOptions::default();
     let opts = ServeOptions {
         keepalive_s: args.f64_or("keepalive", defaults.keepalive_s),
@@ -99,6 +107,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => AutoscalePolicy::Reactive,
         },
         autoscale_tick_s: args.f64_or("autoscale-tick", defaults.autoscale_tick_s),
+        tenants: tenants.clone(),
         ..defaults
     };
 
@@ -108,10 +117,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let corpus = Corpus::new(standard_corpora()[0].clone());
     let (train, _) = corpus.split(120, 0, seed);
-    let trace = poisson_trace(
-        &corpus,
-        &TraceSpec { rate_per_s: rate, n_requests, n_out, seed },
-    );
+    let trace = if tenants.len() > 1 {
+        // split the Poisson stream evenly across the declared classes
+        let mut rng = Rng::new(seed ^ 0x7E4A);
+        let prompts: Vec<_> =
+            (0..n_requests.max(1)).map(|_| corpus.sample(&mut rng, None)).collect();
+        let share = rate / tenants.len() as f64;
+        let specs: Vec<TenantTraceSpec> = (0..tenants.len())
+            .map(|tn| TenantTraceSpec {
+                tenant: tn,
+                arrivals: ArrivalProcess::Poisson { rate_per_s: share },
+                n_requests: n_requests / tenants.len()
+                    + usize::from(tn < n_requests % tenants.len()),
+                n_out,
+            })
+            .collect();
+        multi_tenant_trace_over(&prompts, &specs, seed)
+    } else {
+        poisson_trace(&corpus, &TraceSpec { rate_per_s: rate, n_requests, n_out, seed })
+    };
 
     if std::path::Path::new("artifacts/manifest.json").exists() {
         println!("loading artifacts + building SPS history ({} prompts)…", train.len());
@@ -142,7 +166,7 @@ fn serve_and_report<B: Backend>(
     let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
     let mut platform = Platform::new(&planner.platform, opts.seed);
     let agg = {
-        let mut policy = RemoePolicy { engine, planner, predictor: &sps };
+        let mut policy = RemoePolicy { engine, planner, predictor: &sps, mem_history: None };
         serve_on_platform(&mut policy, trace, &mut platform, opts)?
     };
 
@@ -194,6 +218,22 @@ fn serve_and_report<B: Backend>(
         opts.autoscale.name(),
         platform.billing.total(),
     );
+    if opts.tenants.len() > 1 {
+        let mut tt =
+            Table::new(&["class", "requests", "slo attainment", "mean ttft (s)", "cost"]);
+        for (&tn, ts) in agg.per_tenant() {
+            let class = opts.tenants.class(tn);
+            tt.row(vec![
+                class.id.clone(),
+                ts.count.to_string(),
+                fmt_f(ts.attainment(), 2),
+                fmt_f(ts.mean_ttft_s(), 2),
+                fmt_f(ts.total_cost, 1),
+            ]);
+        }
+        tt.print();
+        println!("slo attainment overall: {:.2}", agg.slo_attainment());
+    }
     Ok(())
 }
 

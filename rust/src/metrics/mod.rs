@@ -20,6 +20,8 @@
 //! determinism checks no longer need the full [`Aggregator::canonical`]
 //! string (unavailable in streaming mode).
 
+use std::collections::BTreeMap;
+
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, summarize, Summary};
 
@@ -64,6 +66,12 @@ pub struct RequestRecord {
     /// Requests in flight (admitted, not finished) at this arrival,
     /// including this one.
     pub concurrency: usize,
+    /// Tenant/SLO-class index of the request (0 = the anonymous
+    /// single-tenant class).
+    pub tenant: usize,
+    /// Whether the request met its class's TTFT target — the
+    /// per-record witness behind the SLO-attainment metric.
+    pub slo_ok: bool,
 }
 
 impl RequestRecord {
@@ -81,7 +89,7 @@ fn canonical_line(r: &RequestRecord) -> String {
     format!(
         "id={} strategy={} n_in={} n_out={} arrival={:?} queue={:?} start={:?} \
          finish={:?} ttft={:?} tpot={:?} cost={:?} cold={:?} main_cold={:?} \
-         inst={} batch={} conc={}\n",
+         inst={} batch={} conc={} tenant={} slo={}\n",
         r.id,
         r.strategy,
         r.n_in,
@@ -98,6 +106,8 @@ fn canonical_line(r: &RequestRecord) -> String {
         r.instance,
         r.batch,
         r.concurrency,
+        r.tenant,
+        r.slo_ok as u8,
     )
 }
 
@@ -155,6 +165,48 @@ impl Welford {
     }
 }
 
+/// Running per-tenant aggregate (counts, SLO attainment, TTFT, cost).
+/// Bounded by the number of distinct tenant classes, so it is
+/// maintained in both aggregation modes.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    /// Requests observed for this tenant.
+    pub count: u64,
+    /// Of those, how many met their class's TTFT target.
+    pub slo_met: u64,
+    /// Summed per-request attributed cost.
+    pub total_cost: f64,
+    ttft: Welford,
+}
+
+impl TenantStats {
+    fn new() -> TenantStats {
+        TenantStats { count: 0, slo_met: 0, total_cost: 0.0, ttft: Welford::new() }
+    }
+
+    /// Fraction of this tenant's requests that met their TTFT target.
+    pub fn attainment(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.slo_met as f64 / self.count as f64
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.ttft.mean
+    }
+
+    pub fn max_ttft_s(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.ttft.hi
+    }
+}
+
 /// One reservoir-sampled record: the percentile-bearing metrics only.
 #[derive(Debug, Clone, Copy)]
 struct SamplePoint {
@@ -181,6 +233,8 @@ struct StreamStats {
     batch_sum: f64,
     engine_wall_sum: f64,
     tokens: u64,
+    slo_met: u64,
+    per_tenant: BTreeMap<usize, TenantStats>,
     first_arrival: f64,
     last_finish: f64,
     /// Rolling FNV-1a over the canonical lines in push order.
@@ -207,6 +261,8 @@ impl StreamStats {
             batch_sum: 0.0,
             engine_wall_sum: 0.0,
             tokens: 0,
+            slo_met: 0,
+            per_tenant: BTreeMap::new(),
             first_arrival: f64::INFINITY,
             last_finish: 0.0,
             hash: FNV_OFFSET,
@@ -231,6 +287,16 @@ impl StreamStats {
         self.batch_sum += r.batch as f64;
         self.engine_wall_sum += r.engine_wall_s;
         self.tokens += (r.n_in + r.n_out) as u64;
+        if r.slo_ok {
+            self.slo_met += 1;
+        }
+        let ts = self.per_tenant.entry(r.tenant).or_insert_with(TenantStats::new);
+        ts.count += 1;
+        if r.slo_ok {
+            ts.slo_met += 1;
+        }
+        ts.total_cost += r.cost;
+        ts.ttft.push(r.ttft_s);
         self.first_arrival = self.first_arrival.min(r.arrival_s);
         self.last_finish = self.last_finish.max(r.finish_s);
         self.hash = fnv1a(self.hash, canonical_line(r).as_bytes());
@@ -412,6 +478,25 @@ impl Aggregator {
         self.stream.total_cost
     }
 
+    /// Fraction of all requests that met their class's TTFT target
+    /// (NaN on an empty run, matching the summary conventions).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.stream.count == 0 {
+            return f64::NAN;
+        }
+        self.stream.slo_met as f64 / self.stream.count as f64
+    }
+
+    /// Per-tenant running summaries, keyed by tenant index. Maintained
+    /// in both aggregation modes (bounded by the number of classes).
+    pub fn per_tenant(&self) -> &BTreeMap<usize, TenantStats> {
+        &self.stream.per_tenant
+    }
+
+    pub fn tenant_stats(&self, tenant: usize) -> Option<&TenantStats> {
+        self.stream.per_tenant.get(&tenant)
+    }
+
     /// Requests per second of real engine compute.
     pub fn engine_throughput(&self) -> f64 {
         let wall = self.stream.engine_wall_sum;
@@ -524,6 +609,8 @@ mod tests {
             instance: 0,
             batch: 1 + id,
             concurrency: 1 + id,
+            tenant: id % 2,
+            slo_ok: id % 2 == 0,
         }
     }
 
@@ -550,6 +637,54 @@ mod tests {
         assert_eq!(a.cold_paid(), 2);
         assert!((a.makespan_s() - 11.0).abs() < 1e-12);
         assert!((a.records[1].e2e_s() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_tenant_summaries_and_attainment() {
+        for mut a in [Aggregator::default(), Aggregator::streaming()] {
+            for id in 0..10 {
+                a.push(rec(id, id as f64));
+            }
+            // rec(): even ids are tenant 0 with slo_ok, odd ids tenant 1 without
+            assert!((a.slo_attainment() - 0.5).abs() < 1e-12);
+            assert_eq!(a.per_tenant().len(), 2);
+            let t0 = a.tenant_stats(0).unwrap();
+            let t1 = a.tenant_stats(1).unwrap();
+            assert_eq!((t0.count, t0.slo_met), (5, 5));
+            assert_eq!((t1.count, t1.slo_met), (5, 0));
+            assert!((t0.attainment() - 1.0).abs() < 1e-12);
+            assert!((t1.attainment() - 0.0).abs() < 1e-12);
+            assert_eq!(t0.total_cost, 0.0 + 2.0 + 4.0 + 6.0 + 8.0);
+            assert_eq!(t1.total_cost, 1.0 + 3.0 + 5.0 + 7.0 + 9.0);
+            // ttft_s = 1 + id → tenant-0 mean over {1,3,5,7,9} = 5
+            assert!((t0.mean_ttft_s() - 5.0).abs() < 1e-12);
+            assert_eq!(t1.max_ttft_s(), 10.0);
+            // the per-tenant costs partition the run's total
+            let sum: f64 = a.per_tenant().values().map(|t| t.total_cost).sum();
+            assert!((sum - a.total_cost()).abs() < 1e-12);
+            assert!(a.tenant_stats(7).is_none());
+        }
+        // empty aggregators: NaN by convention, no tenants
+        let empty = Aggregator::default();
+        assert!(empty.slo_attainment().is_nan());
+        assert!(empty.per_tenant().is_empty());
+    }
+
+    #[test]
+    fn canonical_covers_tenant_and_slo_fields() {
+        let mut a = Aggregator::default();
+        a.push(rec(0, 1.0));
+        assert!(a.canonical().contains("tenant=0 slo=1"));
+        let mut b = Aggregator::default();
+        let mut r = rec(0, 1.0);
+        r.tenant = 3;
+        b.push(r);
+        assert_ne!(a.canonical_hash(), b.canonical_hash());
+        let mut c = Aggregator::default();
+        let mut r = rec(0, 1.0);
+        r.slo_ok = false;
+        c.push(r);
+        assert_ne!(a.canonical_hash(), c.canonical_hash());
     }
 
     #[test]

@@ -28,6 +28,10 @@ pub struct BillingEntry {
     pub mem_mb: f64,
     pub duration_s: f64,
     pub rate_per_mb_s: f64,
+    /// Tenant the occupancy is attributed to; `None` for platform-side
+    /// capacity nobody requested (pre-warm idle) and for meters used
+    /// outside a tenant context.
+    pub tenant: Option<usize>,
 }
 
 impl BillingEntry {
@@ -40,6 +44,11 @@ impl BillingEntry {
 #[derive(Debug, Clone, Default)]
 pub struct BillingMeter {
     entries: Vec<BillingEntry>,
+    /// Ledger length right after the last `merge`. Marks taken before
+    /// a merge are poisoned by it — the merged entries land *after*
+    /// them, so `total_since` would double-count costs the other meter
+    /// already reported. `*_since` refuses marks below this floor.
+    merged_floor: usize,
 }
 
 impl BillingMeter {
@@ -54,8 +63,25 @@ impl BillingMeter {
         duration_s: f64,
         rate_per_mb_s: f64,
     ) {
+        self.charge_for(component, mem_mb, duration_s, rate_per_mb_s, None);
+    }
+
+    /// [`BillingMeter::charge`] with tenant attribution. `PrewarmIdle`
+    /// is platform capacity, never a request's occupancy, so it is
+    /// force-untagged regardless of the caller's tenant context — this
+    /// is what keeps the ledger identity
+    /// `total == Σ_tenant(request costs) + PrewarmIdle` exact.
+    pub fn charge_for(
+        &mut self,
+        component: CostComponent,
+        mem_mb: f64,
+        duration_s: f64,
+        rate_per_mb_s: f64,
+        tenant: Option<usize>,
+    ) {
         debug_assert!(mem_mb >= 0.0 && duration_s >= 0.0 && rate_per_mb_s >= 0.0);
-        self.entries.push(BillingEntry { component, mem_mb, duration_s, rate_per_mb_s });
+        let tenant = if component == CostComponent::PrewarmIdle { None } else { tenant };
+        self.entries.push(BillingEntry { component, mem_mb, duration_s, rate_per_mb_s, tenant });
     }
 
     pub fn total(&self) -> f64 {
@@ -68,7 +94,15 @@ impl BillingMeter {
     }
 
     /// Sum of entry costs appended since `mark` (per-request deltas).
+    /// Panics on marks taken before the last `merge`: the merge
+    /// spliced foreign entries in after them, so the delta would
+    /// double-count costs the source meter already accounts for.
     pub fn total_since(&self, mark: usize) -> f64 {
+        assert!(
+            mark >= self.merged_floor,
+            "mark {mark} predates a merge (floor {}); re-mark after merging",
+            self.merged_floor
+        );
         self.entries[mark..].iter().map(BillingEntry::cost).sum()
     }
 
@@ -78,6 +112,11 @@ impl BillingMeter {
     /// request is the first to use a pre-warmed instance) out of that
     /// request's cost attribution.
     pub fn component_total_since(&self, mark: usize, c: CostComponent) -> f64 {
+        assert!(
+            mark >= self.merged_floor,
+            "mark {mark} predates a merge (floor {}); re-mark after merging",
+            self.merged_floor
+        );
         self.entries[mark..]
             .iter()
             .filter(|e| e.component == c)
@@ -97,12 +136,36 @@ impl BillingMeter {
         self.entries.iter().filter(|e| e.component == c).map(BillingEntry::cost).sum()
     }
 
+    /// Cost attributed to one tenant across the ledger.
+    pub fn tenant_total(&self, tenant: usize) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| e.tenant == Some(tenant))
+            .map(BillingEntry::cost)
+            .sum()
+    }
+
+    /// Attributed cost per tenant; `None` collects the untagged
+    /// remainder (pre-warm idle and any tenant-free charges).
+    pub fn by_tenant(&self) -> BTreeMap<Option<usize>, f64> {
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            *out.entry(e.tenant).or_insert(0.0) += e.cost();
+        }
+        out
+    }
+
     pub fn entries(&self) -> &[BillingEntry] {
         &self.entries
     }
 
+    /// Splice another meter's entries into this ledger. Component,
+    /// tenant and grand totals add exactly; any mark taken on `self`
+    /// *before* the merge is invalidated (see [`BillingMeter::
+    /// total_since`]) — re-mark afterwards.
     pub fn merge(&mut self, other: &BillingMeter) {
         self.entries.extend(other.entries.iter().cloned());
+        self.merged_floor = self.entries.len();
     }
 }
 
@@ -167,5 +230,70 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.entries().len(), 2);
         assert_eq!(a.total(), 3.0);
+    }
+
+    #[test]
+    fn merge_preserves_component_and_tenant_totals() {
+        let mut a = BillingMeter::new();
+        a.charge_for(CostComponent::MainCpu, 10.0, 1.0, 1.0, Some(0));
+        a.charge(CostComponent::PrewarmIdle, 5.0, 1.0, 1.0);
+        let mut b = BillingMeter::new();
+        b.charge_for(CostComponent::MainCpu, 7.0, 1.0, 1.0, Some(1));
+        b.charge_for(CostComponent::MainGpu, 2.0, 1.0, 3.0, Some(0));
+        let (at, bt) = (a.total(), b.total());
+        let mut want = a.by_component();
+        for (c, v) in b.by_component() {
+            *want.entry(c).or_insert(0.0) += v;
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), at + bt);
+        assert_eq!(a.by_component(), want);
+        assert_eq!(a.tenant_total(0), 10.0 + 6.0);
+        assert_eq!(a.tenant_total(1), 7.0);
+        assert_eq!(a.by_tenant()[&None], 5.0);
+    }
+
+    #[test]
+    fn post_merge_marks_attribute_cleanly() {
+        let mut a = BillingMeter::new();
+        a.charge(CostComponent::Other, 1.0, 1.0, 1.0);
+        let mut b = BillingMeter::new();
+        b.charge(CostComponent::PrewarmIdle, 100.0, 1.0, 1.0);
+        a.merge(&b);
+        // a mark taken after the merge sees only what follows it
+        let mark = a.mark();
+        a.charge(CostComponent::MainCpu, 3.0, 1.0, 1.0);
+        assert_eq!(a.total_since(mark), 3.0);
+        assert_eq!(a.component_total_since(mark, CostComponent::PrewarmIdle), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "predates a merge")]
+    fn pre_merge_mark_cannot_double_count() {
+        let mut a = BillingMeter::new();
+        a.charge(CostComponent::Other, 1.0, 1.0, 1.0);
+        let mark = a.mark();
+        let mut b = BillingMeter::new();
+        b.charge(CostComponent::MainGpu, 2.0, 1.0, 1.0);
+        a.merge(&b);
+        a.charge(CostComponent::MainCpu, 3.0, 1.0, 1.0);
+        // would report 2.0 + 3.0, double-counting b's entry — refused
+        a.total_since(mark);
+    }
+
+    #[test]
+    fn prewarm_idle_is_never_tenant_tagged() {
+        let mut m = BillingMeter::new();
+        m.charge_for(CostComponent::PrewarmIdle, 10.0, 1.0, 1.0, Some(3));
+        m.charge_for(CostComponent::MainCpu, 10.0, 1.0, 1.0, Some(3));
+        assert_eq!(m.tenant_total(3), 10.0);
+        assert_eq!(m.by_tenant()[&None], 10.0);
+        // the ledger identity: total == Σ tenant totals + untagged
+        let tagged: f64 = m
+            .by_tenant()
+            .iter()
+            .filter_map(|(t, v)| t.map(|_| *v))
+            .sum();
+        assert_eq!(m.total(), tagged + m.by_tenant()[&None]);
     }
 }

@@ -77,13 +77,17 @@ pub struct FunctionSpec {
 }
 
 /// One billed sub-interval of an instance's occupancy, with the
-/// memory specs already charged for it.
+/// memory specs already charged for it and the tenant that paid.
 #[derive(Debug, Clone, Copy)]
 struct BilledSpan {
     start: f64,
     end: f64,
     mem_mb: f64,
     gpu_mb: f64,
+    /// Tenant attributed for this sub-interval (`None` = platform
+    /// capacity / untagged). Spans only coalesce within one tenant, so
+    /// the set stays an exact per-tenant occupancy map.
+    tenant: Option<usize>,
 }
 
 /// One live function instance in the pool.
@@ -152,20 +156,24 @@ impl Instance {
         end: f64,
         mem_mb: f64,
         gpu_mb: f64,
+        tenant: Option<usize>,
     ) -> Vec<(f64, f64, f64)> {
         // Fast path — occupancy entirely past the last billed span
         // (spans are sorted and disjoint, so past-the-last means past
         // them all): the in-order common case. Bills the full spec and
-        // appends (or extends a touching same-spec tail) in O(1)
-        // instead of rebuilding the span set.
+        // appends (or extends a touching same-spec same-tenant tail)
+        // in O(1) instead of rebuilding the span set.
         if end > start && self.billed.last().map_or(true, |l| l.end <= start) {
             match self.billed.last_mut() {
                 Some(last)
-                    if start <= last.end && last.mem_mb == mem_mb && last.gpu_mb == gpu_mb =>
+                    if start <= last.end
+                        && last.mem_mb == mem_mb
+                        && last.gpu_mb == gpu_mb
+                        && last.tenant == tenant =>
                 {
                     last.end = last.end.max(end);
                 }
-                _ => self.billed.push(BilledSpan { start, end, mem_mb, gpu_mb }),
+                _ => self.billed.push(BilledSpan { start, end, mem_mb, gpu_mb, tenant }),
             }
             return vec![(mem_mb, gpu_mb, end - start)];
         }
@@ -182,7 +190,7 @@ impl Instance {
             // uncovered gap before this overlap bills the full spec
             if cursor < lo {
                 pieces.push((mem_mb, gpu_mb, lo - cursor));
-                spans.push(BilledSpan { start: cursor, end: lo, mem_mb, gpu_mb });
+                spans.push(BilledSpan { start: cursor, end: lo, mem_mb, gpu_mb, tenant });
             }
             // covered part bills only the excess over its past spec
             let d_mem = (mem_mb - span.mem_mb).max(0.0);
@@ -191,7 +199,9 @@ impl Instance {
                 pieces.push((d_mem, d_gpu, hi - lo));
             }
             // split the span: outside parts keep their spec, the
-            // overlap rises to the max spec seen
+            // overlap rises to the max spec seen and stays attributed
+            // to the tenant that billed its base occupancy (the new
+            // tenant only ever paid the spec excess there)
             if span.start < lo {
                 spans.push(BilledSpan { end: lo, ..span });
             }
@@ -201,6 +211,7 @@ impl Instance {
                     end: hi,
                     mem_mb: span.mem_mb.max(mem_mb),
                     gpu_mb: span.gpu_mb.max(gpu_mb),
+                    tenant: span.tenant,
                 });
             }
             if span.end > hi {
@@ -210,20 +221,21 @@ impl Instance {
         }
         if cursor < end {
             pieces.push((mem_mb, gpu_mb, end - cursor));
-            spans.push(BilledSpan { start: cursor, end, mem_mb, gpu_mb });
+            spans.push(BilledSpan { start: cursor, end, mem_mb, gpu_mb, tenant });
         }
         spans.sort_by(|a, b| a.start.total_cmp(&b.start));
-        // coalesce touching spans with identical specs (a request's
-        // prefill + decode segments, back-to-back same-spec requests)
-        // so the set stays proportional to the distinct billing
-        // windows, not to the invocation count
+        // coalesce touching spans with identical specs and tenant (a
+        // request's prefill + decode segments, back-to-back same-spec
+        // requests) so the set stays proportional to the distinct
+        // billing windows, not to the invocation count
         let mut merged: Vec<BilledSpan> = Vec::with_capacity(spans.len());
         for span in spans {
             match merged.last_mut() {
                 Some(last)
                     if span.start <= last.end
                         && span.mem_mb == last.mem_mb
-                        && span.gpu_mb == last.gpu_mb =>
+                        && span.gpu_mb == last.gpu_mb
+                        && span.tenant == last.tenant =>
                 {
                     last.end = last.end.max(span.end);
                 }
@@ -332,7 +344,9 @@ fn settle_prewarm_span(
         return;
     };
     let until = until.max(from);
-    for (mem_mb, gpu_mb, dur) in inst.bill_occupancy(from, until, spec.mem_mb, spec.gpu_mb) {
+    // pre-warmed capacity is platform-side: spans and entries untagged
+    for (mem_mb, gpu_mb, dur) in inst.bill_occupancy(from, until, spec.mem_mb, spec.gpu_mb, None)
+    {
         if mem_mb > 0.0 {
             billing.charge(CostComponent::PrewarmIdle, mem_mb, dur, cpu_rate);
         }
@@ -343,7 +357,9 @@ fn settle_prewarm_span(
 }
 
 /// Charge one occupancy `[queue_exit, finished_at]` of `inst` under
-/// union billing (see [`Instance::bill_occupancy`]).
+/// union billing (see [`Instance::bill_occupancy`]), attributed to
+/// `tenant` in both the ledger entries and the billed-span set.
+#[allow(clippy::too_many_arguments)]
 fn charge_union(
     billing: &mut BillingMeter,
     inst: &mut Instance,
@@ -352,15 +368,16 @@ fn charge_union(
     gpu_rate: f64,
     queue_exit: f64,
     finished_at: f64,
+    tenant: Option<usize>,
 ) {
     for (mem_mb, gpu_mb, dur) in
-        inst.bill_occupancy(queue_exit, finished_at, spec.mem_mb, spec.gpu_mb)
+        inst.bill_occupancy(queue_exit, finished_at, spec.mem_mb, spec.gpu_mb, tenant)
     {
         if mem_mb > 0.0 {
-            billing.charge(spec.component, mem_mb, dur, cpu_rate);
+            billing.charge_for(spec.component, mem_mb, dur, cpu_rate, tenant);
         }
         if gpu_mb > 0.0 {
-            billing.charge(CostComponent::MainGpu, gpu_mb, dur, gpu_rate);
+            billing.charge_for(CostComponent::MainGpu, gpu_mb, dur, gpu_rate, tenant);
         }
     }
 }
@@ -416,6 +433,11 @@ pub struct Platform {
     pub billing: BillingMeter,
     rng: Rng,
     pub overhead_mode: InvokeOverhead,
+    /// Tenant context: invocations attribute their billed occupancy
+    /// (ledger entries + billed spans) to this tenant until it is
+    /// changed. The serving scheduler sets it per request; `None`
+    /// (the default) reproduces untagged single-stream billing.
+    tenant: Option<usize>,
 }
 
 impl Platform {
@@ -436,7 +458,15 @@ impl Platform {
             billing: BillingMeter::new(),
             rng: Rng::new(seed ^ 0x504c_4154), // "PLAT"
             overhead_mode: InvokeOverhead::Sampled,
+            tenant: None,
         }
+    }
+
+    /// Set the tenant the next invocations' billed occupancy is
+    /// attributed to (`None` clears the context). Pre-warm idle stays
+    /// untagged regardless — it is platform capacity, not a request's.
+    pub fn set_tenant(&mut self, tenant: Option<usize>) {
+        self.tenant = tenant;
     }
 
     pub fn network(&self) -> &NetworkModel {
@@ -616,6 +646,7 @@ impl Platform {
             self.gpu_rate,
             queue_exit,
             finished_at,
+            self.tenant,
         );
         pool.reindex(id, old_expiry, new_expiry);
         pool.min_span_end = pool.min_span_end.min(span_low);
@@ -695,6 +726,7 @@ impl Platform {
             self.gpu_rate,
             queue_exit,
             finished_at,
+            self.tenant,
         );
         pool.reindex(instance, old_expiry, new_expiry);
         pool.min_span_end = pool.min_span_end.min(span_low);
@@ -1398,6 +1430,29 @@ mod tests {
         let active = inv.finished_at - inv.service_start();
         let total = p.billing.total();
         assert!((total - idle - active * 2500.0).abs() < 1e-6, "total={total}");
+    }
+
+    #[test]
+    fn tenant_context_tags_occupancy_but_not_prewarm_idle() {
+        let mut p = platform();
+        p.prewarm_at("main", 0.0, 1);
+        p.set_tenant(Some(1));
+        let a = p.invoke_at("main", 10.0, 1.0, 0.0).unwrap();
+        p.set_tenant(Some(2));
+        p.invoke_at("main", a.finished_at + 1.0, 1.0, 0.0).unwrap();
+        p.set_tenant(None);
+        p.settle_prewarm_idle();
+        let by = p.billing.by_tenant();
+        // the provisioning idle window stays untagged even though a
+        // tenant's request triggered its settlement
+        let prewarm = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!(prewarm > 0.0);
+        assert!((by[&None] - prewarm).abs() < 1e-9, "untagged remainder must be PrewarmIdle");
+        let (t1, t2) = (p.billing.tenant_total(1), p.billing.tenant_total(2));
+        assert!(t1 > 0.0 && t2 > 0.0);
+        // the ledger identity: total == Σ tenant costs + PrewarmIdle
+        let total = p.billing.total();
+        assert!((total - (t1 + t2 + prewarm)).abs() <= 1e-9 * total.max(1.0));
     }
 
     #[test]

@@ -11,6 +11,10 @@ pub struct Request {
     pub arrival_s: f64,
     pub prompt: Prompt,
     pub n_out: usize,
+    /// Tenant/SLO-class index into the serving run's
+    /// `config::TenantRegistry`. Single-tenant generators tag 0 (the
+    /// anonymous class), which reproduces tenant-blind scheduling.
+    pub tenant: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -22,14 +26,61 @@ pub struct TraceSpec {
     pub seed: u64,
 }
 
+/// The arrival process of one request stream. Every trace generator
+/// draws its timestamps through [`ArrivalStream`] so inter-arrival
+/// semantics cannot drift between generators.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson arrivals at a mean rate (exponential gaps).
+    Poisson { rate_per_s: f64 },
+    /// Deterministic bursts: groups of `burst` requests, the k-th
+    /// group arriving together at `k * period_s`. Ignores the RNG.
+    Bursty { burst: usize, period_s: f64 },
+}
+
+/// Stateful iterator over an [`ArrivalProcess`]'s timestamps. Kept
+/// separate from the RNG so generators that interleave other draws
+/// (e.g. corpus sampling) on the same stream keep their exact
+/// historical byte sequence.
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    process: ArrivalProcess,
+    t: f64,
+    i: usize,
+}
+
+impl ArrivalStream {
+    pub fn new(process: ArrivalProcess) -> Self {
+        if let ArrivalProcess::Bursty { burst, .. } = process {
+            assert!(burst > 0, "bursty arrivals need burst >= 1");
+        }
+        ArrivalStream { process, t: 0.0, i: 0 }
+    }
+
+    /// Timestamp of the next request in the stream.
+    pub fn next_time(&mut self, rng: &mut Rng) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson { rate_per_s } => self.t += rng.exponential(rate_per_s),
+            ArrivalProcess::Bursty { burst, period_s } => {
+                self.t = (self.i / burst) as f64 * period_s;
+            }
+        }
+        self.i += 1;
+        self.t
+    }
+}
+
 /// Open-loop Poisson trace over a corpus.
 pub fn poisson_trace(corpus: &Corpus, spec: &TraceSpec) -> Vec<Request> {
     let mut rng = Rng::new(spec.seed ^ 0x7124_CE);
-    let mut t = 0.0;
+    let mut arrivals = ArrivalStream::new(ArrivalProcess::Poisson { rate_per_s: spec.rate_per_s });
     (0..spec.n_requests)
-        .map(|id| {
-            t += rng.exponential(spec.rate_per_s);
-            Request { id, arrival_s: t, prompt: corpus.sample(&mut rng, None), n_out: spec.n_out }
+        .map(|id| Request {
+            id,
+            arrival_s: arrivals.next_time(&mut rng),
+            prompt: corpus.sample(&mut rng, None),
+            n_out: spec.n_out,
+            tenant: 0,
         })
         .collect()
 }
@@ -44,14 +95,17 @@ pub fn poisson_trace_over(
     seed: u64,
 ) -> Vec<Request> {
     let mut rng = Rng::new(seed ^ 0x90_15_50);
-    let mut t = 0.0;
+    let mut arrivals = ArrivalStream::new(ArrivalProcess::Poisson { rate_per_s });
     prompts
         .iter()
         .cloned()
         .enumerate()
-        .map(|(id, prompt)| {
-            t += rng.exponential(rate_per_s);
-            Request { id, arrival_s: t, prompt, n_out }
+        .map(|(id, prompt)| Request {
+            id,
+            arrival_s: arrivals.next_time(&mut rng),
+            prompt,
+            n_out,
+            tenant: 0,
         })
         .collect()
 }
@@ -71,12 +125,15 @@ pub fn bursty_trace_over(
     n_out: usize,
 ) -> Vec<Request> {
     assert!(!prompts.is_empty() && burst > 0);
+    let mut rng = Rng::new(0); // bursty arrivals are deterministic
+    let mut arrivals = ArrivalStream::new(ArrivalProcess::Bursty { burst, period_s });
     (0..burst * bursts)
         .map(|id| Request {
             id,
-            arrival_s: (id / burst) as f64 * period_s,
+            arrival_s: arrivals.next_time(&mut rng),
             prompt: prompts[id % prompts.len()].clone(),
             n_out,
+            tenant: 0,
         })
         .collect()
 }
@@ -94,11 +151,14 @@ pub fn synthetic_trace(
     seed: u64,
 ) -> Vec<Request> {
     let mut rng = Rng::new(seed ^ 0x5CA1_AB1E);
-    let mut t = 0.0;
+    let mut arrivals = ArrivalStream::new(ArrivalProcess::Poisson { rate_per_s });
     (0..n_requests)
-        .map(|id| {
-            t += rng.exponential(rate_per_s);
-            Request { id, arrival_s: t, prompt: Prompt { text: String::new(), topic: 0 }, n_out }
+        .map(|id| Request {
+            id,
+            arrival_s: arrivals.next_time(&mut rng),
+            prompt: Prompt { text: String::new(), topic: 0 },
+            n_out,
+            tenant: 0,
         })
         .collect()
 }
@@ -110,8 +170,51 @@ pub fn batch_trace(prompts: &[Prompt], n_out: usize) -> Vec<Request> {
         .iter()
         .cloned()
         .enumerate()
-        .map(|(id, prompt)| Request { id, arrival_s: 0.0, prompt, n_out })
+        .map(|(id, prompt)| Request { id, arrival_s: 0.0, prompt, n_out, tenant: 0 })
         .collect()
+}
+
+/// One tenant class's slice of a multi-tenant workload.
+#[derive(Debug, Clone)]
+pub struct TenantTraceSpec {
+    /// Index into the serving run's `config::TenantRegistry`.
+    pub tenant: usize,
+    pub arrivals: ArrivalProcess,
+    pub n_requests: usize,
+    pub n_out: usize,
+}
+
+/// Interleave per-class request streams with distinct arrival
+/// processes into one trace over a fixed prompt set. Each class draws
+/// from its own seeded RNG stream (so adding a class never perturbs
+/// another's arrivals), streams merge by arrival time with ties broken
+/// by tenant index, and ids are reassigned sequentially in merged
+/// order (serve policies index precomputed profiles by request id).
+pub fn multi_tenant_trace_over(
+    prompts: &[Prompt],
+    specs: &[TenantTraceSpec],
+    seed: u64,
+) -> Vec<Request> {
+    assert!(!prompts.is_empty(), "multi-tenant trace needs prompts");
+    let mut all: Vec<Request> = Vec::new();
+    for (k, spec) in specs.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ 0x7E4A47 ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut arrivals = ArrivalStream::new(spec.arrivals);
+        for i in 0..spec.n_requests {
+            all.push(Request {
+                id: 0, // assigned after the merge below
+                arrival_s: arrivals.next_time(&mut rng),
+                prompt: prompts[i % prompts.len()].clone(),
+                n_out: spec.n_out,
+                tenant: spec.tenant,
+            });
+        }
+    }
+    all.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.tenant.cmp(&b.tenant)));
+    for (id, r) in all.iter_mut().enumerate() {
+        r.id = id;
+    }
+    all
 }
 
 #[cfg(test)]
@@ -176,6 +279,64 @@ mod tests {
         }
         let rate = 500.0 / a.last().unwrap().arrival_s;
         assert!((rate - 5.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn arrival_stream_matches_legacy_generators() {
+        // the shared helper reproduces both historical semantics
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let mut s = ArrivalStream::new(ArrivalProcess::Poisson { rate_per_s: 3.0 });
+        let mut t = 0.0;
+        for _ in 0..50 {
+            t += rng_a.exponential(3.0);
+            assert_eq!(s.next_time(&mut rng_b), t);
+        }
+        let mut b = ArrivalStream::new(ArrivalProcess::Bursty { burst: 4, period_s: 10.0 });
+        let got: Vec<f64> = (0..8).map(|_| b.next_time(&mut rng_b)).collect();
+        assert_eq!(got, vec![0.0, 0.0, 0.0, 0.0, 10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn multi_tenant_trace_interleaves_classes_deterministically() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = c.split(0, 6, 3);
+        let specs = [
+            TenantTraceSpec {
+                tenant: 0,
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 0.5 },
+                n_requests: 5,
+                n_out: 8,
+            },
+            TenantTraceSpec {
+                tenant: 1,
+                arrivals: ArrivalProcess::Bursty { burst: 3, period_s: 6.0 },
+                n_requests: 6,
+                n_out: 16,
+            },
+        ];
+        let a = multi_tenant_trace_over(&test, &specs, 11);
+        let b = multi_tenant_trace_over(&test, &specs, 11);
+        assert_eq!(a.len(), 11);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.prompt.text, y.prompt.text);
+        }
+        // merged order: non-decreasing arrivals, sequential ids
+        for (i, w) in a.windows(2).enumerate() {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+            assert_eq!(w[0].id, i);
+        }
+        assert_eq!(a.iter().filter(|r| r.tenant == 0).count(), 5);
+        assert_eq!(a.iter().filter(|r| r.tenant == 1).count(), 6);
+        // per-class n_out survives the merge
+        assert!(a.iter().all(|r| r.n_out == if r.tenant == 0 { 8 } else { 16 }));
+        // a different seed moves the Poisson class but not the bursty one
+        let c2 = multi_tenant_trace_over(&test, &specs, 12);
+        let bursty: Vec<f64> =
+            c2.iter().filter(|r| r.tenant == 1).map(|r| r.arrival_s).collect();
+        assert_eq!(bursty, vec![0.0, 0.0, 0.0, 6.0, 6.0, 6.0]);
     }
 
     #[test]

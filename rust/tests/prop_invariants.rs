@@ -308,8 +308,12 @@ fn prop_serve_ledger_equals_sum_of_request_costs() {
             ..ServeOptions::default()
         };
         let mut platform = Platform::new(&planner.platform, opts.seed);
-        let mut policy =
-            RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+        let mut policy = RemoePolicy {
+            engine: &mut engine,
+            planner: &planner,
+            predictor: &sps,
+            mem_history: None,
+        };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
 
         let ledger = platform.billing.total();
@@ -502,8 +506,12 @@ fn prop_autoscaled_serve_ledger_includes_prewarm_component() {
                 ..ServeOptions::default()
             };
             let mut platform = Platform::new(&planner.platform, opts.seed);
-            let mut policy =
-                RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+            let mut policy = RemoePolicy {
+                engine: &mut engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+            };
             let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
 
             let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
@@ -552,8 +560,12 @@ fn prop_batched_serve_is_deterministic_and_respects_capacity() {
             let trace = batch_trace(&test, 8);
             let opts = ServeOptions { batch_capacity: capacity, ..ServeOptions::default() };
             let mut platform = Platform::new(&planner.platform, opts.seed);
-            let mut policy =
-                RemoePolicy { engine: &mut engine, planner: &planner, predictor: &sps };
+            let mut policy = RemoePolicy {
+                engine: &mut engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+            };
             serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
         };
         let a = run();
@@ -722,6 +734,8 @@ fn prop_streaming_summaries_match_full_and_hash_is_rerun_stable() {
                         instance: r.below(8),
                         batch: 1 + r.below(4) as usize,
                         concurrency: 1 + r.below(6) as usize,
+                        tenant: r.below(3) as usize,
+                        slo_ok: r.below(2) == 0,
                     }
                 })
                 .collect()
@@ -826,5 +840,167 @@ fn prop_deployment_plan_from_planner_always_validates() {
                 }
             }
         }
+    });
+}
+
+#[test]
+fn prop_per_tenant_ledger_attribution_partitions_the_total() {
+    // Under randomized tenant mixes, quotas, priorities and batch
+    // capacities, the billing ledger partitions exactly into
+    // per-tenant attributed costs plus the untagged PrewarmIdle
+    // remainder, and every tenant's ledger cut equals the sum of its
+    // requests' record costs (the per-class cost attribution the
+    // multitenant experiment audits).
+    Prop::new("multi-tenant: ledger partitions by tenant").with_cases(20).check(|rng, case| {
+        use remoe::config::{SloClass, TenantClass, TenantRegistry};
+        use remoe::coordinator::{serve_on_platform, ServeOptions, SyntheticServePolicy};
+        use remoe::serverless::{CostComponent, InvokeOverhead, Platform};
+        use remoe::workload::corpus::{standard_corpora, Corpus};
+        use remoe::workload::trace::{multi_tenant_trace_over, ArrivalProcess, TenantTraceSpec};
+
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, prompts) = corpus.split(4, 6, 5);
+        let nclasses = small_size(rng, 1, 3);
+        let classes: Vec<TenantClass> = (0..nclasses)
+            .map(|k| TenantClass {
+                id: format!("t{k}"),
+                slo: SloClass {
+                    ttft_target_s: rng.range_f64(0.1, 20.0),
+                    priority: rng.below(4) as u8,
+                },
+                quota: rng.range_u(0, 3),
+                price_weight: 1.0,
+            })
+            .collect();
+        let specs: Vec<TenantTraceSpec> = (0..nclasses)
+            .map(|k| TenantTraceSpec {
+                tenant: k,
+                arrivals: if rng.bool(0.5) {
+                    ArrivalProcess::Poisson { rate_per_s: rng.range_f64(0.5, 4.0) }
+                } else {
+                    ArrivalProcess::Bursty {
+                        burst: rng.range_u(1, 4),
+                        period_s: rng.range_f64(0.5, 3.0),
+                    }
+                },
+                n_requests: small_size(rng, 1, 12),
+                n_out: 8,
+            })
+            .collect();
+        let trace = multi_tenant_trace_over(&prompts, &specs, case as u64 ^ 0x7E01);
+        let opts = ServeOptions {
+            main_instances: rng.range_u(1, 3),
+            batch_capacity: rng.range_u(1, 4),
+            overhead: InvokeOverhead::Expected,
+            tenants: TenantRegistry::new(classes),
+            ..ServeOptions::default()
+        };
+        let mut platform = Platform::new(&PlatformConfig::default(), opts.seed ^ case as u64);
+        let mut policy = SyntheticServePolicy::default();
+        let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+        assert_eq!(agg.len(), trace.len());
+
+        let total = platform.billing.total();
+        let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+        let by_tenant = platform.billing.by_tenant();
+        let tagged: f64 = by_tenant.iter().filter_map(|(t, v)| t.map(|_| *v)).sum();
+        let untagged = by_tenant.get(&None).copied().unwrap_or(0.0);
+        assert!(
+            (total - tagged - untagged).abs() <= 1e-9 * total.max(1.0),
+            "ledger {total} != tagged {tagged} + untagged {untagged}"
+        );
+        // no request bills untagged spans: the untagged remainder is
+        // exactly the platform-side PrewarmIdle component
+        assert!(
+            (untagged - prewarm).abs() <= 1e-9 * total.max(1.0),
+            "untagged {untagged} != prewarm {prewarm}"
+        );
+        // the global per-request identity, now per tenant class
+        assert!(
+            (agg.total_cost() - (total - prewarm)).abs() <= 1e-9 * total.max(1.0),
+            "Σ record costs != ledger - prewarm"
+        );
+        for tn in 0..nclasses {
+            let rec: f64 =
+                agg.records.iter().filter(|r| r.tenant == tn).map(|r| r.cost).sum();
+            let led = platform.billing.tenant_total(tn);
+            assert!(
+                (rec - led).abs() <= 1e-9 * led.max(1.0),
+                "tenant {tn}: Σ records {rec} != ledger cut {led}"
+            );
+            let ts = agg.tenant_stats(tn).expect("every class served >= 1 request");
+            assert_eq!(
+                ts.count as usize,
+                agg.records.iter().filter(|r| r.tenant == tn).count()
+            );
+            assert!((ts.total_cost - rec).abs() <= 1e-9 * rec.max(1.0));
+            assert!(ts.slo_met <= ts.count);
+        }
+    });
+}
+
+#[test]
+fn prop_multi_tenant_serve_is_deterministic() {
+    // The multi-tenant trace generator is rerun-stable, its merged
+    // stream is sorted with ids reassigned 0..n, and two independent
+    // serves of the same trace are byte-identical under the canonical
+    // serialization (which now covers tenant + SLO fields).
+    Prop::new("multi-tenant: canonical determinism").with_cases(10).check(|rng, case| {
+        use remoe::config::TenantRegistry;
+        use remoe::coordinator::{serve_on_platform, ServeOptions, SyntheticServePolicy};
+        use remoe::serverless::{InvokeOverhead, Platform};
+        use remoe::workload::corpus::{standard_corpora, Corpus};
+        use remoe::workload::trace::{multi_tenant_trace_over, ArrivalProcess, TenantTraceSpec};
+
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, prompts) = corpus.split(4, 6, 5);
+        let rate = rng.range_f64(0.5, 4.0);
+        let burst = rng.range_u(1, 4);
+        let n0 = small_size(rng, 1, 10);
+        let n1 = small_size(rng, 1, 10);
+        let specs = [
+            TenantTraceSpec {
+                tenant: 0,
+                arrivals: ArrivalProcess::Poisson { rate_per_s: rate },
+                n_requests: n0,
+                n_out: 8,
+            },
+            TenantTraceSpec {
+                tenant: 1,
+                arrivals: ArrivalProcess::Bursty { burst, period_s: 1.5 },
+                n_requests: n1,
+                n_out: 8,
+            },
+        ];
+        let seed = case as u64 ^ 0xD15C;
+        let trace_a = multi_tenant_trace_over(&prompts, &specs, seed);
+        let trace_b = multi_tenant_trace_over(&prompts, &specs, seed);
+        assert_eq!(trace_a.len(), n0 + n1);
+        for (i, (a, b)) in trace_a.iter().zip(&trace_b).enumerate() {
+            assert_eq!(a.id, i, "ids must be reassigned in merged order");
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tenant, b.tenant);
+            assert!(a.arrival_s == b.arrival_s, "generator not rerun-stable");
+        }
+        for w in trace_a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "merged trace must be time-sorted");
+        }
+
+        let tenants = TenantRegistry::parse_spec("t0,quota=2;t1,prio=3,ttft=2.0").unwrap();
+        let run = |trace: &[remoe::workload::trace::Request]| {
+            let opts = ServeOptions {
+                batch_capacity: 2,
+                overhead: InvokeOverhead::Expected,
+                tenants: tenants.clone(),
+                ..ServeOptions::default()
+            };
+            let mut platform = Platform::new(&PlatformConfig::default(), opts.seed);
+            let mut policy = SyntheticServePolicy::default();
+            serve_on_platform(&mut policy, trace, &mut platform, &opts).unwrap()
+        };
+        let a = run(&trace_a);
+        let b = run(&trace_b);
+        assert_eq!(a.canonical(), b.canonical(), "multi-tenant serve must be deterministic");
+        assert_eq!(a.canonical_hash(), b.canonical_hash());
     });
 }
