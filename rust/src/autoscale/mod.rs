@@ -21,13 +21,14 @@
 //! idle instances
 //! ([`Platform::retire_idle_at`](crate::serverless::Platform::retire_idle_at)).
 //!
-//! Three controllers ship ([`policies`]):
+//! Four controllers ship ([`policies`]):
 //!
 //! | policy | behaviour |
 //! |---|---|
 //! | [`Reactive`] | null policy — today's behaviour: spawn cold on first invoke, die by keep-alive |
 //! | [`FixedWarmPool`] | MMP-style static floor per function |
-//! | [`Predictive`] | sliding-window arrival-rate estimate × SPS-informed per-function demand drives the floor; scales to zero when the window empties |
+//! | [`Predictive`] | sliding-window arrival-rate estimate × SPS-informed per-function demand drives the floor; holds the floor one window past last activity, then scales to zero |
+//! | [`ExpertPrefetch`] | per-expert EWMA popularity (admission demands + decode-segment activity) pre-warms hot experts one segment ahead and demotes cold experts to scale-to-zero |
 //!
 //! Every [`ServePolicy`](crate::coordinator::ServePolicy) — Remoe and
 //! the monolithic baselines — serves through the same contract, so
@@ -35,7 +36,7 @@
 
 pub mod policies;
 
-pub use policies::{FixedWarmPool, Predictive, Reactive};
+pub use policies::{ExpertPrefetch, FixedWarmPool, Predictive, Reactive};
 
 use crate::serverless::Platform;
 
@@ -68,6 +69,13 @@ pub trait ScalingPolicy {
     /// the observed demand stream.
     fn observe_arrival(&mut self, t: f64, demands: &[(String, usize)]);
 
+    /// Observed expert activity at virtual time `t`: `(function,
+    /// activation mass)` for the decode segment that just started — the
+    /// realised counterpart to the predicted demands of
+    /// [`observe_arrival`](ScalingPolicy::observe_arrival). Policies
+    /// that don't track per-expert popularity ignore it.
+    fn observe_activity(&mut self, _t: f64, _activity: &[(String, f64)]) {}
+
     /// Desired warm floor for `f` at tick time `t`; `None` holds (no
     /// scaling action either way — the reactive null policy).
     fn target(&mut self, t: f64, f: &FunctionView) -> Option<usize>;
@@ -84,6 +92,9 @@ pub enum AutoscalePolicy {
     /// Sliding-window arrival-rate × observed demand per arrival drive
     /// the floor; see [`policies::Predictive`].
     Predictive { window_s: f64, lookahead_s: f64 },
+    /// Per-expert EWMA popularity with hot promotion and cold
+    /// demotion; see [`policies::ExpertPrefetch`].
+    ExpertPrefetch { decay_s: f64, lookahead_s: f64, min_share: f64 },
 }
 
 impl AutoscalePolicy {
@@ -93,11 +104,18 @@ impl AutoscalePolicy {
         AutoscalePolicy::Predictive { window_s: 60.0, lookahead_s: 10.0 }
     }
 
+    /// The expert-prefetch controller at its default horizon (90 s
+    /// EWMA time constant, 5 s lookahead, 2% demotion share).
+    pub fn expert_prefetch() -> AutoscalePolicy {
+        AutoscalePolicy::ExpertPrefetch { decay_s: 90.0, lookahead_s: 5.0, min_share: 0.02 }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             AutoscalePolicy::Reactive => "reactive",
             AutoscalePolicy::FixedWarmPool { .. } => "warmpool",
             AutoscalePolicy::Predictive { .. } => "predictive",
+            AutoscalePolicy::ExpertPrefetch { .. } => "expert_prefetch",
         }
     }
 
@@ -109,11 +127,14 @@ impl AutoscalePolicy {
             AutoscalePolicy::Predictive { window_s, lookahead_s } => {
                 Box::new(Predictive::new(window_s, lookahead_s))
             }
+            AutoscalePolicy::ExpertPrefetch { decay_s, lookahead_s, min_share } => {
+                Box::new(ExpertPrefetch::new(decay_s, lookahead_s, min_share))
+            }
         }
     }
 
     /// Parse a CLI spec: `reactive`, `warmpool[:floor]`,
-    /// `predictive[:window_s]`.
+    /// `predictive[:window_s]`, `prefetch[:decay_s]`.
     pub fn parse(s: &str) -> anyhow::Result<AutoscalePolicy> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
@@ -139,9 +160,19 @@ impl AutoscalePolicy {
                 }
                 Ok(p)
             }
+            "prefetch" | "expert_prefetch" => {
+                let mut p = AutoscalePolicy::expert_prefetch();
+                if let (Some(a), AutoscalePolicy::ExpertPrefetch { decay_s, .. }) = (arg, &mut p)
+                {
+                    *decay_s = a
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad prefetch decay {a:?}"))?;
+                }
+                Ok(p)
+            }
             other => anyhow::bail!(
-                "unknown autoscale policy {other:?}; use reactive, warmpool[:floor] or \
-                 predictive[:window_s]"
+                "unknown autoscale policy {other:?}; use reactive, warmpool[:floor], \
+                 predictive[:window_s] or prefetch[:decay_s]"
             ),
         }
     }
@@ -167,6 +198,10 @@ impl Autoscaler {
 
     pub fn observe_arrival(&mut self, t: f64, demands: &[(String, usize)]) {
         self.policy.observe_arrival(t, demands);
+    }
+
+    pub fn observe_activity(&mut self, t: f64, activity: &[(String, f64)]) {
+        self.policy.observe_activity(t, activity);
     }
 
     /// One control tick at virtual time `t`: reconcile every deployed
@@ -245,8 +280,18 @@ mod tests {
             AutoscalePolicy::Predictive { window_s, .. } => assert_eq!(window_s, 30.0),
             other => panic!("{other:?}"),
         }
+        assert_eq!(
+            AutoscalePolicy::parse("prefetch").unwrap(),
+            AutoscalePolicy::expert_prefetch()
+        );
+        match AutoscalePolicy::parse("expert_prefetch:45").unwrap() {
+            AutoscalePolicy::ExpertPrefetch { decay_s, .. } => assert_eq!(decay_s, 45.0),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(AutoscalePolicy::expert_prefetch().name(), "expert_prefetch");
         assert!(AutoscalePolicy::parse("bogus").is_err());
         assert!(AutoscalePolicy::parse("warmpool:x").is_err());
+        assert!(AutoscalePolicy::parse("prefetch:x").is_err());
     }
 
     #[test]
@@ -293,12 +338,17 @@ mod tests {
         assert!(r.prewarmed >= 1);
         let warm = p.warm_count_at("f", 5.0);
         assert!(warm >= 1);
-        // once the window empties (last arrival at 1.6, window 60) the
-        // floor drops to zero and the still-live idle capacity (warm
-        // until ~68) is retired
+        // the window empties at 61.6, but the floor is held for one
+        // further window past the last arrival (cold-window thrash
+        // fix), so the tick keeps the pool warm instead of retiring it
         let r2 = scaler.tick(&mut p, 65.0);
-        assert_eq!(r2.retired, warm, "stale warm pool must drain");
-        assert_eq!(p.warm_count_at("f", 66.0), 0);
+        assert_eq!(r2, TickReport::default(), "held floor must not churn the pool");
+        assert_eq!(p.warm_count_at("f", 66.0), warm);
+        // past the hold horizon (1.6 + 2 × 60) the floor drops to zero
+        // and the still-held idle capacity is retired
+        let r3 = scaler.tick(&mut p, 124.0);
+        assert_eq!(r3.retired, warm, "stale warm pool must drain");
+        assert_eq!(p.warm_count_at("f", 124.5), 0);
         // the pre-warmed instances paid cold start + idle into the
         // dedicated component
         assert!(p.billing.component_total(CostComponent::PrewarmIdle) > 0.0);

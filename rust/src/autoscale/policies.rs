@@ -1,10 +1,13 @@
 //! The shipped scale controllers: [`Reactive`] (null),
 //! [`FixedWarmPool`] (static floor), [`Predictive`] (sliding-window
-//! arrival-rate × observed per-function demand).
+//! arrival-rate × observed per-function demand), and
+//! [`ExpertPrefetch`] (per-expert EWMA popularity with hot/cold
+//! promotion and demotion).
 
 use std::collections::{BTreeMap, VecDeque};
 
 use super::{FunctionView, ScalingPolicy};
+use crate::prediction::popularity::ExpertPopularity;
 
 /// Null policy: never pre-warms, never retires — exactly the PR 2
 /// behaviour (instances spawn cold on first invoke and die by
@@ -55,14 +58,22 @@ impl ScalingPolicy for FixedWarmPool {
 /// floor = ceil(rate × (cold_start + lookahead) / batch_capacity)
 /// ```
 ///
-/// capped by the instance limit. An empty window drives the floor to
-/// zero, so idle capacity is also *retired* ahead of its keep-alive —
-/// the reactive scale-control half of the policy.
+/// capped by the instance limit. An empty window does *not* scale to
+/// zero immediately: the last computed floor is held for one further
+/// window past the newest observed activity (so a gap on the order of
+/// the window — a burst period, a drift-phase boundary — no longer
+/// retires the pool one tick before the next burst lands and
+/// manufactures cold starts). Only once `t - last_activity > 2·window`
+/// does the floor drop to zero and idle capacity retire ahead of its
+/// keep-alive — the reactive scale-control half of the policy.
 pub struct Predictive {
     pub window_s: f64,
     pub lookahead_s: f64,
     /// Per-function (arrival time, instance demand) inside the window.
     arrivals: BTreeMap<String, VecDeque<(f64, f64)>>,
+    /// Per-function (newest activity, last nonzero floor): the
+    /// hold-one-window state consulted when the window is empty.
+    held: BTreeMap<String, (f64, usize)>,
 }
 
 impl Predictive {
@@ -71,6 +82,7 @@ impl Predictive {
             window_s: window_s.max(1e-9),
             lookahead_s: lookahead_s.max(0.0),
             arrivals: BTreeMap::new(),
+            held: BTreeMap::new(),
         }
     }
 
@@ -103,9 +115,95 @@ impl ScalingPolicy for Predictive {
     fn target(&mut self, t: f64, f: &FunctionView) -> Option<usize> {
         let mass = self.window_mass(&f.name, t);
         if mass <= 0.0 {
-            return Some(0);
+            // Hold the last floor for one extra window past the newest
+            // activity before retiring to zero (cold-window thrash fix).
+            return match self.held.get(&f.name) {
+                Some(&(last, floor)) if t - last <= 2.0 * self.window_s => {
+                    Some(floor.max(1).min(f.limit))
+                }
+                _ => Some(0),
+            };
         }
         let rate = mass / self.window_s;
+        let expected = rate * (f.cold_start_s + self.lookahead_s);
+        let per_instance = f.batch_capacity.max(1) as f64;
+        let floor = (expected / per_instance).ceil() as usize;
+        let floor = floor.max(1).min(f.limit);
+        let newest = self
+            .arrivals
+            .get(&f.name)
+            .and_then(|q| q.back().map(|&(ts, _)| ts))
+            .unwrap_or(t);
+        self.held.insert(f.name.clone(), (newest, floor));
+        Some(floor)
+    }
+}
+
+/// Expert-level prefetch: one EWMA popularity tracker over every
+/// deployed function (main + per-layer expert functions), fed both the
+/// SPS-informed replica demands at admission and the actual
+/// decode-segment activation mass via
+/// [`observe_activity`](ScalingPolicy::observe_activity). The floor
+/// rule is per expert:
+///
+/// * never observed → `None` (hold; nothing is pre-warmed
+///   speculatively before the expert first activates),
+/// * popularity share below `min_share` → `0` (cold experts are
+///   demoted to scale-to-zero, even while their keep-alive would have
+///   carried them),
+/// * otherwise cover the EWMA rate over one provisioning horizon, one
+///   decode segment ahead:
+///   `ceil(rate × (cold_start + lookahead) / batch_capacity)`,
+///   at least 1, capped by the replica limit.
+///
+/// Because the EWMA decays smoothly (time constant `decay_s`) instead
+/// of a hard window, hot experts stay warm across inter-burst gaps and
+/// drift-phase boundaries, while experts the topic mixture has drifted
+/// away from bleed share and hit the demotion threshold.
+pub struct ExpertPrefetch {
+    pub lookahead_s: f64,
+    pub min_share: f64,
+    tracker: ExpertPopularity,
+}
+
+impl ExpertPrefetch {
+    pub fn new(decay_s: f64, lookahead_s: f64, min_share: f64) -> ExpertPrefetch {
+        ExpertPrefetch {
+            lookahead_s: lookahead_s.max(0.0),
+            min_share: min_share.clamp(0.0, 1.0),
+            tracker: ExpertPopularity::new(decay_s),
+        }
+    }
+
+    /// Read-only view of the popularity tracker (determinism probes).
+    pub fn tracker(&self) -> &ExpertPopularity {
+        &self.tracker
+    }
+}
+
+impl ScalingPolicy for ExpertPrefetch {
+    fn name(&self) -> &'static str {
+        "expert_prefetch"
+    }
+
+    fn observe_arrival(&mut self, t: f64, demands: &[(String, usize)]) {
+        for (name, d) in demands {
+            self.tracker.observe(t, name, *d as f64);
+        }
+    }
+
+    fn observe_activity(&mut self, t: f64, activity: &[(String, f64)]) {
+        for (name, w) in activity {
+            self.tracker.observe(t, name, *w);
+        }
+    }
+
+    fn target(&mut self, t: f64, f: &FunctionView) -> Option<usize> {
+        let rate = self.tracker.rate_at(&f.name, t)?;
+        let share = self.tracker.share_at(&f.name, t).unwrap_or(0.0);
+        if share < self.min_share {
+            return Some(0);
+        }
         let expected = rate * (f.cold_start_s + self.lookahead_s);
         let per_instance = f.batch_capacity.max(1) as f64;
         let floor = (expected / per_instance).ceil() as usize;
@@ -151,8 +249,86 @@ mod tests {
         assert_eq!(p.target(1.0, &view(0, usize::MAX, 1, 5.0)), Some(2));
         // capacity 4 folds them into one instance
         assert_eq!(p.target(1.0, &view(0, usize::MAX, 4, 5.0)), Some(1));
-        // window slid past both arrivals → scale to zero
-        assert_eq!(p.target(20.0, &view(1, usize::MAX, 1, 5.0)), Some(0));
+        // window slid past both arrivals, but the floor is held for one
+        // extra window past the newest arrival (t − 1 ≤ 2 × 10)
+        assert_eq!(p.target(20.0, &view(1, usize::MAX, 1, 5.0)), Some(1));
+        // past the hold horizon → scale to zero
+        assert_eq!(p.target(22.0, &view(1, usize::MAX, 1, 5.0)), Some(0));
+    }
+
+    #[test]
+    fn predictive_holds_floor_across_window_sized_gap() {
+        // regression: a bursty trace with a gap exactly equal to the
+        // window used to scale to zero one tick before the next burst
+        // re-arrived, manufacturing a cold start per burst
+        let mut p = Predictive::new(10.0, 5.0);
+        p.observe_arrival(0.0, &[("f".into(), 1)]);
+        p.observe_arrival(1.0, &[("f".into(), 1)]);
+        assert_eq!(p.target(1.0, &view(0, usize::MAX, 1, 5.0)), Some(2));
+        // a control tick lands in the inter-burst gap with an empty
+        // window (11.5 − 1 > 10): pre-fix this returned Some(0)
+        assert_eq!(p.target(11.5, &view(2, usize::MAX, 1, 5.0)), Some(2));
+        // the next burst at t = 12 therefore lands on warm capacity
+        p.observe_arrival(12.0, &[("f".into(), 1)]);
+        p.observe_arrival(13.0, &[("f".into(), 1)]);
+        assert_eq!(p.target(13.0, &view(2, usize::MAX, 1, 5.0)), Some(2));
+        // the hold is re-anchored to the newest activity: only once the
+        // gap exceeds two windows does the floor drop to zero
+        assert_eq!(p.target(33.0, &view(2, usize::MAX, 1, 5.0)), Some(2));
+        assert_eq!(p.target(33.1, &view(2, usize::MAX, 1, 5.0)), Some(0));
+        // the held floor is still capped by the instance limit
+        p.observe_arrival(40.0, &[("f".into(), 1)]);
+        p.observe_arrival(41.0, &[("f".into(), 1)]);
+        assert_eq!(p.target(41.0, &view(0, usize::MAX, 1, 5.0)), Some(2));
+        assert_eq!(p.target(52.0, &view(2, 1, 1, 5.0)), Some(1));
+    }
+
+    fn named(name: &str, limit: usize) -> FunctionView {
+        FunctionView {
+            name: name.into(),
+            warm: 0,
+            limit,
+            batch_capacity: 1,
+            cold_start_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn expert_prefetch_promotes_hot_and_demotes_cold() {
+        let mut p = ExpertPrefetch::new(60.0, 5.0, 0.05);
+        // never observed → hold (no speculative pre-warm)
+        assert_eq!(p.target(0.0, &named("hot", 8)), None);
+        for k in 0..12 {
+            p.observe_arrival(k as f64, &[("hot".into(), 2)]);
+        }
+        p.observe_activity(0.0, &[("cold".into(), 0.01)]);
+        // the hot expert earns a positive floor, capped by the limit
+        let floor = p.target(11.0, &named("hot", 8)).unwrap();
+        assert!((1..=8).contains(&floor), "floor {floor}");
+        assert_eq!(p.target(11.0, &named("hot", 2)), Some(2.min(floor)));
+        // the sliver-share expert is demoted to scale-to-zero
+        assert_eq!(p.target(11.0, &named("cold", 8)), Some(0));
+        // the EWMA holds the hot floor across an inter-burst gap
+        // (30 s on a 60 s time constant keeps ~60% of the mass)
+        assert!(p.target(41.0, &named("hot", 8)).unwrap() >= 1);
+        assert!(!p.tracker().canonical().is_empty());
+    }
+
+    #[test]
+    fn expert_prefetch_share_drifts_away_from_stale_experts() {
+        let mut p = ExpertPrefetch::new(30.0, 5.0, 0.05);
+        // phase 1: expert "a" is hot
+        for k in 0..10 {
+            p.observe_arrival(k as f64, &[("a".into(), 3)]);
+        }
+        assert!(p.target(9.0, &named("a", 8)).unwrap() >= 1);
+        // phase 2: the topic mixture drifts — only "b" fires
+        for k in 10..80 {
+            p.observe_arrival(k as f64, &[("b".into(), 3)]);
+        }
+        // "a" bled share past the demotion threshold, "b" is promoted
+        assert_eq!(p.target(80.0, &named("a", 8)), Some(0));
+        assert!(p.target(80.0, &named("b", 8)).unwrap() >= 1);
     }
 
     #[test]

@@ -18,6 +18,6 @@ pub mod serve;
 pub use history::{build_history, ground_truth, prompt_ids, prompt_signature};
 pub use planner::{PlanOutput, Planner};
 pub use serve::{
-    serve_on_platform, serve_remoe, serve_remoe_with, RemoePolicy, RemoteLayerCall,
+    serve_on_platform, serve_remoe, serve_remoe_with, DriftReplan, RemoePolicy, RemoteLayerCall,
     ServeOptions, ServePolicy, ServicePlan, SyntheticServePolicy,
 };

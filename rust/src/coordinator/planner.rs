@@ -8,7 +8,7 @@ use crate::allocation::{MemEstimator, Mmp, MmpDecision};
 use crate::config::{CostDims, PlatformConfig, SlaConfig, SystemConfig};
 use crate::costmodel::{CostModel, DeploymentPlan, LatencyModel, RequestProfile};
 use crate::optimizer::{
-    decide_replicas, fit_exp_curve, solve, DualSolution, ExpCurve, GTerm, LayerReplicaInput,
+    decide_replicas_from, fit_exp_curve, solve, DualSolution, ExpCurve, GTerm, LayerReplicaInput,
     LayerTerm,
 };
 use crate::partition::lpt;
@@ -112,6 +112,24 @@ impl Planner {
         n_out: usize,
         history: Option<&MemEstimator>,
     ) -> PlanOutput {
+        self.plan_with_memory_warm(dist, n_in, n_out, history, None)
+    }
+
+    /// [`Planner::plan_with_memory`] with a warm-started replica
+    /// decision: `warm` seeds every candidate's potential loop with the
+    /// previous request's per-layer replica counts (clamped into the
+    /// feasible band) instead of starting from the floors — the
+    /// incremental re-optimization path taken when expert popularity
+    /// drifts past the replan threshold mid-trace. `None` is identical
+    /// to `plan_with_memory`.
+    pub fn plan_with_memory_warm(
+        &self,
+        dist: &[Vec<f64>],
+        n_in: usize,
+        n_out: usize,
+        history: Option<&MemEstimator>,
+        warm: Option<&[usize]>,
+    ) -> PlanOutput {
         let t0 = Instant::now();
         let mmp = Mmp::new(&self.dims, &self.platform, &self.sla, self.cfg.epsilon);
         let candidates = mmp.feasible_ratios(n_in, n_out, 5);
@@ -130,7 +148,7 @@ impl Planner {
                 if scale > 1.0 && d.main_mem_mb <= decision.main_mem_mb {
                     continue; // catalog-capped, no new candidate
                 }
-                let out = self.plan_with_decision(d, dist, n_in, n_out, t0);
+                let out = self.plan_with_decision(d, dist, n_in, n_out, t0, warm);
                 tried.push((b, out.expected_cost));
                 if b == 0.0
                     && best_b0.as_ref().map_or(true, |cur| out.expected_cost < cur.expected_cost)
@@ -159,6 +177,7 @@ impl Planner {
     }
 
     /// One full pipeline pass (steps iii–v) at a fixed MMP decision.
+    /// `warm` optionally seeds the replica potential loop.
     fn plan_with_decision(
         &self,
         mmp_out: MmpDecision,
@@ -166,6 +185,7 @@ impl Planner {
         n_in: usize,
         n_out: usize,
         t0: Instant,
+        warm: Option<&[usize]>,
     ) -> PlanOutput {
         let layers = self.dims.layers;
         let topk = self.dims.topk;
@@ -254,8 +274,11 @@ impl Planner {
 
             let calc_so_far = t0.elapsed().as_secs_f64();
             let base = plan.clone();
-            let decision =
-                decide_replicas(&inputs, self.platform.zmax, self.sla.ttft_s, |z| {
+            let decision = decide_replicas_from(
+                &inputs,
+                self.platform.zmax,
+                self.sla.ttft_s,
+                |z| {
                     let mut cand = base.clone();
                     for l in 0..layers {
                         cand.replicas[l] = z[l];
@@ -275,7 +298,9 @@ impl Planner {
                     let lb = self.lat.evaluate(&cand, &profile, cold);
                     let cb = self.cost.evaluate(&cand, &profile, &lb, &self.lat);
                     (cb.total(), lb.ttft())
-                });
+                },
+                warm,
+            );
             plan.replicas = decision.z;
             plan.partitions = decision.partitions;
         }
@@ -399,6 +424,34 @@ mod tests {
             .cold
             .monolithic(p.dims.total_expert_mb() + p.dims.total_nonexpert_mb());
         assert!(out.cold_start_s < mono, "{} !< {}", out.cold_start_s, mono);
+    }
+
+    #[test]
+    fn warm_started_plan_stays_valid_and_comparable() {
+        let p = dsv2_planner();
+        let dist = skewed_dist(6, 16);
+        let fresh = p.plan(&dist, 128, 48);
+        let warm = p.plan_with_memory_warm(&dist, 128, 48, None, Some(&fresh.plan.replicas));
+        warm.plan.validate().unwrap();
+        assert_eq!(warm.plan.layers(), fresh.plan.layers());
+        assert_eq!(warm.plan.has_remote(), fresh.plan.has_remote());
+        // seeding the potential loop at the converged decision must not
+        // degrade the plan (wall-clock enters the cold-start overlap,
+        // so allow a sliver of slack rather than exact equality)
+        assert!(
+            warm.expected_cost <= fresh.expected_cost * 1.10 + 1e-9,
+            "warm {} vs fresh {}",
+            warm.expected_cost,
+            fresh.expected_cost
+        );
+        // a stale, oversized seed from a drifted trace is clamped into
+        // the feasible band instead of misbehaving
+        let stale = vec![p.platform.zmax + 3; 6];
+        let clamped = p.plan_with_memory_warm(&dist, 128, 48, None, Some(&stale));
+        clamped.plan.validate().unwrap();
+        for l in 0..clamped.plan.layers() {
+            assert!(clamped.plan.replicas[l] <= p.platform.zmax);
+        }
     }
 
     #[test]

@@ -72,12 +72,12 @@ use crate::config::TenantRegistry;
 use crate::costmodel::RequestProfile;
 use crate::metrics::{Aggregator, RequestRecord};
 use crate::model::{Backend, Engine};
-use crate::prediction::ActivationPredictor;
+use crate::prediction::{matrix_jsd, ActivationPredictor};
 use crate::serverless::{CostComponent, FunctionSpec, InvokeOverhead, Platform};
 use crate::workload::trace::Request;
 
 use super::history::{prompt_ids, prompt_signature};
-use super::planner::Planner;
+use super::planner::{PlanOutput, Planner};
 
 /// Scheduler knobs.
 #[derive(Debug, Clone)]
@@ -437,6 +437,21 @@ pub fn serve_on_platform(
                 platform.invoke_at(&name, t_dec, rl.decode_work_s, 0.0)?;
             }
         }
+        if autoscaling && !sp.remote.is_empty() {
+            // feed the realised decode-segment activation mass back to
+            // the controller as it becomes known — expert-popularity
+            // trackers key their pre-warm floors off it one decode
+            // segment ahead of the requests it will serve
+            let activity: Vec<(String, f64)> = sp
+                .remote
+                .iter()
+                .filter(|rl| rl.decode_work_s > 0.0)
+                .map(|rl| (expert_fn(rl.layer), rl.decode_work_s))
+                .collect();
+            if !activity.is_empty() {
+                scaler.observe_activity(decode_inv.started_at, &activity);
+            }
+        }
         // attribution: everything this request's invocations billed,
         // minus any pre-warm idle settlement that its first-use of a
         // pre-warmed instance happened to trigger — that capacity was
@@ -494,6 +509,39 @@ pub fn serve_on_platform(
     Ok(agg)
 }
 
+/// Drift-aware incremental replanning state for [`RemoePolicy`]
+/// (opt-in). The policy snapshots the predicted activation
+/// distribution behind its last full plan; while later predictions
+/// stay within `threshold` mean per-layer JSD of that snapshot, the
+/// cached plan is reused outright (CALCULATE ≈ 0). Once popularity
+/// drifts past the threshold, the planner re-runs *warm-started* from
+/// the previous per-layer replica counts
+/// ([`Planner::plan_with_memory_warm`]) instead of recomputing from
+/// the floors, and the snapshot advances.
+#[derive(Debug, Clone)]
+pub struct DriftReplan {
+    /// Mean per-layer JSD (nats, ≤ ln 2) beyond which a replan fires.
+    pub threshold: f64,
+    snapshot: Option<Vec<Vec<f64>>>,
+    last: Option<PlanOutput>,
+    /// Warm-started replans triggered by drift (plus the initial one).
+    pub replans: usize,
+    /// Requests served by reusing the cached plan.
+    pub reuses: usize,
+}
+
+impl DriftReplan {
+    pub fn new(threshold: f64) -> DriftReplan {
+        DriftReplan {
+            threshold: threshold.max(0.0),
+            snapshot: None,
+            last: None,
+            replans: 0,
+            reuses: 0,
+        }
+    }
+}
+
 /// Remoe as a [`ServePolicy`]: SPS prediction → planner → real engine
 /// execution → analytic service times on the measured routing.
 pub struct RemoePolicy<'a, B: Backend> {
@@ -507,6 +555,12 @@ pub struct RemoePolicy<'a, B: Backend> {
     /// static worst case. `None` (the default everywhere) keeps the
     /// worst-case gate byte-identical.
     pub mem_history: Option<crate::allocation::MemEstimator>,
+    /// Drift-aware incremental replanning (opt-in): reuse the cached
+    /// plan while the predicted distribution stays near the snapshot,
+    /// warm-start the replica decision when it drifts. `None` (the
+    /// default everywhere) plans every request from scratch,
+    /// byte-identical to the pre-drift behaviour.
+    pub drift: Option<DriftReplan>,
 }
 
 impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
@@ -524,7 +578,38 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
         // realized requirements once the estimator is warm
         let ids = prompt_ids(self.engine, &req.prompt.text);
         let n_in = ids.len();
-        let out = self.planner.plan_with_memory(&dist, n_in, req.n_out, self.mem_history.as_ref());
+        let out = match self.drift.as_mut() {
+            Some(dr) => {
+                let within = dr
+                    .snapshot
+                    .as_ref()
+                    .map_or(false, |snap| matrix_jsd(&dist, snap) <= dr.threshold);
+                if within {
+                    dr.reuses += 1;
+                    let mut out = dr.last.clone().expect("snapshot implies a cached plan");
+                    // the reuse path skips CALCULATE entirely
+                    out.calc_time_s = 0.0;
+                    out
+                } else {
+                    let warm: Option<Vec<usize>> =
+                        dr.last.as_ref().map(|p| p.plan.replicas.clone());
+                    let out = self.planner.plan_with_memory_warm(
+                        &dist,
+                        n_in,
+                        req.n_out,
+                        self.mem_history.as_ref(),
+                        warm.as_deref(),
+                    );
+                    dr.replans += 1;
+                    dr.snapshot = Some(dist.clone());
+                    dr.last = Some(out.clone());
+                    out
+                }
+            }
+            None => {
+                self.planner.plan_with_memory(&dist, n_in, req.n_out, self.mem_history.as_ref())
+            }
+        };
 
         // real execution (the request path: PJRT artifacts, no python)
         let t0 = Instant::now();
@@ -663,7 +748,7 @@ pub fn serve_remoe_with<B: Backend>(
     opts: &ServeOptions,
 ) -> Result<Aggregator> {
     let mut platform = Platform::new(&planner.platform, opts.seed);
-    let mut policy = RemoePolicy { engine, planner, predictor, mem_history: None };
+    let mut policy = RemoePolicy { engine, planner, predictor, mem_history: None, drift: None };
     serve_on_platform(&mut policy, trace, &mut platform, opts)
 }
 
@@ -775,8 +860,13 @@ mod tests {
                 ..ServeOptions::default()
             };
             let mut platform = Platform::new(&planner.platform, opts.seed);
-            let mut policy =
-                RemoePolicy { engine, planner: &planner, predictor: &sps, mem_history: None };
+            let mut policy = RemoePolicy {
+                engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+                drift: None,
+            };
             let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
             let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
             let ledger = platform.billing.total();
@@ -829,6 +919,44 @@ mod tests {
         assert!((full.total_cost() - stream.total_cost()).abs() < 1e-9);
         assert_eq!(full.cold_paid(), stream.cold_paid());
         assert!((full.makespan_s() - stream.makespan_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expert_prefetch_serve_is_deterministic_across_reruns() {
+        // the popularity tracker, the prefetch ticks and the drifting
+        // trace are all seeded: two full serves must agree byte for
+        // byte on the canonical record stream
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let spec = crate::workload::trace::DriftSpec {
+            phases: 2,
+            bursts_per_phase: 2,
+            burst: 3,
+            period_s: 10.0,
+            n_out: 8,
+            focus: 0.8,
+            seed: 9,
+        };
+        let trace = crate::workload::trace::drifting_topic_trace(&corpus, &spec);
+        let run = || {
+            let opts = ServeOptions {
+                main_instances: 3,
+                batch_capacity: 2,
+                keepalive_s: 4.0,
+                autoscale: AutoscalePolicy::expert_prefetch(),
+                autoscale_tick_s: 2.0,
+                overhead: InvokeOverhead::Expected,
+                ..ServeOptions::default()
+            };
+            let mut platform =
+                Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+            let mut policy = SyntheticServePolicy::default();
+            serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), trace.len());
+        assert_eq!(a.canonical_hash(), b.canonical_hash());
+        assert!((a.total_cost() - b.total_cost()).abs() < 1e-12);
     }
 
     fn synthetic_two_tenant_trace(n: usize) -> Vec<Request> {
@@ -1009,6 +1137,7 @@ mod tests {
             planner: &planner,
             predictor: &sps,
             mem_history: None,
+            drift: None,
         };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
         let ledger = platform.billing.total();

@@ -108,6 +108,7 @@ pub fn autoscale(scale: Scale) -> Result<()> {
             planner: &planner,
             predictor: &sps,
             mem_history: None,
+            drift: None,
         };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts)?;
         runs.push(audited_run(pol.name(), &agg, &platform)?);

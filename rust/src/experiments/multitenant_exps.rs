@@ -115,6 +115,7 @@ fn remoe_run(
         planner,
         predictor: sps,
         mem_history,
+        drift: None,
     };
     let agg = serve_on_platform(&mut policy, trace, &mut platform, &opts)?;
     Ok((agg, platform))

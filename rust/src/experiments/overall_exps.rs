@@ -5,18 +5,21 @@
 
 use anyhow::Result;
 
+use crate::autoscale::AutoscalePolicy;
 use crate::baselines::{serve_baseline_profiles, BaselineEvaluator, Strategy};
 use crate::config::SystemConfig;
 use crate::coordinator::{
-    prompt_signature, serve_on_platform, RemoePolicy, ServeOptions, SyntheticServePolicy,
+    prompt_signature, serve_on_platform, DriftReplan, RemoePolicy, ServeOptions,
+    SyntheticServePolicy,
 };
 use crate::metrics::{fmt_f, Aggregator, Table};
 use crate::prediction::{ActivationPredictor, SpsPredictor, TreeParams};
-use crate::serverless::{InvokeOverhead, Platform};
+use crate::serverless::{CostComponent, InvokeOverhead, Platform};
 use crate::util::bench::peak_rss_kb;
 use crate::util::json::Json;
 use crate::util::stats::summarize;
-use crate::workload::trace::{poisson_trace_over, synthetic_trace};
+use crate::workload::corpus::{standard_corpora, Corpus};
+use crate::workload::trace::{drifting_topic_trace, poisson_trace_over, synthetic_trace, DriftSpec};
 
 use super::common::{corpus_data, exp_rng, update_bench_json, write_csv, ModelCtx, Scale};
 
@@ -412,6 +415,7 @@ pub fn serving(scale: Scale) -> Result<()> {
                 planner: &planner,
                 predictor: &sps,
                 mem_history: None,
+                drift: None,
             };
             let agg = serve_on_platform(&mut policy, &trace, &mut platform, opts)?;
             let ledger = platform.billing.total();
@@ -472,7 +476,174 @@ pub fn serving(scale: Scale) -> Result<()> {
     )?;
     update_bench_json("serving", Json::Arr(bench_rows))?;
     update_bench_json("serve_scale", serve_scale(scale)?)?;
+    update_bench_json("expert_prefetch", expert_prefetch_section(scale)?)?;
     Ok(())
+}
+
+/// One run of the expert-prefetch comparison, ledger-audited.
+struct PrefetchRun {
+    policy: String,
+    request_cost: f64,
+    prewarm_cost: f64,
+    total_cost: f64,
+    cold_rate: f64,
+    mean_ttft_s: f64,
+    replans: usize,
+    reuses: usize,
+}
+
+/// Expert-level prefetch under topic drift: Remoe serves the same
+/// drifting-topic trace twice — once under the function-level
+/// predictive policy (PR 3) with a window far shorter than the burst
+/// period, so its warm pool dies between bursts, and once under the
+/// per-expert EWMA prefetch policy, which holds floors for hot
+/// experts across gaps and demotes experts the drift left behind.
+/// Drift-aware incremental replanning is active in both runs. The
+/// contract: strictly fewer paid cold starts at equal or lower total
+/// cost, with the billing ledger audited against the per-request
+/// attribution.
+fn expert_prefetch_section(scale: Scale) -> Result<Json> {
+    println!("\n-- expert-level prefetch vs function-level predictive under topic drift --");
+    let cfg = SystemConfig::default();
+    let small = Scale { requests: scale.requests.min(8), ..scale };
+    let (mut ctx, sps, _test) = setup_model("dsv2", small)?;
+    let planner = ctx.planner(&cfg);
+    let corpus = Corpus::new(standard_corpora()[0].clone());
+    let spec = DriftSpec {
+        phases: 3,
+        bursts_per_phase: 2,
+        burst: 4,
+        period_s: 20.0,
+        n_out: small.n_out,
+        focus: 0.9,
+        seed: 33,
+    };
+    let trace = drifting_topic_trace(&corpus, &spec);
+    let base = ServeOptions {
+        keepalive_s: 6.0,
+        main_instances: spec.burst,
+        batch_capacity: 2,
+        autoscale_tick_s: 5.0,
+        ..ServeOptions::default()
+    };
+    println!(
+        "-- {} ({} phases x {} bursts of {}, period {:.0}s, focus {:.0}%) --",
+        ctx.dims.name,
+        spec.phases,
+        spec.bursts_per_phase,
+        spec.burst,
+        spec.period_s,
+        spec.focus * 100.0
+    );
+    let mut run = |pol: AutoscalePolicy| -> Result<PrefetchRun> {
+        let name = pol.name().to_string();
+        let opts = ServeOptions { autoscale: pol, ..base.clone() };
+        let mut platform = Platform::new(&planner.platform, opts.seed);
+        let mut policy = RemoePolicy {
+            engine: &mut ctx.engine,
+            planner: &planner,
+            predictor: &sps,
+            mem_history: None,
+            drift: Some(DriftReplan::new(0.05)),
+        };
+        let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts)?;
+        let drift = policy.drift.take().expect("drift state survives the run");
+        anyhow::ensure!(
+            drift.replans >= 1 && drift.replans + drift.reuses == trace.len(),
+            "drift replanning must cover every request: {} replans + {} reuses != {}",
+            drift.replans,
+            drift.reuses,
+            trace.len()
+        );
+        let prewarm_cost = platform.billing.component_total(CostComponent::PrewarmIdle);
+        let total_cost = platform.billing.total();
+        let request_cost = agg.total_cost();
+        anyhow::ensure!(
+            (total_cost - request_cost - prewarm_cost).abs() <= 1e-9 * total_cost.max(1.0),
+            "ledger audit failed under {name}: total {total_cost} != Σ request costs \
+             {request_cost} + prewarm idle {prewarm_cost}"
+        );
+        Ok(PrefetchRun {
+            policy: name,
+            request_cost,
+            prewarm_cost,
+            total_cost,
+            cold_rate: agg.cold_paid() as f64 / agg.len().max(1) as f64,
+            mean_ttft_s: agg.ttft_summary().mean,
+            replans: drift.replans,
+            reuses: drift.reuses,
+        })
+    };
+    let predictive = run(AutoscalePolicy::Predictive { window_s: 6.0, lookahead_s: 10.0 })?;
+    let prefetch = run(AutoscalePolicy::expert_prefetch())?;
+
+    let mut t = Table::new(&[
+        "policy",
+        "total cost",
+        "request cost",
+        "prewarm idle",
+        "cold rate",
+        "mean ttft (s)",
+        "replans",
+        "reuses",
+    ]);
+    let mut csv_rows = Vec::new();
+    let mut bench_rows = Vec::new();
+    for r in [&predictive, &prefetch] {
+        let row = vec![
+            r.policy.clone(),
+            fmt_f(r.total_cost, 1),
+            fmt_f(r.request_cost, 1),
+            fmt_f(r.prewarm_cost, 1),
+            fmt_f(r.cold_rate, 3),
+            fmt_f(r.mean_ttft_s, 2),
+            r.replans.to_string(),
+            r.reuses.to_string(),
+        ];
+        t.row(row.clone());
+        csv_rows.push(row);
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("policy".to_string(), Json::Str(r.policy.clone()));
+        o.insert("total_cost".to_string(), Json::Num(r.total_cost));
+        o.insert("request_cost".to_string(), Json::Num(r.request_cost));
+        o.insert("prewarm_cost".to_string(), Json::Num(r.prewarm_cost));
+        o.insert("cold_rate".to_string(), Json::Num(r.cold_rate));
+        o.insert("mean_ttft_s".to_string(), Json::Num(r.mean_ttft_s));
+        o.insert("replans".to_string(), Json::Num(r.replans as f64));
+        o.insert("reuses".to_string(), Json::Num(r.reuses as f64));
+        bench_rows.push(Json::Obj(o));
+    }
+    t.print();
+    write_csv(
+        "expert_prefetch",
+        &[
+            "policy",
+            "total_cost",
+            "request_cost",
+            "prewarm_cost",
+            "cold_rate",
+            "mean_ttft_s",
+            "replans",
+            "reuses",
+        ],
+        &csv_rows,
+    )?;
+    // the tentpole contract: per-expert prefetch must strictly cut
+    // paid cold starts without spending more than the function-level
+    // predictive policy does on this drifting trace
+    anyhow::ensure!(
+        prefetch.cold_rate < predictive.cold_rate,
+        "expert prefetch cold rate ({}) must be strictly below predictive ({})",
+        prefetch.cold_rate,
+        predictive.cold_rate
+    );
+    anyhow::ensure!(
+        prefetch.total_cost <= predictive.total_cost * (1.0 + 1e-9),
+        "expert prefetch total cost ({}) must not exceed predictive ({})",
+        prefetch.total_cost,
+        predictive.total_cost
+    );
+    Ok(Json::Arr(bench_rows))
 }
 
 /// Headline summary (abstract claims): cost ↓ up to 57%, cold start ↓ 47%.

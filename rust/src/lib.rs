@@ -17,6 +17,26 @@
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
+// Stylistic lint families the codebase deliberately keeps (clippy runs
+// blocking with `-D warnings` in CI): long argument lists on the
+// analytic-model constructors, index-based loops over layer × expert
+// grids, and `map_or(false, ..)`-style readability idioms predate the
+// lint gate and are allowed wholesale rather than churned.
+#![allow(
+    clippy::collapsible_else_if,
+    clippy::collapsible_if,
+    clippy::comparison_chain,
+    clippy::excessive_precision,
+    clippy::len_without_is_empty,
+    clippy::manual_range_contains,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::redundant_closure,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::unnecessary_map_or
+)]
+
 pub mod util;
 
 pub mod config;

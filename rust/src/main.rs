@@ -6,6 +6,8 @@
 //!             [--instances I] [--batch C]           (C>1: continuous batching)
 //!             [--autoscale P] [--autoscale-tick S]  P: reactive | warmpool[:floor]
 //!                                                      | predictive[:window_s]
+//!                                                      | prefetch[:decay_s]
+//!             [--expert-prefetch]                   shorthand for --autoscale prefetch
 //!             [--tenants SPEC]                      SLO classes, e.g.
 //!                                                      "gold,prio=2,ttft=4,quota=2;bronze"
 //! remoe plan  [--model M]                           plan one request, print the deployment
@@ -16,6 +18,18 @@
 //! on the request path); experiments use the numerically-identical
 //! native backend for bulk sweeps (equivalence proven by the
 //! integration_runtime tests).
+
+// Mirrors the crate-root allow list in lib.rs (clippy is blocking in CI).
+#![allow(
+    clippy::collapsible_else_if,
+    clippy::collapsible_if,
+    clippy::comparison_chain,
+    clippy::manual_range_contains,
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::unnecessary_map_or
+)]
 
 use std::rc::Rc;
 
@@ -102,9 +116,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         keepalive_s: args.f64_or("keepalive", defaults.keepalive_s),
         main_instances: args.usize_or("instances", 1),
         batch_capacity: args.usize_or("batch", 1),
-        autoscale: match args.flag("autoscale") {
-            Some(spec) => AutoscalePolicy::parse(spec)?,
-            None => AutoscalePolicy::Reactive,
+        autoscale: if args.has("expert-prefetch") {
+            // per-expert EWMA prefetch (shorthand for --autoscale prefetch)
+            AutoscalePolicy::expert_prefetch()
+        } else {
+            match args.flag("autoscale") {
+                Some(spec) => AutoscalePolicy::parse(spec)?,
+                None => AutoscalePolicy::Reactive,
+            }
         },
         autoscale_tick_s: args.f64_or("autoscale-tick", defaults.autoscale_tick_s),
         tenants: tenants.clone(),
@@ -166,7 +185,8 @@ fn serve_and_report<B: Backend>(
     let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
     let mut platform = Platform::new(&planner.platform, opts.seed);
     let agg = {
-        let mut policy = RemoePolicy { engine, planner, predictor: &sps, mem_history: None };
+        let mut policy =
+            RemoePolicy { engine, planner, predictor: &sps, mem_history: None, drift: None };
         serve_on_platform(&mut policy, trace, &mut platform, opts)?
     };
 

@@ -11,4 +11,6 @@ pub mod replicas;
 pub use convexity::GTerm;
 pub use fitting::{fit_exp_curve, ExpCurve};
 pub use lagrangian::{solve, DualSolution, LayerTerm};
-pub use replicas::{decide_replicas, theorem4_bound, LayerReplicaInput, ReplicaDecision};
+pub use replicas::{
+    decide_replicas, decide_replicas_from, theorem4_bound, LayerReplicaInput, ReplicaDecision,
+};

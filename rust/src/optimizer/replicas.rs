@@ -33,6 +33,20 @@ pub struct LayerReplicaInput {
     pub z_min: usize,
 }
 
+/// Total-order comparison of two replica potentials with a NaN-loses
+/// rule: a NaN potential (degenerate cost inputs — zero demand, empty
+/// partitions, a non-finite latency term) never wins a `max_by`, so
+/// the greedy loop stays panic-free and deterministic where
+/// `partial_cmp(..).unwrap()` used to abort the planner mid-trace.
+fn cmp_potential(a: f64, b: f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
 /// The §IV-F-2 procedure.
 ///
 /// 1. start from the payload floors;
@@ -48,13 +62,38 @@ pub fn decide_replicas<F>(
     inputs: &[LayerReplicaInput],
     z_max: usize,
     ttft_slo: f64,
+    cost_of: F,
+) -> ReplicaDecision
+where
+    F: FnMut(&[usize]) -> (f64, f64),
+{
+    decide_replicas_from(inputs, z_max, ttft_slo, cost_of, None)
+}
+
+/// [`decide_replicas`] with an optional warm start: `warm` seeds the
+/// loop with a previous decision's replica vector (clamped to the
+/// payload floors and `z_max`) instead of the floors themselves. When
+/// expert popularity has drifted only a little since the seed plan,
+/// the greedy loop re-converges in a handful of evaluations; an extra
+/// removal phase lets a warm start that lands *above* the optimum
+/// shrink back down, which the grow-only fresh-start loop never needs.
+pub fn decide_replicas_from<F>(
+    inputs: &[LayerReplicaInput],
+    z_max: usize,
+    ttft_slo: f64,
     mut cost_of: F,
+    warm: Option<&[usize]>,
 ) -> ReplicaDecision
 where
     F: FnMut(&[usize]) -> (f64, f64),
 {
     let layers = inputs.len();
-    let mut z: Vec<usize> = inputs.iter().map(|i| i.z_min.clamp(1, z_max)).collect();
+    let floors: Vec<usize> = inputs.iter().map(|i| i.z_min.clamp(1, z_max)).collect();
+    let warm = warm.filter(|w| w.len() == layers);
+    let mut z: Vec<usize> = match warm {
+        Some(w) => w.iter().zip(&floors).map(|(&wz, &lo)| wz.clamp(lo, z_max)).collect(),
+        None => floors.clone(),
+    };
     // layers with no remote experts keep z implicitly irrelevant; mark 0
     for (l, inp) in inputs.iter().enumerate() {
         if inp.expert_ids.is_empty() {
@@ -72,35 +111,32 @@ where
         cur - next
     };
 
-    // Phase A: satisfy the TTFT SLO.
+    // Phase A: satisfy the TTFT SLO. The negated comparison (instead
+    // of `ttft <= slo`) makes a NaN ttft terminate the loop instead of
+    // adding replicas until the iteration cap.
     loop {
         iterations += 1;
         let (_, ttft) = cost_of(&z);
-        if ttft <= ttft_slo {
+        if !(ttft > ttft_slo) {
             break;
         }
-        // pick the best layer to add a replica to
-        let candidates: Vec<usize> = (0..layers)
+        // pick the best layer to add a replica to (NaN potentials lose)
+        let best = (0..layers)
             .filter(|&l| !inputs[l].expert_ids.is_empty() && z[l] < z_max)
-            .collect();
-        if candidates.is_empty() {
+            .map(|l| (l, potential(&z, l, &mut cost_of)))
+            .max_by(|a, b| cmp_potential(a.1, b.1));
+        let Some((best, _)) = best else {
             break; // cannot improve further
-        }
-        let best = candidates
-            .into_iter()
-            .max_by(|&a, &b| {
-                potential(&z, a, &mut cost_of)
-                    .partial_cmp(&potential(&z, b, &mut cost_of))
-                    .unwrap()
-            })
-            .unwrap();
+        };
         z[best] += 1;
         if iterations > layers * z_max + 8 {
             break;
         }
     }
 
-    // Phase B: keep adding while it reduces cost (ϖ > 0).
+    // Phase B: keep adding while it reduces cost (ϖ > 0). A NaN
+    // potential fails the `> 1e-12` test, so degenerate layers are
+    // simply never grown.
     loop {
         iterations += 1;
         let mut best: Option<(usize, f64)> = None;
@@ -119,6 +155,37 @@ where
         }
         if iterations > 4 * layers * z_max + 16 {
             break;
+        }
+    }
+
+    // Phase C (warm starts only): shed replicas while doing so lowers
+    // cost without violating the TTFT SLO, so a seed above the optimum
+    // converges from above. Fresh starts skip this — their grow-only
+    // trajectory is the historical behaviour, kept byte-identical.
+    if warm.is_some() {
+        loop {
+            iterations += 1;
+            let (cur, _) = cost_of(&z);
+            let mut best: Option<(usize, f64)> = None;
+            for l in 0..layers {
+                if inputs[l].expert_ids.is_empty() || z[l] <= floors[l] {
+                    continue;
+                }
+                let mut minus = z.clone();
+                minus[l] -= 1;
+                let (next, ttft) = cost_of(&minus);
+                let gain = cur - next;
+                if gain > 1e-12 && !(ttft > ttft_slo) && best.map_or(true, |(_, bg)| gain > bg) {
+                    best = Some((l, gain));
+                }
+            }
+            match best {
+                Some((l, _)) => z[l] -= 1,
+                None => break,
+            }
+            if iterations > 8 * layers * z_max + 32 {
+                break;
+            }
         }
     }
 
@@ -220,6 +287,89 @@ mod tests {
             (z0, 1.0 / z0)
         });
         assert!(d.z[0] <= 3);
+    }
+
+    #[test]
+    fn nan_cost_layer_does_not_panic() {
+        // regression: a zero-demand layer whose cost model evaluates to
+        // NaN used to abort in Phase A's `partial_cmp(..).unwrap()`.
+        // Every potential is NaN (NaN - NaN) while the TTFT stays
+        // violated, so the pre-fix comparator saw partial_cmp == None.
+        let inputs = vec![
+            LayerReplicaInput {
+                expert_ids: vec![0, 1],
+                task_seconds: vec![0.3, 0.2],
+                z_min: 1,
+            },
+            // degenerate zero-demand layer: one remote expert, no work
+            LayerReplicaInput { expert_ids: vec![9], task_seconds: vec![0.0], z_min: 1 },
+        ];
+        let d = decide_replicas(&inputs, 4, 1.0, |_| (f64::NAN, 10.0));
+        // terminates with an in-range decision; NaN potentials lose, so
+        // the vector only ever grew through the bounded Phase A loop
+        assert!(d.z.iter().all(|&zl| zl <= 4), "{:?}", d.z);
+        assert!(d.z[0] >= 1 && d.z[1] >= 1);
+        let all: Vec<usize> = d.partitions[0].iter().flatten().copied().collect();
+        let mut sorted = all;
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_ttft_terminates_at_the_floors() {
+        // a NaN latency can neither satisfy nor violate the SLO: the
+        // negated Phase A guard treats it as "not violated" and stops
+        // at the payload floors instead of growing to the cap
+        let inputs = toy_inputs();
+        let d = decide_replicas(&inputs, 8, 0.5, |_| (1.0, f64::NAN));
+        assert_eq!(d.z[0], 1, "{:?}", d.z);
+        assert_eq!(d.z[1], 0);
+    }
+
+    #[test]
+    fn warm_start_converges_from_both_sides() {
+        let inputs = toy_inputs();
+        // cost strictly convex with the optimum at z0 = 5
+        let cost = |z: &[usize]| {
+            let z0 = z[0].max(1) as f64;
+            ((z0 - 5.0) * (z0 - 5.0), 0.0)
+        };
+        // from below: the Phase B grow loop reaches the optimum
+        let lo = decide_replicas_from(&inputs, 8, 100.0, cost, Some(&[2, 1]));
+        assert_eq!(lo.z[0], 5, "{:?}", lo.z);
+        // from above: only the warm-start removal phase can shrink
+        let hi = decide_replicas_from(&inputs, 8, 100.0, cost, Some(&[8, 1]));
+        assert_eq!(hi.z[0], 5, "{:?}", hi.z);
+        assert_eq!(hi.z[1], 0, "empty layers stay at zero replicas");
+        // seeding at the optimum converges in strictly fewer
+        // evaluations than the fresh grow-from-floors trajectory
+        let warm = decide_replicas_from(&inputs, 8, 100.0, cost, Some(&[5, 1]));
+        let fresh = decide_replicas(&inputs, 8, 100.0, cost);
+        assert_eq!(warm.z[0], 5);
+        assert!(
+            warm.iterations < fresh.iterations,
+            "warm {} !< fresh {}",
+            warm.iterations,
+            fresh.iterations
+        );
+    }
+
+    #[test]
+    fn warm_start_respects_slo_when_shrinking() {
+        let inputs = toy_inputs();
+        // removing below z0 = 4 would violate ttft ≤ 0.6 (ttft = 2/z0);
+        // cost rises with z so removal pressure is constant
+        let d = decide_replicas_from(
+            &inputs,
+            8,
+            0.6,
+            |z| {
+                let z0 = z[0].max(1) as f64;
+                (z0, 2.0 / z0)
+            },
+            Some(&[7, 1]),
+        );
+        assert_eq!(d.z[0], 4, "{:?}", d.z);
     }
 
     #[test]

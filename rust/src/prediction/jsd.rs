@@ -4,15 +4,28 @@
 /// JSD between two discrete distributions (natural log; range
 /// [0, ln 2]). Inputs need not be normalised — they are normalised
 /// here to be robust to count vectors.
+///
+/// Degenerate rows are guarded instead of poisoning the result:
+/// negative and non-finite entries contribute zero mass, two zero-mass
+/// vectors are identical (0), and a zero-mass vector against a real
+/// distribution is maximally divergent (ln 2). The output is always
+/// finite, so a single corrupt activation row can no longer inject a
+/// NaN that silently re-orders SPS nearest-neighbour ranking (every
+/// NaN comparison is false, which made corrupt candidates "win").
 pub fn jsd(p: &[f64], q: &[f64]) -> f64 {
     assert_eq!(p.len(), q.len());
-    let sp: f64 = p.iter().sum();
-    let sq: f64 = q.iter().sum();
-    assert!(sp > 0.0 && sq > 0.0, "JSD of a zero vector");
+    let mass = |x: f64| if x.is_finite() && x > 0.0 { x } else { 0.0 };
+    let sp: f64 = p.iter().map(|&x| mass(x)).sum();
+    let sq: f64 = q.iter().map(|&x| mass(x)).sum();
+    match (sp > 0.0, sq > 0.0) {
+        (false, false) => return 0.0,
+        (false, true) | (true, false) => return std::f64::consts::LN_2,
+        (true, true) => {}
+    }
     let mut out = 0.0;
     for (&pi, &qi) in p.iter().zip(q) {
-        let pi = pi / sp;
-        let qi = qi / sq;
+        let pi = mass(pi) / sp;
+        let qi = mass(qi) / sq;
         let mi = 0.5 * (pi + qi);
         if pi > 0.0 {
             out += 0.5 * pi * (pi / mi).ln();
@@ -21,7 +34,7 @@ pub fn jsd(p: &[f64], q: &[f64]) -> f64 {
             out += 0.5 * qi * (qi / mi).ln();
         }
     }
-    out.max(0.0)
+    out.clamp(0.0, std::f64::consts::LN_2)
 }
 
 /// Mean per-layer JSD between two activation-distribution matrices —
@@ -64,6 +77,44 @@ mod tests {
         let counts = [20.0, 30.0, 50.0];
         let probs = [0.2, 0.3, 0.5];
         assert!(jsd(&counts, &probs) < 1e-12);
+    }
+
+    #[test]
+    fn zero_mass_slots_are_guarded() {
+        // regression: a zero vector used to trip the sum assertion and
+        // a NaN entry propagated through (pi/mi).ln() into the score
+        let zero = [0.0, 0.0, 0.0];
+        let real = [0.2, 0.3, 0.5];
+        assert_eq!(jsd(&zero, &zero), 0.0);
+        assert!((jsd(&zero, &real) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert!((jsd(&real, &zero) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_and_negative_entries_drop_out() {
+        // corrupt slots contribute zero mass instead of poisoning the
+        // whole row; the remaining mass still normalises
+        let dirty = [f64::NAN, 0.3, 0.5, -2.0, f64::INFINITY];
+        let clean = [0.0, 0.3, 0.5, 0.0, 0.0];
+        let ref_q = [0.1, 0.4, 0.2, 0.2, 0.1];
+        let d = jsd(&dirty, &ref_q);
+        assert!(d.is_finite());
+        assert!((d - jsd(&clean, &ref_q)).abs() < 1e-12);
+        // an all-corrupt row behaves like a zero-mass row
+        let poisoned = [f64::NAN, -1.0];
+        assert!((jsd(&poisoned, &[0.5, 0.5]) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert_eq!(jsd(&poisoned, &[f64::NAN, -3.0]), 0.0);
+    }
+
+    #[test]
+    fn unnormalized_rows_stay_in_range() {
+        // wildly unnormalised inputs (raw counts, tiny masses) still
+        // land in [0, ln 2] with no sign of the old NaN path
+        let p = [1e-12, 3e-12, 6e-12];
+        let q = [2000.0, 3000.0, 5000.0];
+        let d = jsd(&p, &q);
+        assert!(d.is_finite() && (0.0..=std::f64::consts::LN_2).contains(&d));
+        assert!(jsd(&q, &q) < 1e-12);
     }
 
     #[test]

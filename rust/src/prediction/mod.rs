@@ -6,6 +6,7 @@
 pub mod baselines;
 pub mod jsd;
 pub mod kmedoids;
+pub mod popularity;
 pub mod predictor;
 pub mod scs;
 pub mod tree;
@@ -15,6 +16,7 @@ pub use baselines::{
 };
 pub use jsd::{jsd, matrix_jsd};
 pub use kmedoids::{kmedoids, pam, Clustering};
+pub use popularity::ExpertPopularity;
 pub use predictor::{ActivationPredictor, History, SpsPredictor};
 pub use scs::{scs, scs_distance, softmax_weights, Signature};
 pub use tree::{ClusterTree, Splitter, TreeParams};

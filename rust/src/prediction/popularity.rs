@@ -1,0 +1,176 @@
+//! Online per-expert popularity: a sliding exponentially-weighted
+//! activation mass per function, fed by the activation sets the SPS
+//! predictor produces for every admitted request (and by the actual
+//! decode-segment activity the engine reports). This is the MoEless /
+//! fMoE-style signal the expert-prefetch autoscaler keys off: hot
+//! experts keep warm floors one decode segment ahead, cold experts are
+//! demoted to scale-to-zero.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Entry {
+    /// EWMA activation mass as of `last_t` (decays exponentially with
+    /// time constant `decay_s` between observations).
+    mass: f64,
+    last_t: f64,
+}
+
+/// Sliding-window EWMA over per-expert activation mass.
+///
+/// `observe(t, name, w)` folds weight `w` into `name`'s mass after
+/// decaying the previous mass by `exp(-(t - last)/decay_s)`; the
+/// steady-state mass of a constant-rate stream is `rate × decay_s`, so
+/// [`rate_at`] divides the decayed mass back by `decay_s` to recover
+/// an arrival-rate estimate in events/second.
+#[derive(Debug, Clone)]
+pub struct ExpertPopularity {
+    pub decay_s: f64,
+    entries: BTreeMap<String, Entry>,
+}
+
+impl ExpertPopularity {
+    pub fn new(decay_s: f64) -> ExpertPopularity {
+        ExpertPopularity { decay_s: decay_s.max(1e-9), entries: BTreeMap::new() }
+    }
+
+    fn decayed(&self, e: &Entry, t: f64) -> f64 {
+        e.mass * (-(t - e.last_t).max(0.0) / self.decay_s).exp()
+    }
+
+    /// Fold activation weight `w` for `name` at virtual time `t`.
+    /// Weights are whatever demand unit the caller tracks — replica
+    /// counts at admission, expert work-seconds at decode segments.
+    pub fn observe(&mut self, t: f64, name: &str, w: f64) {
+        if !(w > 0.0) || !w.is_finite() {
+            return;
+        }
+        match self.entries.get_mut(name) {
+            Some(e) => {
+                e.mass = e.mass * (-(t - e.last_t).max(0.0) / self.decay_s).exp() + w;
+                e.last_t = e.last_t.max(t);
+            }
+            None => {
+                self.entries.insert(name.to_string(), Entry { mass: w, last_t: t });
+            }
+        }
+    }
+
+    /// EWMA rate estimate (weight/second) for `name` at time `t`, or
+    /// `None` if the expert has never been observed.
+    pub fn rate_at(&self, name: &str, t: f64) -> Option<f64> {
+        self.entries.get(name).map(|e| self.decayed(e, t) / self.decay_s)
+    }
+
+    /// `name`'s share of the total decayed activation mass at `t`, or
+    /// `None` if never observed. Recently active experts decay less,
+    /// so shares drift toward the current hot set.
+    pub fn share_at(&self, name: &str, t: f64) -> Option<f64> {
+        let mine = self.decayed(self.entries.get(name)?, t);
+        let total: f64 = self.entries.values().map(|e| self.decayed(e, t)).sum();
+        if total > 0.0 {
+            Some(mine / total)
+        } else {
+            Some(0.0)
+        }
+    }
+
+    /// Newest observation time for `name`.
+    pub fn last_activity(&self, name: &str) -> Option<f64> {
+        self.entries.get(name).map(|e| e.last_t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Canonical textual dump (sorted by name, fixed precision) — the
+    /// determinism probe: byte-identical reruns must produce
+    /// byte-identical trackers.
+    pub fn canonical(&self) -> String {
+        let mut out = String::new();
+        for (name, e) in &self.entries {
+            out.push_str(&format!("{name}:{:.9}:{:.9}\n", e.mass, e.last_t));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mass_decays_with_the_configured_time_constant() {
+        let mut p = ExpertPopularity::new(10.0);
+        p.observe(0.0, "e", 5.0);
+        let r0 = p.rate_at("e", 0.0).unwrap();
+        assert!((r0 - 0.5).abs() < 1e-12);
+        // one time constant later the rate has decayed by e^-1
+        let r1 = p.rate_at("e", 10.0).unwrap();
+        assert!((r1 - 0.5 / std::f64::consts::E).abs() < 1e-12);
+        assert_eq!(p.rate_at("other", 0.0), None);
+    }
+
+    #[test]
+    fn constant_rate_stream_converges_to_its_rate() {
+        let mut p = ExpertPopularity::new(20.0);
+        // 1 event/second for 200 s → steady-state mass ≈ rate × decay
+        for k in 0..200 {
+            p.observe(k as f64, "e", 1.0);
+        }
+        let r = p.rate_at("e", 199.0).unwrap();
+        assert!((r - 1.0).abs() < 0.05, "rate {r}");
+    }
+
+    #[test]
+    fn shares_track_the_current_hot_set() {
+        let mut p = ExpertPopularity::new(10.0);
+        p.observe(0.0, "a", 1.0);
+        p.observe(0.0, "b", 1.0);
+        assert!((p.share_at("a", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        // "b" keeps firing, "a" goes quiet → the share drifts to "b"
+        for k in 1..30 {
+            p.observe(k as f64, "b", 1.0);
+        }
+        let sa = p.share_at("a", 29.0).unwrap();
+        let sb = p.share_at("b", 29.0).unwrap();
+        assert!(sa < 0.05, "stale expert share {sa}");
+        assert!(sb > 0.95);
+        assert!((sa + sb - 1.0).abs() < 1e-12);
+        assert_eq!(p.share_at("missing", 29.0), None);
+    }
+
+    #[test]
+    fn degenerate_weights_are_ignored() {
+        let mut p = ExpertPopularity::new(10.0);
+        p.observe(0.0, "e", 0.0);
+        p.observe(0.0, "e", -3.0);
+        p.observe(0.0, "e", f64::NAN);
+        assert!(p.is_empty());
+        p.observe(1.0, "e", 2.0);
+        assert_eq!(p.len(), 1);
+        assert!(p.rate_at("e", 1.0).unwrap() > 0.0);
+        assert_eq!(p.last_activity("e"), Some(1.0));
+    }
+
+    #[test]
+    fn canonical_dump_is_deterministic_across_reruns() {
+        let feed = |p: &mut ExpertPopularity| {
+            for k in 0..50 {
+                let t = 0.25 * k as f64;
+                p.observe(t, if k % 3 == 0 { "a" } else { "b" }, 1.0 + (k % 5) as f64);
+            }
+        };
+        let mut p = ExpertPopularity::new(15.0);
+        let mut q = ExpertPopularity::new(15.0);
+        feed(&mut p);
+        feed(&mut q);
+        assert_eq!(p.canonical(), q.canonical());
+        assert!(!p.canonical().is_empty());
+    }
+}

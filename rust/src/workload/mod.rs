@@ -5,4 +5,7 @@ pub mod corpus;
 pub mod trace;
 
 pub use corpus::{standard_corpora, Corpus, CorpusSpec, Prompt};
-pub use trace::{batch_trace, poisson_trace, poisson_trace_over, Request, TraceSpec};
+pub use trace::{
+    batch_trace, drifting_topic_trace, poisson_trace, poisson_trace_over, DriftSpec, Request,
+    TraceSpec,
+};

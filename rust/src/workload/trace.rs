@@ -217,6 +217,63 @@ pub fn multi_tenant_trace_over(
     all
 }
 
+/// A drifting-topic workload (§V's non-stationary case): the trace is
+/// cut into phases of bursty arrivals whose prompts concentrate on a
+/// phase-specific topic mixture.
+#[derive(Debug, Clone)]
+pub struct DriftSpec {
+    /// Number of drift phases; each phase rotates the focus topics.
+    pub phases: usize,
+    pub bursts_per_phase: usize,
+    /// Requests per burst (all arrive together).
+    pub burst: usize,
+    /// Inter-burst period; bursts are numbered globally, so phase `p`
+    /// starts at `p * bursts_per_phase * period_s`.
+    pub period_s: f64,
+    pub n_out: usize,
+    /// Probability mass concentrated on the phase's two focus topics;
+    /// the remainder spreads uniformly over the whole corpus.
+    pub focus: f64,
+    pub seed: u64,
+}
+
+/// Deterministic drifting-topic trace: each phase draws prompts from a
+/// mixture where two rotating focus topics carry `focus` of the mass
+/// (mixture weights over corpus topics shift over the trace), so the
+/// hot expert set moves between phases. Each phase uses its own seeded
+/// RNG stream — editing or appending a phase never perturbs another
+/// phase's draws, and reruns are byte-identical.
+pub fn drifting_topic_trace(corpus: &Corpus, spec: &DriftSpec) -> Vec<Request> {
+    assert!(spec.phases > 0 && spec.bursts_per_phase > 0 && spec.burst > 0);
+    assert!((0.0..=1.0).contains(&spec.focus), "focus must be a probability");
+    let topics = corpus.spec.topics;
+    let mut weights = vec![0.0f64; topics];
+    let mut all = Vec::with_capacity(spec.phases * spec.bursts_per_phase * spec.burst);
+    for phase in 0..spec.phases {
+        let mut rng =
+            Rng::new(spec.seed ^ 0xD21F7 ^ (phase as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // rotate the focus pair with the phase index; the uniform
+        // remainder keeps every expert reachable in every phase
+        weights.iter_mut().for_each(|w| *w = (1.0 - spec.focus) / topics as f64);
+        weights[(2 * phase) % topics] += spec.focus / 2.0;
+        weights[(2 * phase + 1) % topics] += spec.focus / 2.0;
+        for b in 0..spec.bursts_per_phase {
+            let t = (phase * spec.bursts_per_phase + b) as f64 * spec.period_s;
+            for _ in 0..spec.burst {
+                let topic = rng.categorical(&weights);
+                all.push(Request {
+                    id: all.len(),
+                    arrival_s: t,
+                    prompt: corpus.sample(&mut rng, Some(topic)),
+                    n_out: spec.n_out,
+                    tenant: 0,
+                });
+            }
+        }
+    }
+    all
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +394,64 @@ mod tests {
         let bursty: Vec<f64> =
             c2.iter().filter(|r| r.tenant == 1).map(|r| r.arrival_s).collect();
         assert_eq!(bursty, vec![0.0, 0.0, 0.0, 6.0, 6.0, 6.0]);
+    }
+
+    fn drift_spec() -> DriftSpec {
+        DriftSpec {
+            phases: 3,
+            bursts_per_phase: 4,
+            burst: 5,
+            period_s: 30.0,
+            n_out: 12,
+            focus: 0.9,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn drifting_trace_is_deterministic_and_structured() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let spec = drift_spec();
+        let a = drifting_topic_trace(&c, &spec);
+        let b = drifting_topic_trace(&c, &spec);
+        assert_eq!(a.len(), 3 * 4 * 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt.text, y.prompt.text);
+            assert_eq!(x.prompt.topic, y.prompt.topic);
+        }
+        // global burst grid: request k arrives at (k / burst) * period
+        for (k, r) in a.iter().enumerate() {
+            assert_eq!(r.id, k);
+            assert_eq!(r.arrival_s, (k / 5) as f64 * 30.0);
+            assert_eq!(r.n_out, 12);
+        }
+    }
+
+    #[test]
+    fn drifting_trace_mixture_shifts_between_phases() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let spec = drift_spec();
+        let trace = drifting_topic_trace(&c, &spec);
+        let per_phase = 4 * 5;
+        for phase in 0..3 {
+            let slice = &trace[phase * per_phase..(phase + 1) * per_phase];
+            let focus = [(2 * phase) % 8, (2 * phase + 1) % 8];
+            let hits = slice.iter().filter(|r| focus.contains(&r.prompt.topic)).count();
+            // 90% of the mass sits on the two focus topics
+            assert!(
+                hits * 2 >= per_phase,
+                "phase {phase}: only {hits}/{per_phase} on focus topics"
+            );
+        }
+        // per-phase RNG streams: truncating the schedule to fewer
+        // phases reproduces the shared prefix byte-for-byte
+        let short = drifting_topic_trace(&c, &DriftSpec { phases: 2, ..drift_spec() });
+        for (x, y) in short.iter().zip(&trace) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt.text, y.prompt.text);
+        }
+        assert_eq!(short.len(), 2 * per_phase);
     }
 
     #[test]

@@ -313,6 +313,7 @@ fn prop_serve_ledger_equals_sum_of_request_costs() {
             planner: &planner,
             predictor: &sps,
             mem_history: None,
+            drift: None,
         };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
 
@@ -511,6 +512,7 @@ fn prop_autoscaled_serve_ledger_includes_prewarm_component() {
                 planner: &planner,
                 predictor: &sps,
                 mem_history: None,
+                drift: None,
             };
             let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
 
@@ -565,6 +567,7 @@ fn prop_batched_serve_is_deterministic_and_respects_capacity() {
                 planner: &planner,
                 predictor: &sps,
                 mem_history: None,
+                drift: None,
             };
             serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap()
         };
@@ -1003,4 +1006,67 @@ fn prop_multi_tenant_serve_is_deterministic() {
         assert_eq!(a.canonical(), b.canonical(), "multi-tenant serve must be deterministic");
         assert_eq!(a.canonical_hash(), b.canonical_hash());
     });
+}
+
+#[test]
+fn prop_expert_prefetch_ledger_identity_under_random_drift() {
+    // The expert-prefetch policy pre-warms, holds and demotes on its
+    // own schedule; under randomized drifting-topic traces and knobs
+    // the billing ledger must still split exactly into per-request
+    // costs plus the PrewarmIdle component, and the drift generator
+    // must be rerun-stable.
+    Prop::new("expert prefetch: ledger == Σ costs + prewarm under drift").with_cases(10).check(
+        |rng, case| {
+            use remoe::autoscale::AutoscalePolicy;
+            use remoe::coordinator::{serve_on_platform, ServeOptions, SyntheticServePolicy};
+            use remoe::serverless::{CostComponent, InvokeOverhead, Platform};
+            use remoe::workload::corpus::{standard_corpora, Corpus};
+            use remoe::workload::trace::{drifting_topic_trace, DriftSpec};
+
+            let corpus = Corpus::new(standard_corpora()[0].clone());
+            let spec = DriftSpec {
+                phases: small_size(rng, 1, 4),
+                bursts_per_phase: small_size(rng, 1, 3),
+                burst: small_size(rng, 1, 5),
+                period_s: rng.range_f64(2.0, 25.0),
+                n_out: 8,
+                focus: rng.f64(),
+                seed: case as u64 ^ 0xDF17,
+            };
+            let trace = drifting_topic_trace(&corpus, &spec);
+            let again = drifting_topic_trace(&corpus, &spec);
+            assert_eq!(trace.len(), again.len());
+            for (a, b) in trace.iter().zip(&again) {
+                assert_eq!(a.id, b.id);
+                assert!(a.arrival_s == b.arrival_s, "drift generator not rerun-stable");
+            }
+
+            let opts = ServeOptions {
+                keepalive_s: rng.range_f64(2.0, 12.0),
+                main_instances: rng.range_u(1, 4),
+                batch_capacity: rng.range_u(1, 3),
+                autoscale: AutoscalePolicy::ExpertPrefetch {
+                    decay_s: rng.range_f64(10.0, 120.0),
+                    lookahead_s: rng.range_f64(1.0, 10.0),
+                    min_share: rng.range_f64(0.0, 0.1),
+                },
+                autoscale_tick_s: rng.range_f64(1.0, 6.0),
+                overhead: InvokeOverhead::Expected,
+                ..ServeOptions::default()
+            };
+            let mut platform =
+                Platform::new(&PlatformConfig::default(), opts.seed ^ case as u64);
+            let mut policy = SyntheticServePolicy::default();
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+            assert_eq!(agg.len(), trace.len());
+
+            let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+            let total = platform.billing.total();
+            let records = agg.total_cost();
+            assert!(
+                (total - records - prewarm).abs() <= 1e-9 * total.max(1.0),
+                "ledger {total} != Σ records {records} + prewarm {prewarm}"
+            );
+        },
+    );
 }
