@@ -64,13 +64,12 @@ fn main() -> anyhow::Result<()> {
         AutoscalePolicy::FixedWarmPool { floor: 1 },
         AutoscalePolicy::predictive(),
     ] {
-        let opts = ServeOptions {
-            keepalive_s: 10.0,
-            main_instances: burst,
-            batch_capacity: 8,
-            autoscale: pol,
-            ..ServeOptions::default()
-        };
+        let opts = ServeOptions::builder()
+            .keepalive_s(10.0)
+            .main_instances(burst)
+            .batch_capacity(8)
+            .autoscale(pol)
+            .build();
         let mut platform = Platform::new(&planner.platform, opts.seed);
         let agg = {
             let mut policy = RemoePolicy {

@@ -73,7 +73,7 @@ fn run<B: Backend>(
         &corpus,
         &TraceSpec { rate_per_s, n_requests, n_out, seed: 13 },
     );
-    let opts = ServeOptions { batch_capacity, ..ServeOptions::default() };
+    let opts = ServeOptions::builder().batch_capacity(batch_capacity).build();
 
     eprintln!(
         "serving {n_requests} requests (Poisson {rate_per_s}/s, batch {batch_capacity}) \

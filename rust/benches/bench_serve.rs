@@ -17,14 +17,13 @@ use remoe::workload::trace::synthetic_trace;
 
 fn run_once(n: usize, seed: u64) -> (f64, Aggregator, Platform) {
     let trace = synthetic_trace(n, 50.0, 16, seed);
-    let opts = ServeOptions {
-        main_instances: 8,
-        batch_capacity: 4,
-        overhead: InvokeOverhead::Expected,
-        streaming: true,
-        seed,
-        ..ServeOptions::default()
-    };
+    let opts = ServeOptions::builder()
+        .main_instances(8)
+        .batch_capacity(4)
+        .overhead(InvokeOverhead::Expected)
+        .streaming(true)
+        .seed(seed)
+        .build();
     let mut platform = Platform::new(&PlatformConfig::default(), opts.seed);
     let mut policy = SyntheticServePolicy::default();
     let t0 = std::time::Instant::now();

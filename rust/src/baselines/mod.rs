@@ -517,7 +517,7 @@ mod tests {
         let corpus = Corpus::new(standard_corpora()[0].clone());
         let (_, test) = corpus.split(0, 3, 5);
         let trace = batch_trace(&test, 8);
-        let opts = ServeOptions { batch_capacity: 4, ..ServeOptions::default() };
+        let opts = ServeOptions::builder().batch_capacity(4).build();
         let mut platform = Platform::new(&ev.platform, opts.seed);
         let mut policy = BaselinePolicy { engine: &mut engine, ev: &ev, strategy: Strategy::Mix };
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();

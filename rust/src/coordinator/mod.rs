@@ -19,5 +19,5 @@ pub use history::{build_history, ground_truth, prompt_ids, prompt_signature};
 pub use planner::{PlanOutput, Planner};
 pub use serve::{
     serve_on_platform, serve_remoe, serve_remoe_with, DriftReplan, RemoePolicy, RemoteLayerCall,
-    ServeOptions, ServePolicy, ServicePlan, SyntheticServePolicy,
+    ServeOptions, ServeOptionsBuilder, ServePolicy, ServicePlan, SyntheticServePolicy,
 };

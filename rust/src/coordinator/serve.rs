@@ -54,6 +54,21 @@
 //! carries an SLO witness (`slo_ok`: TTFT ≤ the class's target) that
 //! [`Aggregator`] folds into per-class attainment in both modes.
 //!
+//! **Sessions** (`ServeOptions::kv_budget` > 0): requests carry
+//! `session_id`/`turn` (see
+//! [`session_trace_over`](crate::workload::trace::session_trace_over)).
+//! After a turn is served, its session's KV cache is recorded as
+//! resident on the serving instance (bounded per-instance budget, LRU
+//! eviction). A follow-up turn routes **affinity-first**: if its
+//! session's KV is resident on a live instance it prefills *there*
+//! via `invoke_on` — no cold start, no transfer, and only
+//! `kv_hit_prefill_factor` of the full prefill (the cached context
+//! does not re-prefill). A miss — eviction, keep-alive expiry, or
+//! affinity-blind routing — admits normally at weight
+//! `prefill_weight` and pays `kv_recompute_factor` extra prefill to
+//! rebuild the session KV, charged to that turn's cost and TTFT.
+//! Turn-0 requests never check affinity and never pay the penalty.
+//!
 //! Determinism: all virtual-time quantities derive from the analytic
 //! models plus the seeded platform RNG. Host wall-clock only enters
 //! `calc_time_s` / `engine_wall_s`, which
@@ -117,6 +132,30 @@ pub struct ServeOptions {
     /// (priority 0, unlimited quota, default TTFT target) reproduces
     /// tenant-blind FIFO scheduling exactly.
     pub tenants: TenantRegistry,
+    /// Execution slots a prefill admission claims (≥ 1) — the
+    /// disaggregation weight: a compute-bound prefill displaces
+    /// `prefill_weight` densely-packing decode slots for its duration.
+    /// 1 (the default) reproduces the symmetric slot model exactly.
+    pub prefill_weight: usize,
+    /// Resident KV sessions one main-model instance may hold (LRU-
+    /// evicted beyond the budget). 0 (the default) disables
+    /// session-aware serving entirely: no residency is tracked, no
+    /// affinity is routed, and no recompute penalty is charged —
+    /// byte-identical to the pre-session scheduler.
+    pub kv_budget: usize,
+    /// Route follow-up turns to the instance holding their session's
+    /// KV cache when it is still live. Disable for the
+    /// session-oblivious control: every follow-up turn is a miss and
+    /// pays the recompute penalty. Only meaningful with a nonzero
+    /// `kv_budget`.
+    pub affinity_routing: bool,
+    /// Fraction of the full prefill a KV-resident follow-up turn pays
+    /// (only the new tokens prefill; the session context is cached).
+    pub kv_hit_prefill_factor: f64,
+    /// Extra prefill fraction a follow-up miss pays on top of its
+    /// full prefill to recompute the evicted/expired session KV —
+    /// charged to that turn's cost and TTFT.
+    pub kv_recompute_factor: f64,
 }
 
 impl Default for ServeOptions {
@@ -131,7 +170,110 @@ impl Default for ServeOptions {
             autoscale_tick_s: 5.0,
             streaming: false,
             tenants: TenantRegistry::default(),
+            prefill_weight: 1,
+            kv_budget: 0,
+            affinity_routing: true,
+            kv_hit_prefill_factor: 0.35,
+            kv_recompute_factor: 0.25,
         }
+    }
+}
+
+impl ServeOptions {
+    /// Chainable constructor over the defaults — new knobs land as
+    /// builder setters instead of widening every literal call site.
+    pub fn builder() -> ServeOptionsBuilder {
+        ServeOptionsBuilder { opts: ServeOptions::default() }
+    }
+
+    /// Builder seeded from this value (the `..base.clone()` idiom:
+    /// derive a variant differing in a knob or two).
+    pub fn to_builder(&self) -> ServeOptionsBuilder {
+        ServeOptionsBuilder { opts: self.clone() }
+    }
+}
+
+/// Chainable [`ServeOptions`] constructor; see
+/// [`ServeOptions::builder`]. One setter per knob, `build()` returns
+/// the finished options.
+#[derive(Debug, Clone)]
+pub struct ServeOptionsBuilder {
+    opts: ServeOptions,
+}
+
+impl ServeOptionsBuilder {
+    pub fn keepalive_s(mut self, v: f64) -> Self {
+        self.opts.keepalive_s = v;
+        self
+    }
+
+    pub fn main_instances(mut self, v: usize) -> Self {
+        self.opts.main_instances = v;
+        self
+    }
+
+    pub fn batch_capacity(mut self, v: usize) -> Self {
+        self.opts.batch_capacity = v;
+        self
+    }
+
+    pub fn overhead(mut self, v: InvokeOverhead) -> Self {
+        self.opts.overhead = v;
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.opts.seed = v;
+        self
+    }
+
+    pub fn autoscale(mut self, v: AutoscalePolicy) -> Self {
+        self.opts.autoscale = v;
+        self
+    }
+
+    pub fn autoscale_tick_s(mut self, v: f64) -> Self {
+        self.opts.autoscale_tick_s = v;
+        self
+    }
+
+    pub fn streaming(mut self, v: bool) -> Self {
+        self.opts.streaming = v;
+        self
+    }
+
+    pub fn tenants(mut self, v: TenantRegistry) -> Self {
+        self.opts.tenants = v;
+        self
+    }
+
+    pub fn prefill_weight(mut self, v: usize) -> Self {
+        self.opts.prefill_weight = v;
+        self
+    }
+
+    pub fn kv_budget(mut self, v: usize) -> Self {
+        self.opts.kv_budget = v;
+        self
+    }
+
+    pub fn affinity_routing(mut self, v: bool) -> Self {
+        self.opts.affinity_routing = v;
+        self
+    }
+
+    pub fn kv_hit_prefill_factor(mut self, v: f64) -> Self {
+        self.opts.kv_hit_prefill_factor = v;
+        self
+    }
+
+    pub fn kv_recompute_factor(mut self, v: f64) -> Self {
+        self.opts.kv_recompute_factor = v;
+        self
+    }
+
+    pub fn build(self) -> ServeOptions {
+        self.opts
     }
 }
 
@@ -149,6 +291,13 @@ pub struct RemoteLayerCall {
     /// Aggregated remote decode busy time for this layer (eq. 9's
     /// duration factor).
     pub decode_work_s: f64,
+    /// SPS-*predicted* decode busy time for this layer (the
+    /// next-segment activation mass under the predicted distribution,
+    /// in the same units as `decode_work_s`). 0 when the policy has
+    /// no prediction; when present, the serve loop seeds the expert-
+    /// prefetch controller from it at prefill launch — a real
+    /// lookahead — instead of waiting for the realized decode mass.
+    pub predicted_decode_work_s: f64,
 }
 
 /// Everything the scheduler needs to drive one request through the
@@ -252,6 +401,7 @@ pub fn serve_on_platform(
 ) -> Result<Aggregator> {
     platform.keepalive_s = opts.keepalive_s;
     platform.overhead_mode = opts.overhead;
+    platform.set_kv_budget(opts.kv_budget);
     platform.deploy(FunctionSpec {
         name: MAIN_FN.into(),
         mem_mb: 0.0,
@@ -380,13 +530,48 @@ pub fn serve_on_platform(
         // already fold waiting on the remote chains into the analytic
         // prefill/decode times, so the two segments cover the whole
         // service time.
-        let prefill_inv = platform.invoke_at(MAIN_FN, t, sp.prefill_s, 0.0)?;
+        //
+        // Session-affinity routing (kv_budget > 0): a follow-up turn
+        // whose session KV is resident on a live instance prefills on
+        // that instance with only the hit fraction of the work — no
+        // cold start, no transfer, packing like a decode (weight 1).
+        // A follow-up miss (evicted, expired, or affinity-blind)
+        // admits normally at the prefill weight and pays the KV
+        // recompute penalty inside its prefill, so the penalty lands
+        // in both this turn's cost and its TTFT.
+        let sessions_on = opts.kv_budget > 0;
+        let affinity_inst = if sessions_on && opts.affinity_routing && req.turn > 0 {
+            platform.kv_locate(MAIN_FN, req.session_id, t)
+        } else {
+            None
+        };
+        let affinity_hit = affinity_inst.is_some();
+        let prefill_work = match (affinity_hit, sessions_on && req.turn > 0) {
+            (true, _) => sp.prefill_s * opts.kv_hit_prefill_factor,
+            (false, true) => sp.prefill_s * (1.0 + opts.kv_recompute_factor),
+            (false, false) => sp.prefill_s,
+        };
+        let prefill_inv = match affinity_inst {
+            Some(inst) => platform.invoke_on(MAIN_FN, inst, t, prefill_work)?,
+            None => platform.invoke_at_weighted(
+                MAIN_FN,
+                t,
+                prefill_work,
+                0.0,
+                opts.prefill_weight,
+            )?,
+        };
         let decode_inv = platform.invoke_on(
             MAIN_FN,
             prefill_inv.instance,
             prefill_inv.finished_at,
             sp.decode_s,
         )?;
+        if sessions_on {
+            // this turn's KV now lives where it was served; follow-up
+            // turns of the session route here while it stays resident
+            platform.kv_record(MAIN_FN, prefill_inv.instance, req.session_id);
+        }
         let launch = prefill_inv.service_start();
         let mut cold_eff = prefill_inv.cold_start_s;
 
@@ -438,18 +623,30 @@ pub fn serve_on_platform(
             }
         }
         if autoscaling && !sp.remote.is_empty() {
-            // feed the realised decode-segment activation mass back to
-            // the controller as it becomes known — expert-popularity
-            // trackers key their pre-warm floors off it one decode
-            // segment ahead of the requests it will serve
-            let activity: Vec<(String, f64)> = sp
+            // seed the controller from the SPS-*predicted* next-
+            // segment activation set at prefill launch when the policy
+            // supplies one — a real lookahead, available one decode
+            // segment earlier than the realized mass; otherwise fall
+            // back to feeding the realized decode-segment activation
+            // mass as it becomes known
+            let predicted: Vec<(String, f64)> = sp
                 .remote
                 .iter()
-                .filter(|rl| rl.decode_work_s > 0.0)
-                .map(|rl| (expert_fn(rl.layer), rl.decode_work_s))
+                .filter(|rl| rl.predicted_decode_work_s > 0.0)
+                .map(|rl| (expert_fn(rl.layer), rl.predicted_decode_work_s))
                 .collect();
-            if !activity.is_empty() {
-                scaler.observe_activity(decode_inv.started_at, &activity);
+            if !predicted.is_empty() {
+                scaler.observe_activity(launch, &predicted);
+            } else {
+                let activity: Vec<(String, f64)> = sp
+                    .remote
+                    .iter()
+                    .filter(|rl| rl.decode_work_s > 0.0)
+                    .map(|rl| (expert_fn(rl.layer), rl.decode_work_s))
+                    .collect();
+                if !activity.is_empty() {
+                    scaler.observe_activity(decode_inv.started_at, &activity);
+                }
             }
         }
         // attribution: everything this request's invocations billed,
@@ -477,7 +674,7 @@ pub fn serve_on_platform(
             + prefill_inv.queue_delay_s
             + cold_eff
             + prefill_inv.invoke_overhead_s
-            + sp.prefill_s;
+            + prefill_work;
         agg.push(RequestRecord {
             id: req.id,
             strategy: policy.strategy(),
@@ -499,6 +696,9 @@ pub fn serve_on_platform(
             concurrency: in_flight,
             tenant: tn,
             slo_ok: ttft_s <= class.slo.ttft_target_s,
+            session: req.session_id,
+            turn: req.turn,
+            affinity_hit,
         });
     }
     platform.set_tenant(None);
@@ -649,17 +849,29 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
                         * dims.token_bytes
                 })
                 .collect();
+            let per_mass_s = lat.perf.expert_token_time(plan.remote_mem_mb[l])
+                + 2.0 * lat.net.transfer_time(dims.token_bytes)
+                + lat.t_rem_s;
             let mut decode_work_s = 0.0;
             for step in &profile.decode_routing {
                 for &(k, mass) in &step[l] {
                     if plan.remote[l][k] {
-                        decode_work_s += mass
-                            * (lat.perf.expert_token_time(plan.remote_mem_mb[l])
-                                + 2.0 * lat.net.transfer_time(dims.token_bytes)
-                                + lat.t_rem_s);
+                        decode_work_s += mass * per_mass_s;
                     }
                 }
             }
+            // the SPS-predicted analogue of `decode_work_s`: the
+            // predicted per-token remote activation mass of this
+            // layer over the requested decode length — available at
+            // plan time, one decode segment ahead of the realization
+            let predicted_decode_work_s = req.n_out as f64
+                * dist[l]
+                    .iter()
+                    .enumerate()
+                    .filter(|&(k, _)| plan.remote[l][k])
+                    .map(|(_, &m)| m)
+                    .sum::<f64>()
+                * per_mass_s;
             remote.push(RemoteLayerCall {
                 layer: l,
                 mem_mb: plan.remote_mem_mb[l],
@@ -667,6 +879,7 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
                 replica_work_s,
                 replica_payload_bytes,
                 decode_work_s,
+                predicted_decode_work_s,
             });
         }
 
@@ -761,7 +974,7 @@ pub fn serve_remoe<B: Backend>(
     trace: &[Request],
     keepalive_s: f64,
 ) -> Result<Aggregator> {
-    let opts = ServeOptions { keepalive_s, ..ServeOptions::default() };
+    let opts = ServeOptions::builder().keepalive_s(keepalive_s).build();
     serve_remoe_with(engine, planner, predictor, trace, &opts)
 }
 
@@ -847,6 +1060,8 @@ mod tests {
                 prompt,
                 n_out: 8,
                 tenant: 0,
+                session_id: id as u64,
+                turn: 0,
             })
             .collect();
         let serve = |engine: &mut Engine<crate::model::NativeBackend>,
@@ -854,11 +1069,7 @@ mod tests {
             // keep-alive above the 5 s control tick so a held floor
             // cannot decay between ticks, yet far below the 30 s
             // arrival gap so the reactive pool always expires
-            let opts = ServeOptions {
-                keepalive_s: 6.0,
-                autoscale,
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::builder().keepalive_s(6.0).autoscale(autoscale).build();
             let mut platform = Platform::new(&planner.platform, opts.seed);
             let mut policy = RemoePolicy {
                 engine,
@@ -895,13 +1106,12 @@ mod tests {
     fn streaming_serve_matches_full_serve_on_a_synthetic_trace() {
         let trace = crate::workload::trace::synthetic_trace(300, 5.0, 16, 7);
         let run = |streaming: bool| {
-            let opts = ServeOptions {
-                main_instances: 4,
-                batch_capacity: 4,
-                overhead: InvokeOverhead::Expected,
-                streaming,
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::builder()
+                .main_instances(4)
+                .batch_capacity(4)
+                .overhead(InvokeOverhead::Expected)
+                .streaming(streaming)
+                .build();
             let mut platform =
                 Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
             let mut policy = SyntheticServePolicy::default();
@@ -938,15 +1148,14 @@ mod tests {
         };
         let trace = crate::workload::trace::drifting_topic_trace(&corpus, &spec);
         let run = || {
-            let opts = ServeOptions {
-                main_instances: 3,
-                batch_capacity: 2,
-                keepalive_s: 4.0,
-                autoscale: AutoscalePolicy::expert_prefetch(),
-                autoscale_tick_s: 2.0,
-                overhead: InvokeOverhead::Expected,
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::builder()
+                .main_instances(3)
+                .batch_capacity(2)
+                .keepalive_s(4.0)
+                .autoscale(AutoscalePolicy::expert_prefetch())
+                .autoscale_tick_s(2.0)
+                .overhead(InvokeOverhead::Expected)
+                .build();
             let mut platform =
                 Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
             let mut policy = SyntheticServePolicy::default();
@@ -994,11 +1203,8 @@ mod tests {
         // (high) must always be admitted before the same-time tenant 0.
         let trace = synthetic_two_tenant_trace(8);
         let run = |tenants: TenantRegistry| {
-            let opts = ServeOptions {
-                overhead: InvokeOverhead::Expected,
-                tenants,
-                ..ServeOptions::default()
-            };
+            let opts =
+                ServeOptions::builder().overhead(InvokeOverhead::Expected).tenants(tenants).build();
             let mut platform =
                 Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
             let mut policy = SyntheticServePolicy::default();
@@ -1036,13 +1242,12 @@ mod tests {
         // completions and the wait shows up in queue delay
         let trace = synthetic_two_tenant_trace(6);
         let run = |spec: &str| {
-            let opts = ServeOptions {
-                main_instances: 8,
-                batch_capacity: 8,
-                overhead: InvokeOverhead::Expected,
-                tenants: tenant_registry(spec),
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::builder()
+                .main_instances(8)
+                .batch_capacity(8)
+                .overhead(InvokeOverhead::Expected)
+                .tenants(tenant_registry(spec))
+                .build();
             let mut platform =
                 Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
             let mut policy = SyntheticServePolicy::default();
@@ -1089,12 +1294,11 @@ mod tests {
     #[test]
     fn per_tenant_ledger_attribution_and_slo_metric() {
         let trace = synthetic_two_tenant_trace(6);
-        let opts = ServeOptions {
-            batch_capacity: 2,
-            overhead: InvokeOverhead::Expected,
-            tenants: tenant_registry("bronze,ttft=0.0;gold,prio=3,ttft=30.0"),
-            ..ServeOptions::default()
-        };
+        let opts = ServeOptions::builder()
+            .batch_capacity(2)
+            .overhead(InvokeOverhead::Expected)
+            .tenants(tenant_registry("bronze,ttft=0.0;gold,prio=3,ttft=30.0"))
+            .build();
         let mut platform = Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
         let mut policy = SyntheticServePolicy::default();
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
@@ -1145,6 +1349,241 @@ mod tests {
         assert!(
             (ledger - records).abs() < 1e-9 * ledger.max(1.0),
             "ledger {ledger} != Σ records {records}"
+        );
+    }
+
+    fn session_trace() -> Vec<Request> {
+        use crate::workload::trace::{session_trace_over, ArrivalProcess, SessionSpec};
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, prompts) = corpus.split(4, 6, 5);
+        session_trace_over(
+            &prompts,
+            &SessionSpec {
+                sessions: 4,
+                starts: ArrivalProcess::Bursty { burst: 2, period_s: 8.0 },
+                turns: 3,
+                think_s: 5.0,
+                n_out: 8,
+                seed: 23,
+            },
+        )
+    }
+
+    fn serve_sessions(trace: &[Request], opts: &ServeOptions) -> (Aggregator, Platform) {
+        let mut platform = Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+        let mut policy = SyntheticServePolicy::default();
+        let agg = serve_on_platform(&mut policy, trace, &mut platform, opts).unwrap();
+        (agg, platform)
+    }
+
+    #[test]
+    fn affinity_routing_pins_followups_to_the_kv_holder_and_wins() {
+        // think gaps (~5 s) sit far inside the keep-alive, so with an
+        // ample budget every follow-up turn must find its session's KV
+        // resident and route back to the opening turn's instance
+        let trace = session_trace();
+        let base = ServeOptions::builder()
+            .main_instances(2)
+            .batch_capacity(4)
+            .overhead(InvokeOverhead::Expected)
+            .keepalive_s(120.0)
+            .kv_budget(8)
+            .build();
+        let (aware, p_aware) = serve_sessions(&trace, &base);
+        let blind = base.to_builder().affinity_routing(false).build();
+        let (ctrl, p_ctrl) = serve_sessions(&trace, &blind);
+        for (agg, platform) in [(&aware, &p_aware), (&ctrl, &p_ctrl)] {
+            // no autoscaler → no pre-warm component; the ledger is
+            // exactly the per-request attribution
+            let ledger = platform.billing.total();
+            assert!((ledger - agg.total_cost()).abs() <= 1e-9 * ledger.max(1.0));
+            assert!(agg.records.iter().all(|r| r.turn > 0 || !r.affinity_hit));
+        }
+        assert!((aware.affinity_hit_rate() - 1.0).abs() < 1e-12, "warm follow-ups must all hit");
+        assert_eq!(ctrl.affinity_hits(), 0, "the blind control must never hit");
+        assert_eq!(ctrl.affinity_hit_rate(), 0.0);
+        // a hit serves on the instance that holds the session KV: the
+        // one its previous turn was served on — warm, so no cold start
+        let mut last_inst = std::collections::BTreeMap::new();
+        for r in &aware.records {
+            if r.affinity_hit {
+                assert_eq!(r.instance, last_inst[&r.session], "hit routed off the KV holder");
+                assert_eq!(r.main_cold_s, 0.0, "an affinity hit is a warm invoke");
+            }
+            last_inst.insert(r.session, r.instance);
+        }
+        // the strict win: same trace, same seeds — affinity serves
+        // follow-ups faster and never costs more than recompute-always
+        assert!(aware.followup_ttft_mean() < ctrl.followup_ttft_mean());
+        assert!(aware.total_cost() <= ctrl.total_cost() * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn affinity_miss_after_lru_eviction_bills_the_penalty_exactly_once() {
+        // budget 1 on a single instance: session B's opening turn
+        // evicts session A's KV, so A's follow-up misses and must pay
+        // the recompute factor on top of its full prefill — once
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, prompts) = corpus.split(4, 6, 5);
+        let req = |id: usize, arrival_s: f64, session_id: u64, turn: usize| Request {
+            id,
+            arrival_s,
+            prompt: prompts[id % prompts.len()].clone(),
+            n_out: 8,
+            tenant: 0,
+            session_id,
+            turn,
+        };
+        let trace =
+            vec![req(0, 0.0, 100, 0), req(1, 0.5, 200, 0), req(2, 10.0, 100, 1)];
+        let opts = ServeOptions::builder()
+            .batch_capacity(4)
+            .overhead(InvokeOverhead::Expected)
+            .kv_budget(1)
+            .build();
+        let (agg, platform) = serve_sessions(&trace, &opts);
+        assert_eq!(platform.kv_resident(MAIN_FN), 1, "budget 1 holds one session");
+        let miss = &agg.records[2];
+        assert_eq!((miss.turn, miss.affinity_hit), (1, false));
+        assert_eq!(miss.main_cold_s, 0.0, "the instance itself is still warm");
+        // rerun with the penalty zeroed: the TTFT delta must be the
+        // recompute term exactly — charged once, not per eviction or
+        // per resident session
+        let free = opts.to_builder().kv_recompute_factor(0.0).build();
+        let (base, _) = serve_sessions(&trace, &free);
+        let sp = SyntheticServePolicy::default();
+        let delta = miss.ttft_s - base.records[2].ttft_s;
+        assert!(
+            (delta - opts.kv_recompute_factor * sp.prefill_s).abs() < 1e-12,
+            "recompute penalty billed {delta}, expected exactly {}",
+            opts.kv_recompute_factor * sp.prefill_s
+        );
+        assert!(miss.cost > base.records[2].cost, "the penalty must reach the ledger");
+        // turn-0 records are identical across the two runs: the
+        // penalty knob touches follow-up misses only
+        assert_eq!(agg.records[0].ttft_s, base.records[0].ttft_s);
+        assert_eq!(agg.records[1].ttft_s, base.records[1].ttft_s);
+    }
+
+    #[test]
+    fn session_serve_is_deterministic_and_off_by_default() {
+        let trace = session_trace();
+        let opts = ServeOptions::builder()
+            .main_instances(2)
+            .batch_capacity(2)
+            .kv_budget(4)
+            .prefill_weight(2)
+            .build();
+        let (a, _) = serve_sessions(&trace, &opts);
+        let (b, _) = serve_sessions(&trace, &opts);
+        // byte-identical canonical stream across reruns — the hash
+        // covers session/turn/affinity fields too
+        assert_eq!(a.canonical(), b.canonical());
+        assert_eq!(a.canonical_hash(), b.canonical_hash());
+        assert!(a.records.iter().any(|r| r.affinity_hit));
+        // kv_budget 0 (the default): session-blind — no residency, no
+        // affinity, no penalty, even on a session trace
+        let (off, platform) = serve_sessions(&trace, &ServeOptions::default());
+        assert_eq!(off.affinity_hits(), 0);
+        assert_eq!(platform.kv_resident(MAIN_FN), 0);
+    }
+
+    /// Plan with one 4-replica remote-expert layer whose decode runs
+    /// entirely locally (`decode_work_s` 0) but whose SPS prediction
+    /// may still flag the next-segment activation mass.
+    struct PredictedExpertPolicy {
+        predicted_decode_work_s: f64,
+    }
+
+    impl ServePolicy for PredictedExpertPolicy {
+        fn strategy(&self) -> &'static str {
+            "PredictedExpert"
+        }
+
+        fn plan(&mut self, req: &Request) -> Result<ServicePlan> {
+            Ok(ServicePlan {
+                n_in: 64,
+                n_out: req.n_out,
+                prefill_s: 0.05,
+                decode_s: 0.01 * req.n_out as f64,
+                main_mem_mb: 1000.0,
+                main_gpu_mb: 500.0,
+                main_footprint_mb: 1000.0,
+                remote: vec![RemoteLayerCall {
+                    layer: 0,
+                    mem_mb: 100.0,
+                    footprint_mb: 100.0,
+                    replica_work_s: vec![0.02; 4],
+                    replica_payload_bytes: vec![0.0; 4],
+                    decode_work_s: 0.0,
+                    predicted_decode_work_s: self.predicted_decode_work_s,
+                }],
+                calc_time_s: 0.0,
+                engine_wall_s: 0.0,
+            })
+        }
+    }
+
+    #[test]
+    fn sps_prediction_seeds_expert_prefetch_ahead_of_realized_activity() {
+        // regression for the prediction-seeding hook: with
+        // `decode_work_s` 0 the realized fallback feeds the prefetch
+        // tracker *nothing*, so only the SPS-predicted activation mass
+        // (observed at prefill launch) can earn the expert function a
+        // full 4-replica floor before the second arrival. Without it
+        // the tracker sees just the admission demand and holds one
+        // replica — the other three spawn cold.
+        let corpus = Corpus::new(standard_corpora()[0].clone());
+        let (_, prompts) = corpus.split(4, 6, 5);
+        let trace: Vec<Request> = [0.0, 20.0]
+            .iter()
+            .enumerate()
+            .map(|(id, &arrival_s)| Request {
+                id,
+                arrival_s,
+                prompt: prompts[id % prompts.len()].clone(),
+                n_out: 8,
+                tenant: 0,
+                session_id: id as u64,
+                turn: 0,
+            })
+            .collect();
+        let opts = ServeOptions::builder()
+            .keepalive_s(6.0)
+            .overhead(InvokeOverhead::Expected)
+            .autoscale(AutoscalePolicy::ExpertPrefetch {
+                decay_s: 90.0,
+                lookahead_s: 5.0,
+                min_share: 0.0,
+            })
+            .autoscale_tick_s(2.0)
+            .build();
+        let run = |predicted_decode_work_s: f64| {
+            let mut platform =
+                Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
+            let mut policy = PredictedExpertPolicy { predicted_decode_work_s };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+            let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+            let ledger = platform.billing.total();
+            assert!(
+                (ledger - agg.total_cost() - prewarm).abs() <= 1e-9 * ledger.max(1.0),
+                "ledger {ledger} != Σ costs {} + prewarm {prewarm}",
+                agg.total_cost()
+            );
+            agg
+        };
+        let seeded = run(200.0);
+        let demand_only = run(0.0);
+        for agg in [&seeded, &demand_only] {
+            assert!(agg.records[0].cold_start_s > 0.0, "nothing to prefetch before request 0");
+        }
+        assert_eq!(
+            seeded.records[1].cold_start_s, 0.0,
+            "prediction-seeded prefetch must pre-warm all four replicas"
+        );
+        assert!(
+            demand_only.records[1].cold_start_s > 0.0,
+            "without the predicted mass the demand-only floor leaves replicas cold"
         );
     }
 }

@@ -72,13 +72,12 @@ pub fn autoscale(scale: Scale) -> Result<()> {
     let burst = 6;
     let bursts = 3;
     let period_s = 30.0;
-    let base = ServeOptions {
-        keepalive_s: 10.0,
-        main_instances: burst,
-        batch_capacity: 8,
-        autoscale_tick_s: 5.0,
-        ..ServeOptions::default()
-    };
+    let base = ServeOptions::builder()
+        .keepalive_s(10.0)
+        .main_instances(burst)
+        .batch_capacity(8)
+        .autoscale_tick_s(5.0)
+        .build();
     let (mut ctx, sps, test) = setup_model("gpt2", scale)?;
     let planner = ctx.planner(&cfg);
     let ev = BaselineEvaluator::new(&ctx.dims, &cfg.platform);
@@ -101,7 +100,7 @@ pub fn autoscale(scale: Scale) -> Result<()> {
     ];
     let mut runs: Vec<PolicyRun> = Vec::new();
     for &pol in &policies {
-        let opts = ServeOptions { autoscale: pol, ..base.clone() };
+        let opts = base.to_builder().autoscale(pol).build();
         let mut platform = Platform::new(&planner.platform, opts.seed);
         let mut policy = RemoePolicy {
             engine: &mut ctx.engine,

@@ -10,6 +10,7 @@ pub mod multitenant_exps;
 pub mod overall_exps;
 pub mod prediction_exps;
 pub mod profile_exps;
+pub mod sessions_exps;
 
 pub use common::Scale;
 
@@ -17,7 +18,7 @@ use anyhow::{bail, Result};
 
 pub const ALL: &[&str] = &[
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11",
-    "serving", "autoscale", "multitenant", "summary",
+    "serving", "autoscale", "multitenant", "sessions", "summary",
 ];
 
 /// Run one experiment by id.
@@ -36,6 +37,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "serving" => overall_exps::serving(scale),
         "autoscale" => autoscale_exps::autoscale(scale),
         "multitenant" => multitenant_exps::multitenant(scale),
+        "sessions" => sessions_exps::sessions(scale),
         "summary" => overall_exps::summary(scale),
         "all" => {
             for id in ALL {

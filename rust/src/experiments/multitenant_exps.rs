@@ -108,7 +108,7 @@ fn remoe_run(
     tenants: TenantRegistry,
     mem_history: Option<MemEstimator>,
 ) -> Result<(Aggregator, Platform)> {
-    let opts = ServeOptions { tenants, ..base.clone() };
+    let opts = base.to_builder().tenants(tenants).build();
     let mut platform = Platform::new(&planner.platform, opts.seed);
     let mut policy = RemoePolicy {
         engine: &mut ctx.engine,
@@ -128,7 +128,7 @@ fn mix_run(
     base: &ServeOptions,
     tenants: TenantRegistry,
 ) -> Result<(Aggregator, Platform)> {
-    let opts = ServeOptions { tenants, ..base.clone() };
+    let opts = base.to_builder().tenants(tenants).build();
     let mut platform = Platform::new(&ev.platform, opts.seed);
     let mut policy = BaselineProfilePolicy { ev, strategy: Strategy::Mix, profiles };
     let agg = serve_on_platform(&mut policy, trace, &mut platform, &opts)?;
@@ -172,12 +172,11 @@ pub fn multitenant(scale: Scale) -> Result<()> {
         },
     ];
     let trace = multi_tenant_trace_over(&test, &specs, 23);
-    let base = ServeOptions {
-        main_instances: 2,
-        batch_capacity: 2,
-        keepalive_s: 5.0,
-        ..ServeOptions::default()
-    };
+    let base = ServeOptions::builder()
+        .main_instances(2)
+        .batch_capacity(2)
+        .keepalive_s(5.0)
+        .build();
     println!(
         "-- {} ({} bronze + {} gold, bursts of 4+2 every {:.0}s, 2 instances x 2 slots) --",
         ctx.dims.name, n_bronze, n_gold, period_s

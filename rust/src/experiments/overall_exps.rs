@@ -282,13 +282,12 @@ fn serving_bench_row(model: &str, agg: &Aggregator, capacity: usize) -> Json {
 fn serve_scale(scale: Scale) -> Result<Json> {
     let n: usize = if scale.requests >= 50 { 1_000_000 } else { 20_000 };
     let trace = synthetic_trace(n, 50.0, 16, 0xBE9C);
-    let opts = ServeOptions {
-        main_instances: 8,
-        batch_capacity: 4,
-        overhead: InvokeOverhead::Expected,
-        streaming: true,
-        ..ServeOptions::default()
-    };
+    let opts = ServeOptions::builder()
+        .main_instances(8)
+        .batch_capacity(4)
+        .overhead(InvokeOverhead::Expected)
+        .streaming(true)
+        .build();
     let mut platform = Platform::new(&crate::config::PlatformConfig::default(), opts.seed);
     let mut policy = SyntheticServePolicy::default();
     let t0 = std::time::Instant::now();
@@ -356,7 +355,7 @@ pub fn serving(scale: Scale) -> Result<()> {
             profiles.push(ctx.measured_profile(&req.prompt, req.n_out)?);
         }
         let unbatched = ServeOptions::default();
-        let batched = ServeOptions { batch_capacity, ..ServeOptions::default() };
+        let batched = ServeOptions::builder().batch_capacity(batch_capacity).build();
         println!(
             "-- {} ({} requests, Poisson {:.1}/s, keep-alive {:.0}s, 1 main instance) --",
             ctx.dims.name,
@@ -519,13 +518,12 @@ fn expert_prefetch_section(scale: Scale) -> Result<Json> {
         seed: 33,
     };
     let trace = drifting_topic_trace(&corpus, &spec);
-    let base = ServeOptions {
-        keepalive_s: 6.0,
-        main_instances: spec.burst,
-        batch_capacity: 2,
-        autoscale_tick_s: 5.0,
-        ..ServeOptions::default()
-    };
+    let base = ServeOptions::builder()
+        .keepalive_s(6.0)
+        .main_instances(spec.burst)
+        .batch_capacity(2)
+        .autoscale_tick_s(5.0)
+        .build();
     println!(
         "-- {} ({} phases x {} bursts of {}, period {:.0}s, focus {:.0}%) --",
         ctx.dims.name,
@@ -537,7 +535,7 @@ fn expert_prefetch_section(scale: Scale) -> Result<Json> {
     );
     let mut run = |pol: AutoscalePolicy| -> Result<PrefetchRun> {
         let name = pol.name().to_string();
-        let opts = ServeOptions { autoscale: pol, ..base.clone() };
+        let opts = base.to_builder().autoscale(pol).build();
         let mut platform = Platform::new(&planner.platform, opts.seed);
         let mut policy = RemoePolicy {
             engine: &mut ctx.engine,

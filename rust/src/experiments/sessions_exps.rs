@@ -1,0 +1,256 @@
+//! Session serving experiment: KV-cache affinity routing vs
+//! affinity-blind admission on a bursty multi-turn chat trace.
+//!
+//! Sessions open in bursts and come back every few seconds of think
+//! time with their whole history re-sent, so a follow-up prefill is
+//! *more* expensive than its opener unless the turn lands on the
+//! instance still holding the session's KV cache. Both modes serve
+//! the *same* trace through the same scheduler substrate; the only
+//! difference is `ServeOptions::affinity_routing`. The blind mode
+//! still pays the honest KV-recompute penalty on every follow-up —
+//! the context has to be rebuilt wherever the request lands — so the
+//! comparison isolates what routing itself buys: warm hits at a
+//! fraction of the prefill, no cold/transfer on the hit path.
+//!
+//! Every run audits the ledger identity
+//! `total == Σ request costs + PrewarmIdle`, and the headline
+//! contract is a strict win for affinity routing: positive hit rate
+//! (the blind control hits nothing), strictly lower mean follow-up
+//! TTFT, at equal-or-lower total cost.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::coordinator::serve::MAIN_FN;
+use crate::coordinator::{serve_on_platform, RemoePolicy, ServeOptions};
+use crate::metrics::{fmt_f, Aggregator, Table};
+use crate::serverless::{CostComponent, InvokeOverhead, Platform};
+use crate::util::json::Json;
+use crate::workload::trace::{session_trace_over, ArrivalProcess, SessionSpec};
+
+use super::common::{update_bench_json, write_csv, Scale};
+use super::overall_exps::setup_model;
+
+/// One routing mode's ledger-audited serving run.
+struct ModeRow {
+    mode: &'static str,
+    strategy: String,
+    followups: u64,
+    hit_rate: f64,
+    mean_followup_ttft_s: f64,
+    mean_ttft_s: f64,
+    request_cost: f64,
+    prewarm_cost: f64,
+    total_cost: f64,
+    kv_resident: usize,
+}
+
+fn audited_mode(
+    mode: &'static str,
+    agg: &Aggregator,
+    platform: &Platform,
+) -> Result<ModeRow> {
+    let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+    let total = platform.billing.total();
+    let request_cost = agg.total_cost();
+    anyhow::ensure!(
+        (total - request_cost - prewarm).abs() <= 1e-9 * total.max(1.0),
+        "ledger audit failed under {mode}: total {total} != Σ request costs \
+         {request_cost} + prewarm idle {prewarm}"
+    );
+    Ok(ModeRow {
+        mode,
+        strategy: agg.strategy().to_string(),
+        followups: agg.followup_count(),
+        hit_rate: agg.affinity_hit_rate(),
+        mean_followup_ttft_s: agg.followup_ttft_mean(),
+        mean_ttft_s: agg.ttft_summary().mean,
+        request_cost,
+        prewarm_cost: prewarm,
+        total_cost: total,
+        kv_resident: platform.kv_resident(MAIN_FN),
+    })
+}
+
+/// `exp sessions`: multi-turn chat trace, affinity-aware vs
+/// affinity-blind routing, per-turn TTFT breakdown.
+pub fn sessions(scale: Scale) -> Result<()> {
+    println!("\n== Sessions — KV-cache affinity routing on a bursty multi-turn trace ==");
+    let cfg = SystemConfig::default();
+    let (mut ctx, sps, test) = setup_model("gpt2", scale)?;
+    let planner = ctx.planner(&cfg);
+
+    let turns = 3;
+    let n_sessions = (scale.requests / turns).max(2);
+    let think_s = 5.0;
+    let spec = SessionSpec {
+        sessions: n_sessions,
+        starts: ArrivalProcess::Bursty { burst: 2, period_s: 8.0 },
+        turns,
+        think_s,
+        n_out: scale.n_out,
+        seed: 23,
+    };
+    let trace = session_trace_over(&test, &spec);
+    let base = ServeOptions::builder()
+        .main_instances(2)
+        .batch_capacity(4)
+        .keepalive_s(60.0)
+        .overhead(InvokeOverhead::Expected)
+        .kv_budget(64)
+        .build();
+    println!(
+        "-- {} ({} sessions x {} turns, starts in bursts of 2 every 8s, think {:.0}s, \
+         kv budget {}) --",
+        ctx.dims.name, n_sessions, turns, think_s, base.kv_budget
+    );
+
+    let mut run = |opts: &ServeOptions| -> Result<(Aggregator, Platform)> {
+        let mut platform = Platform::new(&planner.platform, opts.seed);
+        let mut policy = RemoePolicy {
+            engine: &mut ctx.engine,
+            planner: &planner,
+            predictor: &sps,
+            mem_history: None,
+            drift: None,
+        };
+        let agg = serve_on_platform(&mut policy, &trace, &mut platform, opts)?;
+        Ok((agg, platform))
+    };
+    let (aware_agg, aware_platform) = run(&base)?;
+    let blind_opts = base.to_builder().affinity_routing(false).build();
+    let (blind_agg, blind_platform) = run(&blind_opts)?;
+
+    let rows = [
+        audited_mode("affinity", &aware_agg, &aware_platform)?,
+        audited_mode("blind", &blind_agg, &blind_platform)?,
+    ];
+
+    let mut t = Table::new(&[
+        "mode",
+        "strategy",
+        "follow-ups",
+        "hit rate",
+        "mean follow-up ttft (s)",
+        "mean ttft (s)",
+        "request cost",
+        "prewarm cost",
+        "total cost",
+        "kv resident",
+    ]);
+    let mut csv_rows = Vec::new();
+    let mut bench_rows = Vec::new();
+    for r in &rows {
+        let row = vec![
+            r.mode.to_string(),
+            r.strategy.clone(),
+            r.followups.to_string(),
+            fmt_f(r.hit_rate, 2),
+            fmt_f(r.mean_followup_ttft_s, 3),
+            fmt_f(r.mean_ttft_s, 3),
+            fmt_f(r.request_cost, 1),
+            fmt_f(r.prewarm_cost, 1),
+            fmt_f(r.total_cost, 1),
+            r.kv_resident.to_string(),
+        ];
+        t.row(row.clone());
+        csv_rows.push(row);
+        let mut o = BTreeMap::new();
+        o.insert("mode".to_string(), Json::Str(r.mode.to_string()));
+        o.insert("strategy".to_string(), Json::Str(r.strategy.clone()));
+        o.insert("followups".to_string(), Json::Num(r.followups as f64));
+        o.insert("hit_rate".to_string(), Json::Num(r.hit_rate));
+        o.insert(
+            "mean_followup_ttft_s".to_string(),
+            Json::Num(r.mean_followup_ttft_s),
+        );
+        o.insert("mean_ttft_s".to_string(), Json::Num(r.mean_ttft_s));
+        o.insert("request_cost".to_string(), Json::Num(r.request_cost));
+        o.insert("prewarm_cost".to_string(), Json::Num(r.prewarm_cost));
+        o.insert("total_cost".to_string(), Json::Num(r.total_cost));
+        o.insert("kv_resident".to_string(), Json::Num(r.kv_resident as f64));
+        bench_rows.push(Json::Obj(o));
+    }
+    t.print();
+
+    // per-turn TTFT breakdown under affinity routing
+    let mut pt = Table::new(&["turn", "requests", "affinity hits", "mean ttft (s)"]);
+    for (&turn, ts) in aware_agg.per_turn() {
+        pt.row(vec![
+            turn.to_string(),
+            ts.count.to_string(),
+            ts.affinity_hits.to_string(),
+            fmt_f(ts.mean_ttft_s(), 3),
+        ]);
+    }
+    pt.print();
+
+    let (aware, blind) = (&rows[0], &rows[1]);
+    println!(
+        "affinity vs blind: hit rate {:.2} vs {:.2}, mean follow-up ttft {:.3}s vs {:.3}s, \
+         total cost {:+.1}%",
+        aware.hit_rate,
+        blind.hit_rate,
+        aware.mean_followup_ttft_s,
+        blind.mean_followup_ttft_s,
+        (aware.total_cost / blind.total_cost - 1.0) * 100.0,
+    );
+    // The headline contract: affinity routing strictly wins on hit
+    // rate and follow-up latency, at equal-or-lower total cost — a
+    // hit serves a fraction of the prefill on a warm instance instead
+    // of recomputing the whole context wherever admission lands.
+    anyhow::ensure!(
+        aware.hit_rate > 0.0,
+        "affinity routing must land some warm follow-ups (hit rate {})",
+        aware.hit_rate
+    );
+    anyhow::ensure!(
+        blind_agg.affinity_hits() == 0,
+        "the blind control must never report an affinity hit"
+    );
+    anyhow::ensure!(
+        aware.mean_followup_ttft_s < blind.mean_followup_ttft_s,
+        "mean follow-up TTFT must be strictly lower with affinity ({}) than blind ({})",
+        aware.mean_followup_ttft_s,
+        blind.mean_followup_ttft_s
+    );
+    anyhow::ensure!(
+        aware.total_cost <= blind.total_cost * (1.0 + 1e-9),
+        "affinity total cost {} must not exceed blind {}",
+        aware.total_cost,
+        blind.total_cost
+    );
+
+    write_csv(
+        "sessions_affinity",
+        &[
+            "mode",
+            "strategy",
+            "followups",
+            "hit_rate",
+            "mean_followup_ttft_s",
+            "mean_ttft_s",
+            "request_cost",
+            "prewarm_cost",
+            "total_cost",
+            "kv_resident",
+        ],
+        &csv_rows,
+    )?;
+    update_bench_json("sessions", Json::Arr(bench_rows))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_affinity_routing_beats_blind_admission() {
+        let tiny =
+            Scale { train: 40, test: 8, requests: 8, n_in: 96, n_out: 12, alpha: 5, beta: 15 };
+        sessions(tiny).unwrap();
+    }
+}

@@ -10,6 +10,11 @@
 //!             [--expert-prefetch]                   shorthand for --autoscale prefetch
 //!             [--tenants SPEC]                      SLO classes, e.g.
 //!                                                      "gold,prio=2,ttft=4,quota=2;bronze"
+//!             [--sessions] [--turns T] [--think S]  multi-turn session trace (T turns per
+//!                                                      session, mean think-time S seconds)
+//!             [--kv-budget B]                       resident KV sessions per instance
+//!                                                      (enables affinity routing; 0 = off)
+//!             [--prefill-weight K]                  slots a prefill admission claims
 //! remoe plan  [--model M]                           plan one request, print the deployment
 //! remoe info                                        artifact + model inventory
 //! ```
@@ -50,7 +55,8 @@ use remoe::util::logger;
 use remoe::util::rng::Rng;
 use remoe::workload::corpus::{standard_corpora, Corpus};
 use remoe::workload::trace::{
-    multi_tenant_trace_over, poisson_trace, ArrivalProcess, TenantTraceSpec, TraceSpec,
+    multi_tenant_trace_over, poisson_trace, session_trace_over, ArrivalProcess, SessionSpec,
+    TenantTraceSpec, TraceSpec,
 };
 
 fn main() {
@@ -112,11 +118,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => TenantRegistry::default(),
     };
     let defaults = ServeOptions::default();
-    let opts = ServeOptions {
-        keepalive_s: args.f64_or("keepalive", defaults.keepalive_s),
-        main_instances: args.usize_or("instances", 1),
-        batch_capacity: args.usize_or("batch", 1),
-        autoscale: if args.has("expert-prefetch") {
+    // --sessions serves a multi-turn trace; --kv-budget alone also
+    // enables session-aware routing on whatever trace is generated
+    let sessions_on = args.has("sessions");
+    let turns = args.usize_or("turns", 3).max(1);
+    let opts = ServeOptions::builder()
+        .keepalive_s(args.f64_or("keepalive", defaults.keepalive_s))
+        .main_instances(args.usize_or("instances", 1))
+        .batch_capacity(args.usize_or("batch", 1))
+        .autoscale(if args.has("expert-prefetch") {
             // per-expert EWMA prefetch (shorthand for --autoscale prefetch)
             AutoscalePolicy::expert_prefetch()
         } else {
@@ -124,11 +134,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Some(spec) => AutoscalePolicy::parse(spec)?,
                 None => AutoscalePolicy::Reactive,
             }
-        },
-        autoscale_tick_s: args.f64_or("autoscale-tick", defaults.autoscale_tick_s),
-        tenants: tenants.clone(),
-        ..defaults
-    };
+        })
+        .autoscale_tick_s(args.f64_or("autoscale-tick", defaults.autoscale_tick_s))
+        .tenants(tenants.clone())
+        .kv_budget(args.usize_or("kv-budget", if sessions_on { 8 } else { 0 }))
+        .prefill_weight(args.usize_or("prefill-weight", defaults.prefill_weight))
+        .build();
 
     let cfg = SystemConfig::default();
     let sla = SlaConfig::for_dims(&dims);
@@ -136,7 +147,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let corpus = Corpus::new(standard_corpora()[0].clone());
     let (train, _) = corpus.split(120, 0, seed);
-    let trace = if tenants.len() > 1 {
+    let trace = if sessions_on {
+        // --requests counts total turns; sessions open per Poisson
+        let mut rng = Rng::new(seed ^ 0x7E4A);
+        let sessions = (n_requests / turns).max(1);
+        let prompts: Vec<_> = (0..sessions).map(|_| corpus.sample(&mut rng, None)).collect();
+        session_trace_over(
+            &prompts,
+            &SessionSpec {
+                sessions,
+                starts: ArrivalProcess::Poisson { rate_per_s: rate },
+                turns,
+                think_s: args.f64_or("think", 10.0),
+                n_out,
+                seed,
+            },
+        )
+    } else if tenants.len() > 1 {
         // split the Poisson stream evenly across the declared classes
         let mut rng = Rng::new(seed ^ 0x7E4A);
         let prompts: Vec<_> =
@@ -238,6 +265,27 @@ fn serve_and_report<B: Backend>(
         opts.autoscale.name(),
         platform.billing.total(),
     );
+    if opts.kv_budget > 0 {
+        println!(
+            "sessions [kv budget {}]: affinity hit rate={:.2} ({}/{} follow-up turns)  \
+             mean follow-up ttft={:.2}s",
+            opts.kv_budget,
+            agg.affinity_hit_rate(),
+            agg.affinity_hits(),
+            agg.followup_count(),
+            agg.followup_ttft_mean(),
+        );
+        let mut st = Table::new(&["turn", "requests", "affinity hits", "mean ttft (s)"]);
+        for (&turn, ts) in agg.per_turn() {
+            st.row(vec![
+                turn.to_string(),
+                ts.count.to_string(),
+                ts.affinity_hits.to_string(),
+                fmt_f(ts.mean_ttft_s(), 2),
+            ]);
+        }
+        st.print();
+    }
     if opts.tenants.len() > 1 {
         let mut tt =
             Table::new(&["class", "requests", "slo attainment", "mean ttft (s)", "cost"]);

@@ -72,6 +72,15 @@ pub struct RequestRecord {
     /// Whether the request met its class's TTFT target — the
     /// per-record witness behind the SLO-attainment metric.
     pub slo_ok: bool,
+    /// Session the request belongs to (one-shot traces tag each
+    /// request with its own id, so every session is a singleton).
+    pub session: u64,
+    /// Turn index within the session (0 = opening turn; follow-up
+    /// turns are the KV-cache-affinity candidates).
+    pub turn: usize,
+    /// Whether the request was routed to an instance already holding
+    /// its session's KV state (always `false` for turn 0).
+    pub affinity_hit: bool,
 }
 
 impl RequestRecord {
@@ -89,7 +98,7 @@ fn canonical_line(r: &RequestRecord) -> String {
     format!(
         "id={} strategy={} n_in={} n_out={} arrival={:?} queue={:?} start={:?} \
          finish={:?} ttft={:?} tpot={:?} cost={:?} cold={:?} main_cold={:?} \
-         inst={} batch={} conc={} tenant={} slo={}\n",
+         inst={} batch={} conc={} tenant={} slo={} session={} turn={} aff={}\n",
         r.id,
         r.strategy,
         r.n_in,
@@ -108,6 +117,9 @@ fn canonical_line(r: &RequestRecord) -> String {
         r.concurrency,
         r.tenant,
         r.slo_ok as u8,
+        r.session,
+        r.turn,
+        r.affinity_hit as u8,
     )
 }
 
@@ -207,6 +219,31 @@ impl TenantStats {
     }
 }
 
+/// Running per-turn aggregate (counts, affinity hits, TTFT). Bounded
+/// by the maximum turn index of the trace, so it is maintained in
+/// both aggregation modes.
+#[derive(Debug, Clone)]
+pub struct TurnStats {
+    /// Requests observed at this turn index.
+    pub count: u64,
+    /// Of those, how many were routed with KV-cache affinity.
+    pub affinity_hits: u64,
+    ttft: Welford,
+}
+
+impl TurnStats {
+    fn new() -> TurnStats {
+        TurnStats { count: 0, affinity_hits: 0, ttft: Welford::new() }
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.ttft.mean
+    }
+}
+
 /// One reservoir-sampled record: the percentile-bearing metrics only.
 #[derive(Debug, Clone, Copy)]
 struct SamplePoint {
@@ -235,6 +272,12 @@ struct StreamStats {
     tokens: u64,
     slo_met: u64,
     per_tenant: BTreeMap<usize, TenantStats>,
+    per_turn: BTreeMap<usize, TurnStats>,
+    /// Follow-up turns (turn ≥ 1) observed / of those, affinity hits —
+    /// the numerator and denominator of the KV-cache hit rate.
+    followups: u64,
+    affinity_hits: u64,
+    followup_ttft: Welford,
     first_arrival: f64,
     last_finish: f64,
     /// Rolling FNV-1a over the canonical lines in push order.
@@ -263,6 +306,10 @@ impl StreamStats {
             tokens: 0,
             slo_met: 0,
             per_tenant: BTreeMap::new(),
+            per_turn: BTreeMap::new(),
+            followups: 0,
+            affinity_hits: 0,
+            followup_ttft: Welford::new(),
             first_arrival: f64::INFINITY,
             last_finish: 0.0,
             hash: FNV_OFFSET,
@@ -297,6 +344,19 @@ impl StreamStats {
         }
         ts.total_cost += r.cost;
         ts.ttft.push(r.ttft_s);
+        let tn = self.per_turn.entry(r.turn).or_insert_with(TurnStats::new);
+        tn.count += 1;
+        if r.affinity_hit {
+            tn.affinity_hits += 1;
+        }
+        tn.ttft.push(r.ttft_s);
+        if r.turn > 0 {
+            self.followups += 1;
+            if r.affinity_hit {
+                self.affinity_hits += 1;
+            }
+            self.followup_ttft.push(r.ttft_s);
+        }
         self.first_arrival = self.first_arrival.min(r.arrival_s);
         self.last_finish = self.last_finish.max(r.finish_s);
         self.hash = fnv1a(self.hash, canonical_line(r).as_bytes());
@@ -497,6 +557,42 @@ impl Aggregator {
         self.stream.per_tenant.get(&tenant)
     }
 
+    /// Per-turn running summaries, keyed by turn index. Maintained in
+    /// both aggregation modes (bounded by the trace's deepest session).
+    pub fn per_turn(&self) -> &BTreeMap<usize, TurnStats> {
+        &self.stream.per_turn
+    }
+
+    /// Follow-up turns observed (turn ≥ 1) — the KV-cache hit rate's
+    /// denominator.
+    pub fn followup_count(&self) -> u64 {
+        self.stream.followups
+    }
+
+    /// Follow-up turns routed to an instance already holding their
+    /// session's KV state.
+    pub fn affinity_hits(&self) -> u64 {
+        self.stream.affinity_hits
+    }
+
+    /// KV-cache affinity hit rate over follow-up turns (NaN on a run
+    /// with no follow-ups, matching the summary conventions).
+    pub fn affinity_hit_rate(&self) -> f64 {
+        if self.stream.followups == 0 {
+            return f64::NAN;
+        }
+        self.stream.affinity_hits as f64 / self.stream.followups as f64
+    }
+
+    /// Mean TTFT over follow-up turns only — the latency metric KV
+    /// affinity is supposed to improve (NaN with no follow-ups).
+    pub fn followup_ttft_mean(&self) -> f64 {
+        if self.stream.followups == 0 {
+            return f64::NAN;
+        }
+        self.stream.followup_ttft.mean
+    }
+
     /// Requests per second of real engine compute.
     pub fn engine_throughput(&self) -> f64 {
         let wall = self.stream.engine_wall_sum;
@@ -611,6 +707,9 @@ mod tests {
             concurrency: 1 + id,
             tenant: id % 2,
             slo_ok: id % 2 == 0,
+            session: id as u64,
+            turn: 0,
+            affinity_hit: false,
         }
     }
 
@@ -685,6 +784,59 @@ mod tests {
         r.slo_ok = false;
         c.push(r);
         assert_ne!(a.canonical_hash(), c.canonical_hash());
+    }
+
+    #[test]
+    fn session_turn_and_affinity_aggregate_in_both_modes() {
+        for mut a in [Aggregator::default(), Aggregator::streaming()] {
+            // two sessions of three turns each; session 0's follow-ups
+            // hit the KV cache, session 1's miss
+            for (id, (session, turn)) in
+                [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)].into_iter().enumerate()
+            {
+                let mut r = rec(id, 1.0);
+                r.session = session;
+                r.turn = turn;
+                r.affinity_hit = turn > 0 && session == 0;
+                a.push(r);
+            }
+            assert_eq!(a.followup_count(), 4);
+            assert_eq!(a.affinity_hits(), 2);
+            assert!((a.affinity_hit_rate() - 0.5).abs() < 1e-12);
+            // ttft_s = 1 + id → follow-ups are ids {1, 2, 4, 5}
+            assert!((a.followup_ttft_mean() - 4.0).abs() < 1e-12);
+            assert_eq!(a.per_turn().len(), 3);
+            let t1 = &a.per_turn()[&1];
+            assert_eq!((t1.count, t1.affinity_hits), (2, 1));
+            // turn 1 holds ids {1, 4} → mean ttft (2 + 5) / 2
+            assert!((t1.mean_ttft_s() - 3.5).abs() < 1e-12);
+            let t0 = &a.per_turn()[&0];
+            assert_eq!((t0.count, t0.affinity_hits), (2, 0));
+        }
+        // one-shot traces: every record is turn 0, no follow-ups
+        let mut a = Aggregator::default();
+        a.push(rec(0, 1.0));
+        assert_eq!(a.followup_count(), 0);
+        assert!(a.affinity_hit_rate().is_nan());
+        assert!(a.followup_ttft_mean().is_nan());
+    }
+
+    #[test]
+    fn canonical_covers_session_fields() {
+        let mut a = Aggregator::default();
+        a.push(rec(0, 1.0));
+        assert!(a.canonical().contains("session=0 turn=0 aff=0"));
+        for mutate in [
+            (|r: &mut RequestRecord| r.session = 9) as fn(&mut RequestRecord),
+            |r| r.turn = 2,
+            |r| r.affinity_hit = true,
+        ] {
+            let mut b = Aggregator::default();
+            let mut r = rec(0, 1.0);
+            mutate(&mut r);
+            b.push(r);
+            assert_ne!(a.canonical_hash(), b.canonical_hash());
+        }
     }
 
     #[test]

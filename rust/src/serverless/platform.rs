@@ -47,8 +47,20 @@
 //! memory-seconds — the serverless case for batched decode (§II);
 //! covered occupancy at a larger memory spec re-bills only the
 //! excess over what that sub-interval already billed.
+//!
+//! Slots carry **weights**: [`Platform::invoke_at_weighted`] lets a
+//! compute-bound prefill claim `k ≥ 1` slots at once (all freed at
+//! its finish) while decode segments keep packing one slot each —
+//! the asymmetric prefill/decode occupancy of disaggregated serving.
+//! Instances also hold **resident-session KV state**: after serving
+//! a conversation turn the session's KV cache is recorded on the
+//! instance ([`Platform::kv_record`]) under a bounded per-instance
+//! budget with LRU eviction, and a follow-up turn can look its
+//! holder up ([`Platform::kv_locate`]) to route affinity-first.
+//! KV residency is a view over the warm pool, not a liveness source:
+//! keep-alive expiry, retirement, and pruning all invalidate it.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::config::PlatformConfig;
 use crate::util::rng::Rng;
@@ -118,6 +130,10 @@ struct Instance {
     /// [`Platform::settle_prewarm_idle`]) charges it as
     /// [`CostComponent::PrewarmIdle`] and takes the marker.
     prewarm_idle_from: Option<f64>,
+    /// Sessions whose KV cache is resident on this instance, LRU
+    /// order (front = coldest). Bounded by [`Platform::kv_budget`];
+    /// kept in lockstep with the pool's session → instance index.
+    kv: VecDeque<u64>,
 }
 
 impl Instance {
@@ -279,6 +295,11 @@ struct FunctionPool {
     /// this pool: lets `prune_expired_before` skip its span-drop pass
     /// (an O(instances) walk) when nothing can be dropped.
     min_span_end: f64,
+    /// Session → instance holding its resident KV cache. BTreeMap for
+    /// deterministic iteration; kept in lockstep with each instance's
+    /// `kv` deque (an entry can go stale only through instance expiry
+    /// or pruning, and [`Platform::kv_locate`] removes it lazily).
+    kv_index: BTreeMap<u64, u64>,
 }
 
 impl Default for FunctionPool {
@@ -287,6 +308,7 @@ impl Default for FunctionPool {
             by_id: BTreeMap::new(),
             by_expiry: BTreeSet::new(),
             min_span_end: f64::INFINITY,
+            kv_index: BTreeMap::new(),
         }
     }
 }
@@ -438,6 +460,9 @@ pub struct Platform {
     /// changed. The serving scheduler sets it per request; `None`
     /// (the default) reproduces untagged single-stream billing.
     tenant: Option<usize>,
+    /// Resident KV sessions one instance may hold (LRU-evicted
+    /// beyond it). 0 (the default) disables KV residency tracking.
+    kv_budget: usize,
 }
 
 impl Platform {
@@ -459,6 +484,7 @@ impl Platform {
             rng: Rng::new(seed ^ 0x504c_4154), // "PLAT"
             overhead_mode: InvokeOverhead::Sampled,
             tenant: None,
+            kv_budget: 0,
         }
     }
 
@@ -521,6 +547,29 @@ impl Platform {
         work_s: f64,
         payload_bytes: f64,
     ) -> anyhow::Result<Invocation> {
+        self.invoke_at_weighted(name, at, work_s, payload_bytes, 1)
+    }
+
+    /// [`invoke_at`](Self::invoke_at) with an asymmetric slot weight:
+    /// the invocation claims `weight` execution slots at once (clamped
+    /// to the instance's capacity), all freed at its finish — the
+    /// disaggregated-serving occupancy model where a compute-bound
+    /// prefill displaces `k` densely-packing decode slots. A warm hit
+    /// needs `weight` simultaneously-free slots; scale-out claims the
+    /// first `weight` slots of the fresh instance; a saturated pool
+    /// queues until the `weight`-th slot of the least-loaded instance
+    /// frees. Weight 1 reproduces [`invoke_at`](Self::invoke_at)
+    /// exactly. Billing is unchanged — weight models compute
+    /// displacement, and an instance bills the union of its occupied
+    /// time regardless of how many slots an occupant pins.
+    pub fn invoke_at_weighted(
+        &mut self,
+        name: &str,
+        at: f64,
+        work_s: f64,
+        payload_bytes: f64,
+        weight: usize,
+    ) -> anyhow::Result<Invocation> {
         self.net.check_payload(payload_bytes)?;
         let spec = self.specs.get(name).expect("function not deployed").clone();
         let limit = self.instance_limit(name);
@@ -539,28 +588,31 @@ impl Platform {
         // the largest batch (maximises the billed-time union shared),
         // then the most recently used (LIFO warm pool), ties broken by
         // spawn order for determinism. Within an instance the lowest
-        // free slot index wins.
-        let mut hit: Option<(u64, usize, usize, f64)> = None; // (id, slot, occupied, mru)
+        // free slot indices win.
+        let mut hit: Option<(u64, Vec<usize>, usize, f64)> = None; // (id, slots, occupied, mru)
         for &i in admissible {
             let inst = &pool.by_id[&i];
-            let Some(slot) = (0..inst.slots.len()).find(|&s| inst.slot_free_at(s) <= at) else {
+            let w = weight.clamp(1, inst.slots.len());
+            let free: Vec<usize> =
+                (0..inst.slots.len()).filter(|&s| inst.slot_free_at(s) <= at).take(w).collect();
+            if free.len() < w {
                 continue;
-            };
+            }
             let occupied = inst.occupied_at(at);
             let mru = inst.last_activity();
-            let better = match hit {
+            let better = match &hit {
                 None => true,
-                Some((_, _, occ, best_mru)) => (occupied, mru) > (occ, best_mru),
+                Some((_, _, occ, best_mru)) => (occupied, mru) > (*occ, *best_mru),
             };
             if better {
-                hit = Some((i, slot, occupied, mru));
+                hit = Some((i, free, occupied, mru));
             }
         }
 
-        let (id, slot, queue_exit, cold_start_s) = match hit {
-            // warm hit: a free slot on a live instance never pays a
+        let (id, claimed, queue_exit, cold_start_s) = match hit {
+            // warm hit: free slots on a live instance never pay a
             // cold start
-            Some((id, slot, _, _)) => (id, slot, at, 0.0),
+            Some((id, slots, _, _)) => (id, slots, at, 0.0),
             // scale-out: spawn a fresh (cold) instance under the cap.
             // Spare slots open only at `ready_at` — a joiner arriving
             // during the cold window queues until the container is up
@@ -581,25 +633,31 @@ impl Platform {
                     slots: vec![at; capacity],
                     billed: Vec::new(),
                     prewarm_idle_from: None,
+                    kv: VecDeque::new(),
                 });
-                (id, 0, at, cold_start_s)
+                let w = weight.clamp(1, capacity);
+                (id, (0..w).collect(), at, cold_start_s)
             }
-            // saturated: queue on the earliest-free slot of an
-            // admissible instance (warm by construction — it is busy
-            // or warming right up to the queue exit)
+            // saturated: queue until enough slots free on the
+            // admissible instance whose `weight`-th slot frees
+            // earliest (warm by construction — it is busy or warming
+            // right up to the queue exit)
             None => {
-                let mut best: Option<(u64, usize, f64)> = None; // (id, slot, free)
+                let mut best: Option<(u64, Vec<usize>, f64)> = None; // (id, slots, exit)
                 for &i in admissible {
                     let inst = &pool.by_id[&i];
-                    for s in 0..inst.slots.len() {
-                        let free = inst.slot_free_at(s);
-                        if best.map_or(true, |(_, _, bf)| free < bf) {
-                            best = Some((i, s, free));
-                        }
+                    let w = weight.clamp(1, inst.slots.len());
+                    let mut frees: Vec<(f64, usize)> =
+                        (0..inst.slots.len()).map(|s| (inst.slot_free_at(s), s)).collect();
+                    frees.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                    let exit = frees[w - 1].0;
+                    if best.as_ref().map_or(true, |(_, _, bf)| exit < *bf) {
+                        best = Some((i, frees[..w].iter().map(|&(_, s)| s).collect(), exit));
                     }
                 }
-                let (i, s, free) = best.expect("saturated pool must have a live instance");
-                (i, s, free, 0.0)
+                let (i, slots, exit) =
+                    best.expect("saturated pool must have a live instance");
+                (i, slots, exit, 0.0)
             }
         };
 
@@ -628,8 +686,10 @@ impl Platform {
             self.gpu_rate,
             queue_exit,
         );
-        let batch = inst.occupied_at(queue_exit) + 1;
-        inst.slots[slot] = finished_at;
+        let batch = inst.occupied_at(queue_exit) + claimed.len();
+        for &s in &claimed {
+            inst.slots[s] = finished_at;
+        }
         let old_expiry = tkey(inst.warm_until);
         inst.warm_until = inst.warm_until.max(finished_at + self.keepalive_s);
         let new_expiry = tkey(inst.warm_until);
@@ -743,6 +803,74 @@ impl Platform {
         })
     }
 
+    /// Bound the resident KV sessions one instance may hold; beyond
+    /// it the least-recently-touched session is evicted. 0 (the
+    /// default) disables KV residency tracking — [`Self::kv_record`]
+    /// becomes a no-op and [`Self::kv_locate`] never hits.
+    pub fn set_kv_budget(&mut self, budget: usize) {
+        self.kv_budget = budget;
+    }
+
+    /// The instance of `name` holding `session`'s KV cache, if it is
+    /// still live at `at`. A mapping whose instance expired (keep-
+    /// alive, retirement) or was pruned is removed lazily here: the
+    /// KV state died with the instance's warmth, so a later-time
+    /// caller can never hit it again.
+    pub fn kv_locate(&mut self, name: &str, session: u64, at: f64) -> Option<u64> {
+        let pool = self.pool.get_mut(name)?;
+        let id = *pool.kv_index.get(&session)?;
+        match pool.by_id.get_mut(&id) {
+            Some(inst) if inst.live_at(at) => Some(id),
+            Some(inst) => {
+                inst.kv.retain(|&s| s != session);
+                pool.kv_index.remove(&session);
+                None
+            }
+            None => {
+                pool.kv_index.remove(&session);
+                None
+            }
+        }
+    }
+
+    /// Record `session`'s KV cache as resident on `instance` of
+    /// `name` (after serving one of its turns): touches the session
+    /// to most-recently-used, moves it off any previous holder, and
+    /// LRU-evicts the instance's coldest session beyond the budget.
+    /// No-op when the budget is 0 or the instance is unknown.
+    pub fn kv_record(&mut self, name: &str, instance: u64, session: u64) {
+        if self.kv_budget == 0 {
+            return;
+        }
+        let Some(pool) = self.pool.get_mut(name) else {
+            return;
+        };
+        if let Some(&prev) = pool.kv_index.get(&session) {
+            if prev != instance {
+                if let Some(prev_inst) = pool.by_id.get_mut(&prev) {
+                    prev_inst.kv.retain(|&s| s != session);
+                }
+            }
+        }
+        let Some(inst) = pool.by_id.get_mut(&instance) else {
+            return;
+        };
+        inst.kv.retain(|&s| s != session);
+        inst.kv.push_back(session);
+        pool.kv_index.insert(session, instance);
+        while inst.kv.len() > self.kv_budget {
+            if let Some(evicted) = inst.kv.pop_front() {
+                pool.kv_index.remove(&evicted);
+            }
+        }
+    }
+
+    /// Sessions with resident KV state across `name`'s pool (live and
+    /// stale-but-not-yet-located mappings alike).
+    pub fn kv_resident(&self, name: &str) -> usize {
+        self.pool.get(name).map_or(0, |p| p.kv_index.len())
+    }
+
     /// Sequential invoke at the current clock; advances the clock to
     /// the completion time (the pre-scheduler calling convention, kept
     /// for demos and closed-loop callers).
@@ -809,6 +937,7 @@ impl Platform {
                 slots: vec![at; capacity],
                 billed: Vec::new(),
                 prewarm_idle_from: Some(at),
+                kv: VecDeque::new(),
             });
         }
         room
@@ -1000,6 +1129,10 @@ impl Platform {
                 pool.by_expiry.remove(&(key, id));
                 let mut inst = pool.by_id.remove(&id).expect("index and pool in lockstep");
                 self.retained -= 1;
+                // resident KV state dies with the instance
+                for s in inst.kv.drain(..) {
+                    pool.kv_index.remove(&s);
+                }
                 if let Some(spec) = spec {
                     let until = inst.warm_until;
                     settle_prewarm_span(
@@ -1585,6 +1718,96 @@ mod tests {
                 assert_eq!(p.warm_count_at("main", probe), scan, "probe={probe}");
             }
         }
+    }
+
+    #[test]
+    fn weighted_invocation_claims_multiple_slots() {
+        let mut p = batched_platform(4);
+        p.set_instance_limit("f", 1);
+        let a = p.invoke_at_weighted("f", 0.0, 5.0, 0.0, 3).unwrap();
+        assert!(a.cold_start_s > 0.0);
+        assert_eq!(a.batch, 3, "a weighted claim counts all its slots");
+        // the one unclaimed slot still packs a unit (decode-sized)
+        // call beside the heavy occupant once the instance is ready
+        let t = a.service_start() + a.cold_start_s + 0.1;
+        let b = p.invoke_at("f", t, 0.5, 0.0).unwrap();
+        assert_eq!(b.instance, a.instance);
+        assert_eq!(b.queue_delay_s, 0.0);
+        assert_eq!(b.batch, 4);
+        // another weighted claim must wait for all three slots at once
+        let c = p.invoke_at_weighted("f", t, 1.0, 0.0, 3).unwrap();
+        assert_eq!(c.instance, a.instance);
+        assert!(
+            (c.service_start() - a.finished_at).abs() < 1e-9,
+            "three slots free only when the first weighted claim finishes"
+        );
+    }
+
+    #[test]
+    fn weighted_claim_clamps_to_instance_capacity() {
+        let mut p = batched_platform(2);
+        p.set_instance_limit("f", 1);
+        let a = p.invoke_at_weighted("f", 0.0, 1.0, 0.0, 9).unwrap();
+        assert_eq!(a.batch, 2, "weight beyond capacity claims the whole instance");
+        let b = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        assert!(b.queue_delay_s > 0.0, "no slot left beside a full-width claim");
+    }
+
+    #[test]
+    fn kv_residency_locates_records_and_evicts_lru() {
+        let mut p = batched_platform(2);
+        p.set_kv_budget(2);
+        let a = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        p.kv_record("f", a.instance, 7);
+        assert_eq!(p.kv_locate("f", 7, a.finished_at), Some(a.instance));
+        p.kv_record("f", a.instance, 8);
+        // touching 7 makes 8 the LRU; a third session evicts 8
+        p.kv_record("f", a.instance, 7);
+        p.kv_record("f", a.instance, 9);
+        assert_eq!(p.kv_locate("f", 8, a.finished_at), None, "LRU session must evict");
+        assert_eq!(p.kv_locate("f", 7, a.finished_at), Some(a.instance));
+        assert_eq!(p.kv_locate("f", 9, a.finished_at), Some(a.instance));
+        assert_eq!(p.kv_resident("f"), 2);
+    }
+
+    #[test]
+    fn kv_mapping_dies_with_expiry_and_prune() {
+        let mut p = batched_platform(2);
+        p.set_kv_budget(4);
+        let a = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        p.kv_record("f", a.instance, 1);
+        let expired = a.finished_at + p.keepalive_s + 1.0;
+        assert_eq!(p.kv_locate("f", 1, expired), None, "expired warmth discards KV");
+        assert_eq!(p.kv_resident("f"), 0, "the stale mapping drops lazily");
+        let b = p.invoke_at("f", expired, 1.0, 0.0).unwrap();
+        p.kv_record("f", b.instance, 2);
+        p.prune_expired_before(b.finished_at + p.keepalive_s + 5.0);
+        assert_eq!(p.kv_resident("f"), 0, "pruned instances take their sessions along");
+    }
+
+    #[test]
+    fn kv_budget_zero_disables_residency() {
+        let mut p = batched_platform(2);
+        let a = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        p.kv_record("f", a.instance, 1);
+        assert_eq!(p.kv_locate("f", 1, a.finished_at), None);
+        assert_eq!(p.kv_resident("f"), 0);
+    }
+
+    #[test]
+    fn kv_record_moves_a_session_between_instances() {
+        let mut p = batched_platform(1);
+        p.set_kv_budget(2);
+        p.set_instance_limit("f", 2);
+        let a = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        let b = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();
+        assert_ne!(a.instance, b.instance);
+        p.kv_record("f", a.instance, 5);
+        // an affinity miss re-served the session elsewhere: the
+        // mapping follows, the old holder frees its residency
+        p.kv_record("f", b.instance, 5);
+        assert_eq!(p.kv_locate("f", 5, b.finished_at), Some(b.instance));
+        assert_eq!(p.kv_resident("f"), 1);
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod trace;
 
 pub use corpus::{standard_corpora, Corpus, CorpusSpec, Prompt};
 pub use trace::{
-    batch_trace, drifting_topic_trace, poisson_trace, poisson_trace_over, DriftSpec, Request,
-    TraceSpec,
+    batch_trace, drifting_topic_trace, poisson_trace, poisson_trace_over, session_trace_over,
+    DriftSpec, Request, SessionSpec, TraceSpec,
 };

@@ -15,6 +15,15 @@ pub struct Request {
     /// `config::TenantRegistry`. Single-tenant generators tag 0 (the
     /// anonymous class), which reproduces tenant-blind scheduling.
     pub tenant: usize,
+    /// Conversation this request belongs to. One-shot generators tag
+    /// each request with its own unique session (`id as u64`), so a
+    /// session-aware scheduler sees no sharable KV state and behaves
+    /// exactly like the session-oblivious one.
+    pub session_id: u64,
+    /// Zero-based turn index within the session. Turn 0 opens the
+    /// conversation (no KV state can exist yet); turns ≥ 1 are
+    /// follow-ups eligible for KV-cache affinity routing.
+    pub turn: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -81,6 +90,8 @@ pub fn poisson_trace(corpus: &Corpus, spec: &TraceSpec) -> Vec<Request> {
             prompt: corpus.sample(&mut rng, None),
             n_out: spec.n_out,
             tenant: 0,
+            session_id: id as u64,
+            turn: 0,
         })
         .collect()
 }
@@ -106,6 +117,8 @@ pub fn poisson_trace_over(
             prompt,
             n_out,
             tenant: 0,
+            session_id: id as u64,
+            turn: 0,
         })
         .collect()
 }
@@ -134,6 +147,8 @@ pub fn bursty_trace_over(
             prompt: prompts[id % prompts.len()].clone(),
             n_out,
             tenant: 0,
+            session_id: id as u64,
+            turn: 0,
         })
         .collect()
 }
@@ -159,6 +174,8 @@ pub fn synthetic_trace(
             prompt: Prompt { text: String::new(), topic: 0 },
             n_out,
             tenant: 0,
+            session_id: id as u64,
+            turn: 0,
         })
         .collect()
 }
@@ -170,7 +187,15 @@ pub fn batch_trace(prompts: &[Prompt], n_out: usize) -> Vec<Request> {
         .iter()
         .cloned()
         .enumerate()
-        .map(|(id, prompt)| Request { id, arrival_s: 0.0, prompt, n_out, tenant: 0 })
+        .map(|(id, prompt)| Request {
+            id,
+            arrival_s: 0.0,
+            prompt,
+            n_out,
+            tenant: 0,
+            session_id: id as u64,
+            turn: 0,
+        })
         .collect()
 }
 
@@ -207,12 +232,15 @@ pub fn multi_tenant_trace_over(
                 prompt: prompts[i % prompts.len()].clone(),
                 n_out: spec.n_out,
                 tenant: spec.tenant,
+                session_id: 0,
+                turn: 0,
             });
         }
     }
     all.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.tenant.cmp(&b.tenant)));
     for (id, r) in all.iter_mut().enumerate() {
         r.id = id;
+        r.session_id = id as u64;
     }
     all
 }
@@ -267,9 +295,83 @@ pub fn drifting_topic_trace(corpus: &Corpus, spec: &DriftSpec) -> Vec<Request> {
                     prompt: corpus.sample(&mut rng, Some(topic)),
                     n_out: spec.n_out,
                     tenant: 0,
+                    session_id: all.len() as u64,
+                    turn: 0,
                 });
             }
         }
+    }
+    all
+}
+
+/// A multi-turn conversation workload: sessions open on an arrival
+/// process, then hold a fixed number of follow-up turns separated by
+/// seeded exponential think-time gaps.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub sessions: usize,
+    /// Arrival process of session *starts* (the turn-0 arrivals).
+    /// Bursty starts with think-time gaps shorter than the burst
+    /// period are the canonical chat workload: follow-ups land while
+    /// the opening turn's instance is still warm.
+    pub starts: ArrivalProcess,
+    /// Turns per session, including the opening turn (≥ 1).
+    pub turns: usize,
+    /// Mean think-time gap between consecutive turns of a session (s).
+    pub think_s: f64,
+    pub n_out: usize,
+    pub seed: u64,
+}
+
+/// Deterministic multi-turn session trace over a fixed prompt set.
+/// Session starts draw from a dedicated RNG stream and each session's
+/// think-time gaps from its own seeded stream, so appending sessions
+/// (or turns) never perturbs earlier draws — reruns are byte-identical
+/// and prefixes are stable. Turn `j`'s prompt is the concatenation of
+/// the session's history so far, so context grows with the turn index
+/// (follow-up prefills are *more* expensive than openers unless the
+/// KV cache of the earlier turns is reused). Requests merge by arrival
+/// time with ids reassigned sequentially; `session_id`/`turn` carry
+/// the conversation structure through the scheduler.
+pub fn session_trace_over(prompts: &[Prompt], spec: &SessionSpec) -> Vec<Request> {
+    assert!(!prompts.is_empty(), "session trace needs prompts");
+    assert!(spec.turns > 0, "sessions need at least the opening turn");
+    assert!(spec.think_s > 0.0, "think time must be positive");
+    let mut start_rng = Rng::new(spec.seed ^ 0x5E55_0A);
+    let mut starts = ArrivalStream::new(spec.starts);
+    let mut all: Vec<Request> = Vec::new();
+    for s in 0..spec.sessions {
+        let mut t = starts.next_time(&mut start_rng);
+        let mut rng =
+            Rng::new(spec.seed ^ 0x5E55_0B ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let opening = &prompts[s % prompts.len()];
+        let mut history = String::new();
+        for turn in 0..spec.turns {
+            let next = &prompts[(s + turn) % prompts.len()];
+            if !history.is_empty() {
+                history.push(' ');
+            }
+            history.push_str(&next.text);
+            all.push(Request {
+                id: 0, // assigned after the merge below
+                arrival_s: t,
+                prompt: Prompt { text: history.clone(), topic: opening.topic },
+                n_out: spec.n_out,
+                tenant: 0,
+                session_id: s as u64,
+                turn,
+            });
+            t += rng.exponential(1.0 / spec.think_s);
+        }
+    }
+    all.sort_by(|a, b| {
+        a.arrival_s
+            .total_cmp(&b.arrival_s)
+            .then(a.session_id.cmp(&b.session_id))
+            .then(a.turn.cmp(&b.turn))
+    });
+    for (id, r) in all.iter_mut().enumerate() {
+        r.id = id;
     }
     all
 }
@@ -452,6 +554,76 @@ mod tests {
             assert_eq!(x.prompt.text, y.prompt.text);
         }
         assert_eq!(short.len(), 2 * per_phase);
+    }
+
+    fn session_spec() -> SessionSpec {
+        SessionSpec {
+            sessions: 4,
+            starts: ArrivalProcess::Bursty { burst: 2, period_s: 40.0 },
+            turns: 3,
+            think_s: 5.0,
+            n_out: 12,
+            seed: 31,
+        }
+    }
+
+    #[test]
+    fn session_trace_is_deterministic_and_structured() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = c.split(0, 6, 3);
+        let spec = session_spec();
+        let a = session_trace_over(&test, &spec);
+        let b = session_trace_over(&test, &spec);
+        assert_eq!(a.len(), 4 * 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt.text, y.prompt.text);
+            assert_eq!((x.session_id, x.turn), (y.session_id, y.turn));
+        }
+        // merged order: non-decreasing arrivals, sequential ids
+        for (i, w) in a.windows(2).enumerate() {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+            assert_eq!(w[0].id, i);
+        }
+        // every session holds exactly `turns` requests with distinct
+        // turn indices, in arrival order within the session
+        for s in 0..4u64 {
+            let turns: Vec<&Request> = a.iter().filter(|r| r.session_id == s).collect();
+            assert_eq!(turns.len(), 3);
+            for (j, r) in turns.iter().enumerate() {
+                assert_eq!(r.turn, j);
+            }
+            for w in turns.windows(2) {
+                assert!(w[1].arrival_s > w[0].arrival_s, "turns must respect think time");
+                assert!(
+                    w[1].prompt.text.len() > w[0].prompt.text.len(),
+                    "context must grow with the turn index"
+                );
+                assert!(
+                    w[1].prompt.text.starts_with(&w[0].prompt.text),
+                    "turn context must extend the session history"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn session_trace_is_prefix_stable_under_appended_sessions() {
+        let c = Corpus::new(standard_corpora()[0].clone());
+        let (_, test) = c.split(0, 6, 3);
+        let spec = session_spec();
+        let longer = session_trace_over(&test, &SessionSpec { sessions: 6, ..spec.clone() });
+        let base = session_trace_over(&test, &spec);
+        // per-session RNG streams: the original sessions' turns keep
+        // their exact timestamps and prompts when sessions are added
+        for r in &base {
+            let same = longer
+                .iter()
+                .find(|x| x.session_id == r.session_id && x.turn == r.turn)
+                .expect("original turn must survive");
+            assert_eq!(same.arrival_s, r.arrival_s);
+            assert_eq!(same.prompt.text, r.prompt.text);
+        }
     }
 
     #[test]

@@ -96,8 +96,8 @@ fn only_first_hit_on_a_cold_function_pays_a_cold_start() {
 fn scale_out_trades_cold_starts_for_queueing() {
     let mut s = gpt2_setup(4);
     let trace = batch_trace(&s.test, 10);
-    let queued = ServeOptions { main_instances: 1, ..ServeOptions::default() };
-    let scaled = ServeOptions { main_instances: 4, ..ServeOptions::default() };
+    let queued = ServeOptions::builder().main_instances(1).build();
+    let scaled = ServeOptions::builder().main_instances(4).build();
     let a = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &queued).unwrap();
     let b = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &scaled).unwrap();
     let total_queue = |agg: &remoe::metrics::Aggregator| -> f64 {
@@ -190,7 +190,7 @@ fn ttft_includes_queueing_delay() {
 fn continuous_batching_absorbs_overlapping_arrivals() {
     let mut s = gpt2_setup(4);
     let trace = batch_trace(&s.test, 10);
-    let opts = ServeOptions { batch_capacity: 4, ..ServeOptions::default() };
+    let opts = ServeOptions::builder().batch_capacity(4).build();
     let agg = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &opts).unwrap();
     assert_eq!(agg.len(), 4);
     // all four batch arrivals share one instance: one cold start;
@@ -218,7 +218,7 @@ fn batching_strictly_reduces_queueing_on_the_same_trace() {
     let mut s = gpt2_setup(4);
     let trace = poisson_trace_over(&s.test, 5.0, 12, 21);
     let unbatched = ServeOptions::default();
-    let batched = ServeOptions { batch_capacity: 4, ..ServeOptions::default() };
+    let batched = ServeOptions::builder().batch_capacity(4).build();
     let a = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &unbatched).unwrap();
     let b = serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &batched).unwrap();
     let mean_q = |agg: &remoe::metrics::Aggregator| agg.queue_delay_summary().mean;
@@ -238,7 +238,7 @@ fn batched_serving_is_byte_identical_across_runs() {
     let run = || {
         let mut s = gpt2_setup(4);
         let trace = poisson_trace_over(&s.test, 2.0, 10, 33);
-        let opts = ServeOptions { batch_capacity: 3, ..ServeOptions::default() };
+        let opts = ServeOptions::builder().batch_capacity(3).build();
         serve_remoe_with(&mut s.engine, &s.planner, &s.sps, &trace, &opts).unwrap()
     };
     let a = run();

@@ -302,11 +302,10 @@ fn prop_serve_ledger_equals_sum_of_request_costs() {
             Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
 
         let trace = batch_trace(&test, small_size(rng, 2, 10));
-        let opts = ServeOptions {
-            main_instances: rng.range_u(1, 3),
-            batch_capacity: rng.range_u(1, 4),
-            ..ServeOptions::default()
-        };
+        let opts = ServeOptions::builder()
+            .main_instances(rng.range_u(1, 3))
+            .batch_capacity(rng.range_u(1, 4))
+            .build();
         let mut platform = Platform::new(&planner.platform, opts.seed);
         let mut policy = RemoePolicy {
             engine: &mut engine,
@@ -389,6 +388,79 @@ fn prop_batching_slots_and_union_billing_invariants() {
             for &(_, d) in &events {
                 load += d;
                 assert!(load <= capacity as i32, "instance {inst} over capacity {capacity}");
+            }
+        }
+        assert!(
+            (p.billing.total() - sum_deltas).abs() <= 1e-9 * sum_deltas.max(1.0),
+            "ledger {} != Σ deltas {sum_deltas}",
+            p.billing.total()
+        );
+    });
+}
+
+#[test]
+fn prop_weighted_slot_occupancy_never_exceeds_capacity() {
+    // Disaggregated prefill/decode occupancy: under random mixes of
+    // weighted prefills (weight up to capacity + 2, exercising the
+    // clamp) and weight-1 decodes at non-monotone timestamps, the
+    // total slot-weight concurrently claimed on any instance never
+    // exceeds its slot count, and union billing still keeps the
+    // ledger equal to the sum of per-call deltas.
+    Prop::new("platform weighted occupancy ≤ capacity").with_cases(30).check(|rng, case| {
+        use remoe::serverless::{CostComponent, FunctionSpec, Platform};
+        let mut p = Platform::new(&PlatformConfig::default(), case as u64 ^ 0x5107);
+        p.keepalive_s = rng.range_f64(5.0, 40.0);
+        let capacity = rng.range_u(1, 6);
+        p.deploy(FunctionSpec {
+            name: "f".into(),
+            mem_mb: rng.range_f64(100.0, 2000.0),
+            gpu_mb: 0.0,
+            footprint_mb: rng.range_f64(0.0, 1500.0),
+            batch_capacity: capacity,
+            component: CostComponent::MainCpu,
+        });
+        let limit = rng.range_u(1, 3);
+        p.set_instance_limit("f", limit);
+
+        let mut t: f64 = 0.0;
+        let mut sum_deltas = 0.0;
+        // per instance: (service_start, finish, claimed slot-weight)
+        let mut spans: std::collections::BTreeMap<u64, Vec<(f64, f64, usize)>> =
+            Default::default();
+        let n = small_size(rng, 2, 40);
+        for _ in 0..n {
+            t = (t + rng.range_f64(-2.0, 4.0)).max(0.0);
+            let work = rng.range_f64(0.01, 3.0);
+            // a "prefill" claims a random weight (sometimes beyond
+            // capacity, which must clamp); a "decode" packs one slot
+            let weight = if rng.bool(0.5) { rng.range_u(1, capacity + 2) } else { 1 };
+            let mark = p.billing.mark();
+            let inv = p.invoke_at_weighted("f", t, work, 0.0, weight).unwrap();
+            sum_deltas += p.billing.total_since(mark);
+            assert!(inv.queue_delay_s >= 0.0);
+            assert!(inv.started_at >= t - 1e-12, "started before arrival");
+            spans.entry(inv.instance).or_default().push((
+                inv.service_start(),
+                inv.finished_at,
+                weight.clamp(1, capacity),
+            ));
+        }
+        // sweep: the claimed slot-weight concurrently held on an
+        // instance never exceeds its slot count
+        for (inst, sp) in &spans {
+            let mut events: Vec<(f64, i64)> = Vec::new();
+            for &(s, e, w) in sp {
+                events.push((s, w as i64));
+                events.push((e, -(w as i64)));
+            }
+            events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut load = 0i64;
+            for &(_, d) in &events {
+                load += d;
+                assert!(
+                    load <= capacity as i64,
+                    "instance {inst} holds weight {load} over capacity {capacity}"
+                );
             }
         }
         assert!(
@@ -499,13 +571,12 @@ fn prop_autoscaled_serve_ledger_includes_prewarm_component() {
                 _ => AutoscalePolicy::predictive(),
             };
             let trace = bursty_trace_over(&test, 2, 2, rng.range_f64(5.0, 40.0), 6);
-            let opts = ServeOptions {
-                keepalive_s: rng.range_f64(2.0, 15.0),
-                main_instances: rng.range_u(1, 3),
-                batch_capacity: rng.range_u(1, 4),
-                autoscale,
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::builder()
+                .keepalive_s(rng.range_f64(2.0, 15.0))
+                .main_instances(rng.range_u(1, 3))
+                .batch_capacity(rng.range_u(1, 4))
+                .autoscale(autoscale)
+                .build();
             let mut platform = Platform::new(&planner.platform, opts.seed);
             let mut policy = RemoePolicy {
                 engine: &mut engine,
@@ -560,7 +631,7 @@ fn prop_batched_serve_is_deterministic_and_respects_capacity() {
             let planner =
                 Planner::new(&dims, &SystemConfig::default(), &SlaConfig::for_dims(&dims));
             let trace = batch_trace(&test, 8);
-            let opts = ServeOptions { batch_capacity: capacity, ..ServeOptions::default() };
+            let opts = ServeOptions::builder().batch_capacity(capacity).build();
             let mut platform = Platform::new(&planner.platform, opts.seed);
             let mut policy = RemoePolicy {
                 engine: &mut engine,
@@ -739,6 +810,9 @@ fn prop_streaming_summaries_match_full_and_hash_is_rerun_stable() {
                         concurrency: 1 + r.below(6) as usize,
                         tenant: r.below(3) as usize,
                         slo_ok: r.below(2) == 0,
+                        session: r.below(16),
+                        turn: r.below(4) as usize,
+                        affinity_hit: r.bool(0.4),
                     }
                 })
                 .collect()
@@ -891,13 +965,12 @@ fn prop_per_tenant_ledger_attribution_partitions_the_total() {
             })
             .collect();
         let trace = multi_tenant_trace_over(&prompts, &specs, case as u64 ^ 0x7E01);
-        let opts = ServeOptions {
-            main_instances: rng.range_u(1, 3),
-            batch_capacity: rng.range_u(1, 4),
-            overhead: InvokeOverhead::Expected,
-            tenants: TenantRegistry::new(classes),
-            ..ServeOptions::default()
-        };
+        let opts = ServeOptions::builder()
+            .main_instances(rng.range_u(1, 3))
+            .batch_capacity(rng.range_u(1, 4))
+            .overhead(InvokeOverhead::Expected)
+            .tenants(TenantRegistry::new(classes))
+            .build();
         let mut platform = Platform::new(&PlatformConfig::default(), opts.seed ^ case as u64);
         let mut policy = SyntheticServePolicy::default();
         let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
@@ -991,12 +1064,11 @@ fn prop_multi_tenant_serve_is_deterministic() {
 
         let tenants = TenantRegistry::parse_spec("t0,quota=2;t1,prio=3,ttft=2.0").unwrap();
         let run = |trace: &[remoe::workload::trace::Request]| {
-            let opts = ServeOptions {
-                batch_capacity: 2,
-                overhead: InvokeOverhead::Expected,
-                tenants: tenants.clone(),
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::builder()
+                .batch_capacity(2)
+                .overhead(InvokeOverhead::Expected)
+                .tenants(tenants.clone())
+                .build();
             let mut platform = Platform::new(&PlatformConfig::default(), opts.seed);
             let mut policy = SyntheticServePolicy::default();
             serve_on_platform(&mut policy, trace, &mut platform, &opts).unwrap()
@@ -1041,19 +1113,18 @@ fn prop_expert_prefetch_ledger_identity_under_random_drift() {
                 assert!(a.arrival_s == b.arrival_s, "drift generator not rerun-stable");
             }
 
-            let opts = ServeOptions {
-                keepalive_s: rng.range_f64(2.0, 12.0),
-                main_instances: rng.range_u(1, 4),
-                batch_capacity: rng.range_u(1, 3),
-                autoscale: AutoscalePolicy::ExpertPrefetch {
+            let opts = ServeOptions::builder()
+                .keepalive_s(rng.range_f64(2.0, 12.0))
+                .main_instances(rng.range_u(1, 4))
+                .batch_capacity(rng.range_u(1, 3))
+                .autoscale(AutoscalePolicy::ExpertPrefetch {
                     decay_s: rng.range_f64(10.0, 120.0),
                     lookahead_s: rng.range_f64(1.0, 10.0),
                     min_share: rng.range_f64(0.0, 0.1),
-                },
-                autoscale_tick_s: rng.range_f64(1.0, 6.0),
-                overhead: InvokeOverhead::Expected,
-                ..ServeOptions::default()
-            };
+                })
+                .autoscale_tick_s(rng.range_f64(1.0, 6.0))
+                .overhead(InvokeOverhead::Expected)
+                .build();
             let mut platform =
                 Platform::new(&PlatformConfig::default(), opts.seed ^ case as u64);
             let mut policy = SyntheticServePolicy::default();
