@@ -261,6 +261,7 @@ mod tests {
             footprint_mb: 500.0,
             batch_capacity: 4,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         p
     }
@@ -366,6 +367,7 @@ mod tests {
             footprint_mb: 0.0,
             batch_capacity: 1,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         let mut scaler =
             Autoscaler::new(AutoscalePolicy::FixedWarmPool { floor: 4 }.build(), 5.0);

@@ -22,6 +22,7 @@ use crate::coordinator::prompt_ids;
 use crate::costmodel::{DeploymentPlan, LatencyModel, RequestProfile};
 use crate::metrics::Aggregator;
 use crate::model::{Backend, Engine};
+use crate::pricing::PriceBook;
 use crate::serverless::{ColdStartModel, PerfModel, Platform};
 use crate::workload::trace::Request;
 
@@ -69,17 +70,40 @@ pub struct BaselineEvaluator {
     pub perf: PerfModel,
     pub cold: ColdStartModel,
     pub lat: LatencyModel,
+    /// Price book the baselines are costed against and their serving
+    /// platforms bill through. Baselines are tier-unaware — they run
+    /// monolithically on the book's default tier (index 0) and price
+    /// at its opening rates.
+    pub book: PriceBook,
 }
 
 impl BaselineEvaluator {
     pub fn new(dims: &CostDims, platform: &PlatformConfig) -> Self {
+        let book = PriceBook::single(platform.cpu_rate_per_mb_s, platform.gpu_rate_per_mb_s);
+        Self::with_book(dims, platform, book)
+    }
+
+    /// [`BaselineEvaluator::new`] against an explicit price book; a
+    /// single-tier book at the platform's rates reproduces `new`.
+    pub fn with_book(dims: &CostDims, platform: &PlatformConfig, book: PriceBook) -> Self {
         BaselineEvaluator {
             dims: dims.clone(),
             platform: platform.clone(),
             perf: PerfModel::from_dims(dims, platform),
             cold: ColdStartModel::from_platform(platform),
             lat: LatencyModel::new(dims, platform),
+            book,
         }
+    }
+
+    /// Default-tier opening CPU rate — the c^c every baseline prices at.
+    fn cpu_rate(&self) -> f64 {
+        self.book.tier(0).cpu_rate_at(0.0)
+    }
+
+    /// Default-tier opening GPU rate — the c^g every baseline prices at.
+    fn gpu_rate(&self) -> f64 {
+        self.book.tier(0).gpu_rate_at(0.0)
     }
 
     /// Total parameter footprint, MB.
@@ -158,7 +182,7 @@ impl BaselineEvaluator {
             let (ex_pre, ex_dec) = self.expert_seconds(profile, mem, 1.0, 1.0);
             let prefill = ne_pre + ex_pre;
             let decode = ne_dec + ex_dec;
-            let cost = (prefill + decode) * self.platform.cpu_rate_per_mb_s * mem;
+            let cost = (prefill + decode) * self.cpu_rate() * mem;
             outcome(Strategy::Cpu, cost, prefill, decode, cold, profile.n_out)
         })
     }
@@ -203,7 +227,7 @@ impl BaselineEvaluator {
         let prefill = ne_pre + ex_pre;
         let decode = ne_dec + ex_dec;
         let cold = self.cold.monolithic(self.total_params_mb());
-        let cost = (prefill + decode) * self.platform.gpu_rate_per_mb_s * mem;
+        let cost = (prefill + decode) * self.gpu_rate() * mem;
         outcome(Strategy::Gpu, cost, prefill, decode, cold, profile.n_out)
     }
 
@@ -229,9 +253,8 @@ impl BaselineEvaluator {
         // CPU: the full expert pool stays resident
         let cpu_mem = self.dims.total_expert_mb();
         let cold = self.cold.monolithic(self.total_params_mb());
-        let cost = (prefill + decode)
-            * (self.platform.gpu_rate_per_mb_s * gpu_mem
-                + self.platform.cpu_rate_per_mb_s * cpu_mem);
+        let cost =
+            (prefill + decode) * (self.gpu_rate() * gpu_mem + self.cpu_rate() * cpu_mem);
         outcome(Strategy::Fetch, cost, prefill, decode, cold, profile.n_out)
     }
 
@@ -243,7 +266,12 @@ impl BaselineEvaluator {
         let floor = self.dims.total_expert_mb()
             + profile.n_out as f64 * self.dims.token_bytes / 1e6;
         let cold = self.cold.monolithic(self.total_params_mb());
-        let cm = crate::costmodel::CostModel::new(&self.dims, &self.platform);
+        let cm = crate::costmodel::CostModel::with_tier_rates(
+            &self.dims,
+            self.cpu_rate(),
+            self.gpu_rate(),
+            self.cpu_rate(),
+        );
         self.best_over_specs(floor, |main_mem| {
             let plan =
                 DeploymentPlan::all_local(self.dims.layers, self.dims.experts, main_mem);
@@ -293,8 +321,9 @@ fn baseline_service_plan(
     let o = ev.evaluate(strategy, profile);
     let duration = o.prefill_s + o.decode_s;
     // equivalent CPU-rate memory whose duration-proportional bill
-    // equals the strategy's analytic cost
-    let burn_mb = o.cost / (duration * ev.platform.cpu_rate_per_mb_s);
+    // equals the strategy's analytic cost — at the same default-tier
+    // rate the platform bills that function's occupancy at
+    let burn_mb = o.cost / (duration * ev.cpu_rate());
     ServicePlan {
         n_in: profile.n_in,
         n_out: profile.n_out,
@@ -306,6 +335,8 @@ fn baseline_service_plan(
         remote: Vec::new(),
         calc_time_s: 0.0,
         engine_wall_s,
+        main_tier: 0,
+        expert_tier: 0,
     }
 }
 
@@ -366,6 +397,7 @@ pub fn serve_baseline<B: Backend>(
 ) -> Result<Aggregator> {
     ensure_not_remoe(strategy)?;
     let mut platform = Platform::new(&ev.platform, opts.seed);
+    platform.set_price_book(ev.book.clone());
     let mut policy = BaselinePolicy { engine, ev, strategy };
     serve_on_platform(&mut policy, trace, &mut platform, opts)
 }
@@ -387,6 +419,7 @@ pub fn serve_baseline_profiles(
         trace.len()
     );
     let mut platform = Platform::new(&ev.platform, opts.seed);
+    platform.set_price_book(ev.book.clone());
     let mut policy = BaselineProfilePolicy { ev, strategy, profiles };
     serve_on_platform(&mut policy, trace, &mut platform, opts)
 }

@@ -9,6 +9,7 @@
 //! paper-scale parameter sizes so that memory magnitudes, and therefore
 //! cost ratios, land in the paper's regime (DESIGN.md §2).
 
+use crate::pricing::PriceBook;
 use crate::util::tomlmini::Toml;
 
 /// Default instance keep-alive after the last slot finishes, seconds.
@@ -499,6 +500,10 @@ pub struct SystemConfig {
     /// Tenant/SLO classes sharing the platform (`[tenants.<id>]`
     /// tables; default: one anonymous class = tenant-blind FIFO).
     pub tenants: TenantRegistry,
+    /// Heterogeneous price book (`[pricing.tiers."<name>"]` tables;
+    /// default: a single on-demand tier holding the platform's flat
+    /// rates, which bills byte-identically to legacy pricing).
+    pub pricing: PriceBook,
     /// SPS hyper-parameters (§IV-B): top-α similar prompts, β split
     /// threshold for the clustering tree.
     pub alpha: usize,
@@ -513,10 +518,13 @@ pub struct SystemConfig {
 
 impl Default for SystemConfig {
     fn default() -> Self {
+        let platform = PlatformConfig::default();
+        let pricing = PriceBook::single(platform.cpu_rate_per_mb_s, platform.gpu_rate_per_mb_s);
         SystemConfig {
-            platform: PlatformConfig::default(),
+            platform,
             sla: SlaConfig::default(),
             tenants: TenantRegistry::default(),
+            pricing,
             alpha: 15,
             beta: 150,
             epsilon: 0.05,
@@ -530,10 +538,17 @@ impl SystemConfig {
     pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
         let t = Toml::parse(text)?;
         let d = SystemConfig::default();
+        let platform = PlatformConfig::from_toml(&t);
+        let pricing =
+            PriceBook::from_toml(&t, platform.cpu_rate_per_mb_s, platform.gpu_rate_per_mb_s)
+                .unwrap_or_else(|| {
+                    PriceBook::single(platform.cpu_rate_per_mb_s, platform.gpu_rate_per_mb_s)
+                });
         Ok(SystemConfig {
-            platform: PlatformConfig::from_toml(&t),
+            platform,
             sla: SlaConfig::from_toml(&t),
             tenants: TenantRegistry::from_toml(&t),
+            pricing,
             alpha: t.usize_or("sps.alpha", d.alpha),
             beta: t.usize_or("sps.beta", d.beta),
             epsilon: t.f64_or("mmp.epsilon", d.epsilon),
@@ -604,6 +619,26 @@ mod tests {
         assert_eq!(cfg.tenants.len(), 1);
         assert_eq!(cfg.tenants.class(0).id, "default");
         assert_eq!(cfg.tenants.class(0).quota, 0);
+    }
+
+    #[test]
+    fn pricing_book_from_toml_tables() {
+        // no [pricing.tiers.*] → the flat single-tier book at the
+        // platform's (possibly overridden) rates
+        let cfg = SystemConfig::from_toml_str("[platform]\ngpu_rate_per_mb_s = 5.0\n").unwrap();
+        assert_eq!(cfg.pricing.tiers.len(), 1);
+        assert_eq!(cfg.pricing.tier(0).gpu_rate_at(0.0), 5.0);
+        assert_eq!(cfg.pricing.tier(0).cpu_rate_at(0.0), 1.0);
+        let cfg = SystemConfig::from_toml_str(
+            "[pricing]\ndefault_tier = \"gpu-ondemand\"\n\
+             [pricing.tiers.\"gpu-ondemand\"]\ngpu_rate_per_mb_s = 2.0\n\
+             [pricing.tiers.\"cpu-spot\"]\ncpu_rate_per_mb_s = 0.4\npreempt_hazard_per_s = 0.002\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pricing.tiers.len(), 2);
+        assert_eq!(cfg.pricing.tier(0).name, "gpu-ondemand");
+        assert_eq!(cfg.pricing.tier_index("cpu-spot"), Some(1));
+        assert_eq!(cfg.pricing.tier(1).cpu_rate_at(0.0), 0.4);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::optimizer::{
     LayerTerm,
 };
 use crate::partition::lpt;
+use crate::pricing::PriceBook;
 use crate::selection::select_remote;
 use crate::serverless::{ColdStartModel, NetworkModel, PerfModel};
 
@@ -45,10 +46,36 @@ pub struct Planner {
     pub cost: CostModel,
     /// Fitted per-activation decode-latency curve (Fig. 6 pipeline).
     pub curve: ExpCurve,
+    /// Heterogeneous price surface the plan is costed against and the
+    /// serve loop bills through.
+    pub book: PriceBook,
+    /// Book tier the main (GPU-holding) function is placed on.
+    pub main_tier: u16,
+    /// Book tier remote-expert functions are placed on — the cheapest
+    /// *effective* CPU tier (base rate grossed up by preemption-hazard
+    /// restarts and egress), not merely the lowest sticker rate.
+    pub expert_tier: u16,
 }
 
 impl Planner {
     pub fn new(dims: &CostDims, cfg: &SystemConfig, sla: &SlaConfig) -> Planner {
+        let book =
+            PriceBook::single(cfg.platform.cpu_rate_per_mb_s, cfg.platform.gpu_rate_per_mb_s);
+        Self::with_book(dims, cfg, sla, book)
+    }
+
+    /// [`Planner::new`] against an explicit price book. Tier placement
+    /// happens here, once per planner: the main function goes on the
+    /// cheapest effective GPU tier, remote experts on the cheapest
+    /// effective CPU tier, and the cost model's rates (hence the
+    /// Lagrangian's c^c and the candidate ranking) price each side at
+    /// its own tier. A single-tier book reproduces `new` exactly.
+    pub fn with_book(
+        dims: &CostDims,
+        cfg: &SystemConfig,
+        sla: &SlaConfig,
+        book: PriceBook,
+    ) -> Planner {
         let platform = cfg.platform.clone();
         let perf = PerfModel::from_dims(dims, &platform);
         // Fig. 6: profile per-activation decode latency across the
@@ -60,14 +87,28 @@ impl Planner {
             .map(|&m| (m, perf.expert_token_time(m)))
             .collect();
         let curve = fit_exp_curve(&profile);
+        let coldstart_s = platform.container_start_s;
+        let main_tier = book.best_gpu_tier(coldstart_s);
+        let expert_tier = book.best_cpu_tier(coldstart_s);
+        let main = book.tier(main_tier);
+        let expert = book.tier(expert_tier);
+        let cost = CostModel::with_tier_rates(
+            dims,
+            main.cpu_rate_at(0.0),
+            main.gpu_rate_at(0.0),
+            expert.effective_rate(expert.cpu_rate_at(0.0), coldstart_s),
+        );
         Planner {
             dims: dims.clone(),
             perf,
             net: NetworkModel::from_platform(&platform),
             cold: ColdStartModel::from_platform(&platform),
             lat: LatencyModel::new(dims, &platform),
-            cost: CostModel::new(dims, &platform),
+            cost,
             curve,
+            book,
+            main_tier,
+            expert_tier,
             platform,
             sla: *sla,
             cfg: cfg.clone(),
@@ -205,8 +246,12 @@ impl Planner {
         let mut dual = None;
         if plan.has_remote() {
             // step iv — memory optimization (Lagrangian / KKT)
-            let h_w = self.platform.gpu_rate_per_mb_s * self.cost.main_gpu_mb(&profile, &plan)
-                + self.platform.cpu_rate_per_mb_s * plan.main_mem_mb;
+            // main-side holding rate h_w prices at the *main* tier;
+            // the Lagrangian's c^c below prices remote memory at the
+            // expert tier's effective rate — under a single-tier book
+            // both collapse to the platform's flat rates.
+            let h_w = self.cost.gpu_rate * self.cost.main_gpu_mb(&profile, &plan)
+                + self.cost.cpu_rate * plan.main_mem_mb;
             let t_rem = self.net.invoke_overhead_expected();
             let terms: Vec<LayerTerm> = (0..layers)
                 .map(|l| {
@@ -224,7 +269,7 @@ impl Planner {
                         g: GTerm {
                             curve: self.curve,
                             h_w,
-                            c_c: self.platform.cpu_rate_per_mb_s,
+                            c_c: self.cost.remote_cpu_rate,
                             t_rem_over_s: t_rem / s_tilde,
                         },
                         s_tilde,

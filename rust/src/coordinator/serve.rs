@@ -314,6 +314,13 @@ pub struct ServicePlan {
     pub remote: Vec<RemoteLayerCall>,
     pub calc_time_s: f64,
     pub engine_wall_s: f64,
+    /// Price-book tier the main-model function deploys on (index into
+    /// the platform's book; 0 is the default tier, so tier-unaware
+    /// policies bill identically to the pre-pricing scheduler).
+    pub main_tier: u16,
+    /// Tier the remote-expert functions deploy on — the planner picks
+    /// the cheapest effective CPU tier, hazard and cold-start included.
+    pub expert_tier: u16,
 }
 
 /// A serving strategy: turns one admitted request into a
@@ -409,6 +416,7 @@ pub fn serve_on_platform(
         footprint_mb: 0.0,
         batch_capacity: opts.batch_capacity.max(1),
         component: CostComponent::MainCpu,
+        tier: 0,
     });
     platform.set_instance_limit(MAIN_FN, opts.main_instances);
 
@@ -516,6 +524,7 @@ pub fn serve_on_platform(
             footprint_mb: sp.main_footprint_mb,
             batch_capacity: opts.batch_capacity.max(1),
             component: CostComponent::MainCpu,
+            tier: sp.main_tier,
         });
 
         // every span this request's invocations bill is attributed to
@@ -584,6 +593,7 @@ pub fn serve_on_platform(
                 footprint_mb: rl.footprint_mb,
                 batch_capacity: 1,
                 component: CostComponent::RemoteExpertPrefill,
+                tier: sp.expert_tier,
             });
             // cap scale-out at this request's replica count so decode
             // (and bursts) queue on warm replicas instead of spawning
@@ -613,6 +623,7 @@ pub fn serve_on_platform(
                     footprint_mb: rl.footprint_mb,
                     batch_capacity: 1,
                     component: CostComponent::RemoteExpertDecode,
+                    tier: sp.expert_tier,
                 });
                 let t_dec = decode_inv.started_at;
                 // a decode-phase cold start (replica expired mid-request)
@@ -895,6 +906,8 @@ impl<'a, B: Backend> ServePolicy for RemoePolicy<'a, B> {
             remote,
             calc_time_s: out.calc_time_s,
             engine_wall_s,
+            main_tier: self.planner.main_tier,
+            expert_tier: self.planner.expert_tier,
         })
     }
 }
@@ -948,6 +961,8 @@ impl ServePolicy for SyntheticServePolicy {
             remote: Vec::new(),
             calc_time_s: 0.0,
             engine_wall_s: 0.0,
+            main_tier: 0,
+            expert_tier: 0,
         })
     }
 }
@@ -961,6 +976,7 @@ pub fn serve_remoe_with<B: Backend>(
     opts: &ServeOptions,
 ) -> Result<Aggregator> {
     let mut platform = Platform::new(&planner.platform, opts.seed);
+    platform.set_price_book(planner.book.clone());
     let mut policy = RemoePolicy { engine, planner, predictor, mem_history: None, drift: None };
     serve_on_platform(&mut policy, trace, &mut platform, opts)
 }
@@ -1520,6 +1536,8 @@ mod tests {
                 }],
                 calc_time_s: 0.0,
                 engine_wall_s: 0.0,
+                main_tier: 0,
+                expert_tier: 0,
             })
         }
     }

@@ -36,15 +36,34 @@ pub struct CostModel {
     pub dims: CostDims,
     pub cpu_rate: f64,
     pub gpu_rate: f64,
+    /// CPU rate the *remote-expert* functions are billed at. Equal to
+    /// `cpu_rate` under homogeneous pricing; with a multi-tier price
+    /// book the planner places experts on the cheapest effective CPU
+    /// tier and prices eqs. (8)–(9) at that tier's rate while the main
+    /// function's memory stays at the main tier's rates.
+    pub remote_cpu_rate: f64,
 }
 
 impl CostModel {
     pub fn new(dims: &CostDims, platform: &PlatformConfig) -> Self {
-        CostModel {
-            dims: dims.clone(),
-            cpu_rate: platform.cpu_rate_per_mb_s,
-            gpu_rate: platform.gpu_rate_per_mb_s,
-        }
+        Self::with_tier_rates(
+            dims,
+            platform.cpu_rate_per_mb_s,
+            platform.gpu_rate_per_mb_s,
+            platform.cpu_rate_per_mb_s,
+        )
+    }
+
+    /// Cost model with explicit per-tier rates: the main function's
+    /// CPU/GPU rates and the (possibly cheaper, hazard-adjusted)
+    /// effective CPU rate of the tier remote experts are placed on.
+    pub fn with_tier_rates(
+        dims: &CostDims,
+        cpu_rate: f64,
+        gpu_rate: f64,
+        remote_cpu_rate: f64,
+    ) -> Self {
+        CostModel { dims: dims.clone(), cpu_rate, gpu_rate, remote_cpu_rate }
     }
 
     /// M^g (eq. 7): GPU memory of the main model = token embeddings +
@@ -98,7 +117,7 @@ impl CostModel {
         let mut cost = 0.0;
         for (l, reps) in latency.replica_times.iter().enumerate() {
             let mem = plan.remote_mem_mb[l];
-            cost += self.cpu_rate * mem * reps.iter().sum::<f64>();
+            cost += self.remote_cpu_rate * mem * reps.iter().sum::<f64>();
         }
         cost
     }
@@ -120,7 +139,7 @@ impl CostModel {
                         let per_activation = lat.perf.expert_token_time(mem)
                             + 2.0 * lat.net.transfer_time(self.dims.token_bytes)
                             + lat.t_rem_s;
-                        cost += self.cpu_rate * mem * mass * per_activation;
+                        cost += self.remote_cpu_rate * mem * mass * per_activation;
                     }
                 }
             }

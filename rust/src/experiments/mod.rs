@@ -9,6 +9,7 @@ pub mod common;
 pub mod multitenant_exps;
 pub mod overall_exps;
 pub mod prediction_exps;
+pub mod pricing_exps;
 pub mod profile_exps;
 pub mod sessions_exps;
 
@@ -18,7 +19,7 @@ use anyhow::{bail, Result};
 
 pub const ALL: &[&str] = &[
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11",
-    "serving", "autoscale", "multitenant", "sessions", "summary",
+    "serving", "autoscale", "multitenant", "sessions", "pricing", "summary",
 ];
 
 /// Run one experiment by id.
@@ -38,6 +39,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "autoscale" => autoscale_exps::autoscale(scale),
         "multitenant" => multitenant_exps::multitenant(scale),
         "sessions" => sessions_exps::sessions(scale),
+        "pricing" => pricing_exps::pricing(scale),
         "summary" => overall_exps::summary(scale),
         "all" => {
             for id in ALL {

@@ -1,0 +1,268 @@
+//! `exp pricing` — heterogeneous pricing & placement: the cost/TTFT
+//! frontier of every serving strategy across price regimes, plus a
+//! GPU:CPU price-ratio sweep locating the crossover where CPU-expert
+//! offload stops paying off against the all-GPU deployment.
+//!
+//! Each frontier cell serves the *same* Poisson trace through the
+//! event-driven platform under one [`PriceBook`] regime, with the
+//! billing ledger audited two ways per run: the attribution identity
+//! (`total == Σ request costs + PrewarmIdle`) and the tier partition
+//! (`total == Σ per-tier cuts`). The spot regime exercises the whole
+//! hazard path — seeded preemption draws, surcharged cold restarts,
+//! effective-dated card splits — under the same audits.
+
+use anyhow::Result;
+
+use crate::baselines::{BaselineEvaluator, BaselineProfilePolicy, Strategy};
+use crate::config::SystemConfig;
+use crate::coordinator::{
+    prompt_signature, serve_on_platform, Planner, RemoePolicy, ServeOptions,
+};
+use crate::metrics::{fmt_f, Aggregator, Table};
+use crate::pricing::PriceBook;
+use crate::serverless::{CostComponent, InvokeOverhead, Platform};
+use crate::util::json::Json;
+use crate::workload::trace::poisson_trace_over;
+
+use super::common::{update_bench_json, write_csv, Scale};
+use super::overall_exps::setup_model;
+
+/// GPU:CPU price-ratio grid of the crossover sweep (CPU rate pinned
+/// at 1.0; the default platform sits at ratio 3).
+const RATIO_GRID: &[f64] = &[0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0];
+
+/// Ledger audits every frontier run must pass: the attribution
+/// identity and the per-tier partition of the same total.
+fn audit_ledger(platform: &Platform, agg: &Aggregator, label: &str) -> Result<()> {
+    let ledger = platform.billing.total();
+    let prewarm = platform.billing.component_total(CostComponent::PrewarmIdle);
+    anyhow::ensure!(
+        (ledger - agg.total_cost() - prewarm).abs() <= 1e-9 * ledger.max(1.0),
+        "[{label}] ledger {ledger} != Σ request costs {} + prewarm {prewarm}",
+        agg.total_cost()
+    );
+    let tier_sum: f64 = platform.billing.by_tier().values().sum();
+    anyhow::ensure!(
+        (ledger - tier_sum).abs() <= 1e-9 * ledger.max(1.0),
+        "[{label}] per-tier cuts ({tier_sum}) must partition the ledger ({ledger})"
+    );
+    Ok(())
+}
+
+/// One frontier cell as a bench row: regime, strategy, outcome, and
+/// the per-tier ledger decomposition by tier name.
+fn frontier_row(regime: &str, agg: &Aggregator, platform: &Platform, book: &PriceBook) -> Json {
+    let mut cuts = std::collections::BTreeMap::new();
+    for (tier, cost) in platform.billing.by_tier() {
+        cuts.insert(book.tier(tier).name.clone(), Json::Num(cost));
+    }
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("regime".to_string(), Json::Str(regime.to_string()));
+    o.insert("strategy".to_string(), Json::Str(agg.strategy().to_string()));
+    o.insert("total_cost".to_string(), Json::Num(agg.total_cost()));
+    o.insert("mean_ttft_s".to_string(), Json::Num(agg.ttft_summary().mean));
+    o.insert("cold_starts".to_string(), Json::Num(agg.cold_paid() as f64));
+    o.insert("preemptions".to_string(), Json::Num(platform.preemptions() as f64));
+    o.insert("tier_costs".to_string(), Json::Obj(cuts));
+    Json::Obj(o)
+}
+
+/// Cost/TTFT frontier + ratio sweep. Emits the `pricing` section of
+/// `BENCH_serving.json` and two CSVs under `results/`.
+pub fn pricing(scale: Scale) -> Result<()> {
+    println!("\n== Pricing — cost/TTFT frontier across heterogeneous price regimes ==");
+    let cfg = SystemConfig::default();
+    let base_cpu = cfg.platform.cpu_rate_per_mb_s;
+    let base_gpu = cfg.platform.gpu_rate_per_mb_s;
+    let small = Scale { requests: scale.requests.min(8), ..scale };
+    let (mut ctx, sps, test) = setup_model("dsv2", small)?;
+    let trace = poisson_trace_over(&test, 5.0, small.n_out, 77);
+    // measure routing once; every strategy in every regime scores the
+    // same profiles on the same trace (Remoe re-executes: that IS its
+    // request path)
+    let mut profiles = Vec::with_capacity(trace.len());
+    for req in &trace {
+        profiles.push(ctx.measured_profile(&req.prompt, req.n_out)?);
+    }
+    let opts = ServeOptions::builder().overhead(InvokeOverhead::Expected).build();
+
+    let mut t = Table::new(&[
+        "regime",
+        "strategy",
+        "total cost",
+        "mean ttft (s)",
+        "cold",
+        "preempt",
+        "expert tier",
+    ]);
+    let mut csv_rows = Vec::new();
+    let mut frontier = Vec::new();
+    let mut spot_expert_tier = String::new();
+    for &regime in PriceBook::regime_names() {
+        let book = PriceBook::regime(regime, base_cpu, base_gpu).expect("built-in regime");
+        let planner = Planner::with_book(&ctx.dims, &cfg, &ctx.sla, book.clone());
+        let ev = BaselineEvaluator::with_book(&ctx.dims, &cfg.platform, book.clone());
+        let expert_tier_name = book.tier(planner.expert_tier).name.clone();
+        if regime == "spot-discount" {
+            spot_expert_tier = expert_tier_name.clone();
+        }
+        // the all-GPU and MIX monoliths frame the frontier; Remoe's
+        // planner is the only tier-aware strategy
+        let mut runs: Vec<(Aggregator, Platform)> = Vec::new();
+        for s in [Strategy::Gpu, Strategy::Mix] {
+            let mut platform = Platform::new(&ev.platform, opts.seed);
+            platform.set_price_book(book.clone());
+            let mut policy = BaselineProfilePolicy { ev: &ev, strategy: s, profiles: &profiles };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts)?;
+            runs.push((agg, platform));
+        }
+        {
+            let mut platform = Platform::new(&planner.platform, opts.seed);
+            platform.set_price_book(planner.book.clone());
+            let mut policy = RemoePolicy {
+                engine: &mut ctx.engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+                drift: None,
+            };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts)?;
+            runs.push((agg, platform));
+        }
+        for (agg, platform) in &runs {
+            let label = format!("{regime}/{}", agg.strategy());
+            audit_ledger(platform, agg, &label)?;
+            frontier.push(frontier_row(regime, agg, platform, &book));
+            let tier = if agg.strategy() == "Remoe" {
+                expert_tier_name.clone()
+            } else {
+                book.tier(0).name.clone()
+            };
+            let row = vec![
+                regime.to_string(),
+                agg.strategy().to_string(),
+                fmt_f(agg.total_cost(), 1),
+                fmt_f(agg.ttft_summary().mean, 2),
+                agg.cold_paid().to_string(),
+                platform.preemptions().to_string(),
+                tier,
+            ];
+            t.row(row.clone());
+            csv_rows.push(row);
+        }
+    }
+    t.print();
+    // the spot regime's discount survives its hazard gross-up, so the
+    // planner must place experts on the spot tier there
+    anyhow::ensure!(
+        spot_expert_tier == "cpu-spot",
+        "spot-discount regime should place experts on cpu-spot, got {spot_expert_tier}"
+    );
+    write_csv(
+        "pricing_frontier",
+        &[
+            "regime",
+            "strategy",
+            "total_cost",
+            "mean_ttft_s",
+            "cold_starts",
+            "preemptions",
+            "expert_tier",
+        ],
+        &csv_rows,
+    )?;
+
+    // -- GPU:CPU price-ratio sweep (analytic per-request accounting,
+    // fig9-style): re-plan under PriceBook::single(1.0, ratio) and
+    // find where Remoe's CPU-expert offload starts to undercut the
+    // all-GPU monolith --
+    println!("-- GPU:CPU price-ratio sweep (CPU rate 1.0) --");
+    let dists: Vec<Vec<Vec<f64>>> = trace
+        .iter()
+        .map(|req| sps.predict(&prompt_signature(&ctx.engine, &req.prompt.text)))
+        .collect();
+    let mut st = Table::new(&["gpu:cpu", "Remoe", "GPU", "Remoe/GPU", "remote ratio"]);
+    let mut sweep_csv = Vec::new();
+    let mut sweep_rows = Vec::new();
+    let mut crossover: Option<f64> = None;
+    let mut remoe_at_max = f64::INFINITY;
+    let mut gpu_at_max = 0.0;
+    for &ratio in RATIO_GRID {
+        let book = PriceBook::single(1.0, ratio);
+        let planner = Planner::with_book(&ctx.dims, &cfg, &ctx.sla, book.clone());
+        let ev = BaselineEvaluator::with_book(&ctx.dims, &cfg.platform, book);
+        let mut remoe_sum = 0.0;
+        let mut gpu_sum = 0.0;
+        let mut remote_sum = 0.0;
+        for (profile, dist) in profiles.iter().zip(&dists) {
+            gpu_sum += ev.evaluate(Strategy::Gpu, profile).cost;
+            let out = planner.plan(dist, profile.n_in, small.n_out);
+            let lb = planner.lat.evaluate(&out.plan, profile, out.cold_start_s);
+            let cb = planner.cost.evaluate(&out.plan, profile, &lb, &planner.lat);
+            remoe_sum += cb.total();
+            remote_sum += out.mmp.remote_ratio;
+        }
+        let n = profiles.len() as f64;
+        let (remoe, gpu, remote) = (remoe_sum / n, gpu_sum / n, remote_sum / n);
+        if remoe < gpu && crossover.is_none() {
+            crossover = Some(ratio);
+        }
+        remoe_at_max = remoe;
+        gpu_at_max = gpu;
+        let row = vec![
+            fmt_f(ratio, 1),
+            fmt_f(remoe, 1),
+            fmt_f(gpu, 1),
+            fmt_f(remoe / gpu, 3),
+            fmt_f(remote, 2),
+        ];
+        st.row(row.clone());
+        sweep_csv.push(row);
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("gpu_cpu_ratio".to_string(), Json::Num(ratio));
+        o.insert("remoe_mean_cost".to_string(), Json::Num(remoe));
+        o.insert("gpu_mean_cost".to_string(), Json::Num(gpu));
+        o.insert("remote_ratio".to_string(), Json::Num(remote));
+        sweep_rows.push(Json::Obj(o));
+    }
+    st.print();
+    match crossover {
+        Some(r) => println!(
+            "crossover: Remoe undercuts the all-GPU deployment from GPU:CPU ≥ {r:.1} \
+             (below it, GPU capacity is cheap enough that offload stops paying off)"
+        ),
+        None => println!("crossover: all-GPU stayed cheaper across the whole grid"),
+    }
+    // at the top of the grid GPU memory is 8× CPU memory: CPU-expert
+    // offload must pay off decisively there
+    anyhow::ensure!(
+        remoe_at_max < gpu_at_max,
+        "Remoe ({remoe_at_max}) must undercut all-GPU ({gpu_at_max}) at GPU:CPU = 8"
+    );
+    write_csv(
+        "pricing_ratio",
+        &["gpu_cpu_ratio", "remoe_mean_cost", "gpu_mean_cost", "remoe_over_gpu", "remote_ratio"],
+        &sweep_csv,
+    )?;
+
+    let mut section = std::collections::BTreeMap::new();
+    section.insert("frontier".to_string(), Json::Arr(frontier));
+    section.insert("ratio_sweep".to_string(), Json::Arr(sweep_rows));
+    section.insert("crossover_ratio".to_string(), crossover.map_or(Json::Null, Json::Num));
+    update_bench_json("pricing", Json::Obj(section))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { train: 40, test: 8, requests: 3, n_in: 96, n_out: 12, alpha: 5, beta: 15 }
+    }
+
+    #[test]
+    fn pricing_tiny_runs_with_audited_ledgers() {
+        pricing(tiny()).unwrap();
+    }
+}

@@ -43,6 +43,7 @@ pub mod config;
 pub mod runtime;
 pub mod model;
 pub mod serverless;
+pub mod pricing;
 pub mod costmodel;
 pub mod prediction;
 pub mod allocation;

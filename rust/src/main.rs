@@ -15,6 +15,9 @@
 //!             [--kv-budget B]                       resident KV sessions per instance
 //!                                                      (enables affinity routing; 0 = off)
 //!             [--prefill-weight K]                  slots a prefill admission claims
+//!             [--pricing FILE]                      price book TOML ([pricing.tiers."..."])
+//!             [--price-regime NAME]                 built-in book: default | gpu-cheap
+//!                                                      | gpu-expensive | spot-discount
 //! remoe plan  [--model M]                           plan one request, print the deployment
 //! remoe info                                        artifact + model inventory
 //! ```
@@ -48,6 +51,7 @@ use remoe::experiments::{self, Scale};
 use remoe::metrics::{fmt_f, Table};
 use remoe::model::{self, Backend, Engine};
 use remoe::prediction::{SpsPredictor, TreeParams};
+use remoe::pricing::PriceBook;
 use remoe::runtime::ArtifactStore;
 use remoe::serverless::{CostComponent, Platform};
 use remoe::util::cli::Args;
@@ -143,7 +147,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let cfg = SystemConfig::default();
     let sla = SlaConfig::for_dims(&dims);
-    let planner = Planner::new(&dims, &cfg, &sla);
+    let book = price_book_from(args, &cfg)?;
+    let planner = Planner::with_book(&dims, &cfg, &sla, book);
 
     let corpus = Corpus::new(standard_corpora()[0].clone());
     let (train, _) = corpus.split(120, 0, seed);
@@ -199,6 +204,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// Resolve the price book `serve` plans and bills under:
+/// `--pricing <file>` loads `[pricing.tiers."<name>"]` tables,
+/// `--price-regime <name>` picks a built-in regime, and neither flag
+/// keeps the config's book (flat platform rates — the legacy billing).
+fn price_book_from(args: &Args, cfg: &SystemConfig) -> Result<PriceBook> {
+    let p = &cfg.platform;
+    if let Some(path) = args.flag("pricing") {
+        let text = std::fs::read_to_string(path)?;
+        let toml = remoe::util::tomlmini::Toml::parse(&text)?;
+        return PriceBook::from_toml(&toml, p.cpu_rate_per_mb_s, p.gpu_rate_per_mb_s)
+            .ok_or_else(|| anyhow::anyhow!("{path}: no [pricing.tiers.\"<name>\"] tables"));
+    }
+    if let Some(name) = args.flag("price-regime") {
+        return PriceBook::regime(name, p.cpu_rate_per_mb_s, p.gpu_rate_per_mb_s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown price regime {name}; use one of {}",
+                    PriceBook::regime_names().join(" | ")
+                )
+            });
+    }
+    Ok(cfg.pricing.clone())
+}
+
 fn serve_and_report<B: Backend>(
     engine: &mut Engine<B>,
     planner: &Planner,
@@ -211,6 +240,7 @@ fn serve_and_report<B: Backend>(
     let params = TreeParams { beta: 40, fanout: 4, ..TreeParams::default() };
     let sps = SpsPredictor::build(history, 10, params, &mut Rng::new(seed));
     let mut platform = Platform::new(&planner.platform, opts.seed);
+    platform.set_price_book(planner.book.clone());
     let agg = {
         let mut policy =
             RemoePolicy { engine, planner, predictor: &sps, mem_history: None, drift: None };
@@ -265,6 +295,9 @@ fn serve_and_report<B: Backend>(
         opts.autoscale.name(),
         platform.billing.total(),
     );
+    if platform.preemptions() > 0 {
+        println!("spot preemptions: {}", platform.preemptions());
+    }
     if opts.kv_budget > 0 {
         println!(
             "sessions [kv budget {}]: affinity hit rate={:.2} ({}/{} follow-up turns)  \

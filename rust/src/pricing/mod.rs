@@ -1,0 +1,429 @@
+//! Heterogeneous pricing: a price book of named tiers with
+//! effective-dated rate cards.
+//!
+//! Real serverless pricing is not one flat `(cpu_rate, gpu_rate)`
+//! pair: providers expose tiers (on-demand vs spot, per-region cards)
+//! whose per-MB-s rates change over time, whose cold starts carry
+//! different surcharges, and whose spot capacity can be preempted
+//! mid-keepalive. The [`PriceBook`] is the single price surface the
+//! whole stack reads: the platform bills occupancy spans by splitting
+//! them at effective-date boundaries, the planner places functions on
+//! the tier whose *effective* (preemption/cold-start adjusted) rate
+//! wins, and `exp pricing` sweeps whole regimes by swapping books.
+//!
+//! A book always has at least one tier; tier index 0 is the default
+//! assignment for any [`crate::serverless::FunctionSpec`] that does
+//! not choose one, and [`PriceBook::single`] reproduces the legacy
+//! flat pricing byte-for-byte.
+
+use std::collections::BTreeMap;
+
+use crate::util::tomlmini::Toml;
+
+/// One effective-dated rate card: the per-MB-s prices in force from
+/// `effective_from` (virtual seconds) until the next card.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateCard {
+    pub effective_from: f64,
+    pub cpu_rate_per_mb_s: f64,
+    pub gpu_rate_per_mb_s: f64,
+}
+
+/// A named price tier (e.g. `gpu-ondemand`, `cpu-spot`): rate cards
+/// sorted by effective date plus the tier's cold-start multiplier,
+/// egress price, and spot-preemption hazard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceTier {
+    pub name: String,
+    /// Sorted by `effective_from`; the first card is the opening card
+    /// (its `effective_from` is clamped to cover all earlier times).
+    pub cards: Vec<RateCard>,
+    /// Cold windows on this tier bill at `multiplier ×` the base rate
+    /// (the excess lands in the `ColdStart` ledger component).
+    pub cold_start_multiplier: f64,
+    /// Per-MB network charge for pulling a function's footprint onto
+    /// this tier at each cold start.
+    pub egress_per_mb: f64,
+    /// Spot tiers: expected preemptions per second of keep-alive. A
+    /// preempted instance loses its warm window and the next request
+    /// pays a full (surcharged) cold restart. Zero = on-demand.
+    pub preempt_hazard_per_s: f64,
+}
+
+impl PriceTier {
+    /// Flat tier with a single opening card.
+    pub fn flat(name: &str, cpu_rate: f64, gpu_rate: f64) -> PriceTier {
+        PriceTier {
+            name: name.to_string(),
+            cards: vec![RateCard {
+                effective_from: 0.0,
+                cpu_rate_per_mb_s: cpu_rate,
+                gpu_rate_per_mb_s: gpu_rate,
+            }],
+            cold_start_multiplier: 1.0,
+            egress_per_mb: 0.0,
+            preempt_hazard_per_s: 0.0,
+        }
+    }
+
+    /// The card in force at time `t` (the one with the largest
+    /// `effective_from` ≤ t; times before the opening card use it).
+    pub fn card_at(&self, t: f64) -> &RateCard {
+        let mut cur = &self.cards[0];
+        for c in &self.cards[1..] {
+            if c.effective_from <= t {
+                cur = c;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    pub fn cpu_rate_at(&self, t: f64) -> f64 {
+        self.card_at(t).cpu_rate_per_mb_s
+    }
+
+    pub fn gpu_rate_at(&self, t: f64) -> f64 {
+        self.card_at(t).gpu_rate_per_mb_s
+    }
+
+    /// Split `[start, end]` at every effective-date boundary strictly
+    /// inside it and return `(piece_start, piece_end, card)` pieces in
+    /// order. The pieces exactly tile the span — each side of a price
+    /// change bills under the card effective at its own time, with no
+    /// double-billed instant.
+    pub fn split_span(&self, start: f64, end: f64) -> Vec<(f64, f64, &RateCard)> {
+        let mut out = Vec::with_capacity(1);
+        let mut cursor = start;
+        for c in &self.cards[1..] {
+            if c.effective_from > cursor && c.effective_from < end {
+                out.push((cursor, c.effective_from, self.card_at(cursor)));
+                cursor = c.effective_from;
+            }
+        }
+        out.push((cursor, end.max(cursor), self.card_at(cursor)));
+        out
+    }
+
+    /// Preemption/cold-start adjusted effective rate used for tier
+    /// *placement* decisions: each expected preemption per billed
+    /// second costs a surcharged cold window plus the egress to re-pull
+    /// the footprint, so
+    /// `base × (1 + hazard·coldstart·multiplier) + hazard·egress_per_mb`.
+    pub fn effective_rate(&self, base_rate: f64, coldstart_s: f64) -> f64 {
+        base_rate * (1.0 + self.preempt_hazard_per_s * coldstart_s * self.cold_start_multiplier)
+            + self.preempt_hazard_per_s * self.egress_per_mb
+    }
+}
+
+/// The price book: every tier the platform can place functions on.
+/// Tier index 0 is the default placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceBook {
+    pub tiers: Vec<PriceTier>,
+}
+
+impl PriceBook {
+    /// The legacy flat price surface: one on-demand tier holding both
+    /// rates. Billing through this book is byte-identical to the old
+    /// direct `cpu_rate`/`gpu_rate` multiplication.
+    pub fn single(cpu_rate: f64, gpu_rate: f64) -> PriceBook {
+        PriceBook { tiers: vec![PriceTier::flat("ondemand", cpu_rate, gpu_rate)] }
+    }
+
+    /// Tier by index; out-of-range assignments fall back to the
+    /// default tier rather than panicking mid-billing.
+    pub fn tier(&self, idx: u16) -> &PriceTier {
+        self.tiers.get(idx as usize).unwrap_or(&self.tiers[0])
+    }
+
+    pub fn tier_index(&self, name: &str) -> Option<u16> {
+        self.tiers.iter().position(|t| t.name == name).map(|i| i as u16)
+    }
+
+    /// Tier with the lowest effective CPU rate (expert placement).
+    pub fn best_cpu_tier(&self, coldstart_s: f64) -> u16 {
+        self.best_by(coldstart_s, |t| t.cpu_rate_at(0.0))
+    }
+
+    /// Tier with the lowest effective GPU rate (main-model placement;
+    /// GPU-backed mains also bill their CPU memory, so the CPU rate
+    /// tie-breaks between tiers with equal GPU pricing).
+    pub fn best_gpu_tier(&self, coldstart_s: f64) -> u16 {
+        self.best_by(coldstart_s, |t| t.gpu_rate_at(0.0) + 1e-6 * t.cpu_rate_at(0.0))
+    }
+
+    fn best_by(&self, coldstart_s: f64, base: impl Fn(&PriceTier) -> f64) -> u16 {
+        let mut best = 0u16;
+        let mut best_rate = f64::INFINITY;
+        for (i, t) in self.tiers.iter().enumerate() {
+            let eff = t.effective_rate(base(t), coldstart_s);
+            if eff < best_rate {
+                best_rate = eff;
+                best = i as u16;
+            }
+        }
+        best
+    }
+
+    /// Parse a book from `[pricing.tiers."<name>"]` tables. Missing
+    /// rates inherit `(fallback_cpu, fallback_gpu)`; effective-dated
+    /// cards live in `[pricing.tiers."<name>".rates."<t>"]`
+    /// sub-tables keyed by their effective time in seconds. Tiers are
+    /// ordered by name; `pricing.default_tier = "<name>"` promotes
+    /// that tier to index 0 (the default placement). Returns `None`
+    /// when the file declares no tiers.
+    pub fn from_toml(t: &Toml, fallback_cpu: f64, fallback_gpu: f64) -> Option<PriceBook> {
+        let mut names: Vec<String> = Vec::new();
+        for key in t.entries.keys() {
+            if let Some(rest) = key.strip_prefix("pricing.tiers.") {
+                if let Some((name, _)) = rest.split_once('.') {
+                    if !names.iter().any(|n| n == name) {
+                        names.push(name.to_string());
+                    }
+                }
+            }
+        }
+        if names.is_empty() {
+            return None;
+        }
+        names.sort();
+        if let Some(def) = t.get("pricing.default_tier").and_then(|v| v.as_str()) {
+            if let Some(pos) = names.iter().position(|n| n == def) {
+                let d = names.remove(pos);
+                names.insert(0, d);
+            }
+        }
+        let mut tiers = Vec::with_capacity(names.len());
+        for name in &names {
+            let p = format!("pricing.tiers.{name}");
+            let cpu0 = t.f64_or(&format!("{p}.cpu_rate_per_mb_s"), fallback_cpu);
+            let gpu0 = t.f64_or(&format!("{p}.gpu_rate_per_mb_s"), fallback_gpu);
+            let mut tier = PriceTier::flat(name, cpu0, gpu0);
+            tier.cold_start_multiplier = t.f64_or(&format!("{p}.cold_start_multiplier"), 1.0);
+            tier.egress_per_mb = t.f64_or(&format!("{p}.egress_per_mb"), 0.0);
+            tier.preempt_hazard_per_s = t.f64_or(&format!("{p}.preempt_hazard_per_s"), 0.0);
+            // effective-dated cards: pricing.tiers.<name>.rates.<t>.<field>
+            let rates_prefix = format!("{p}.rates.");
+            let mut dated: BTreeMap<u64, (f64, Option<f64>, Option<f64>)> = BTreeMap::new();
+            for (key, _) in t.entries.range(rates_prefix.clone()..) {
+                let Some(rest) = key.strip_prefix(&rates_prefix) else { break };
+                let Some((when, field)) = rest.split_once('.') else { continue };
+                let Ok(at) = when.parse::<f64>() else { continue };
+                if !at.is_finite() || at < 0.0 {
+                    continue;
+                }
+                let slot = dated.entry(at.to_bits()).or_insert((at, None, None));
+                match field {
+                    "cpu_rate_per_mb_s" => slot.1 = t.get(key).and_then(|v| v.as_f64()),
+                    "gpu_rate_per_mb_s" => slot.2 = t.get(key).and_then(|v| v.as_f64()),
+                    _ => {}
+                }
+            }
+            for (_, (at, cpu, gpu)) in dated {
+                if at == 0.0 {
+                    // an explicit opening card overrides the tier-level rates
+                    tier.cards[0].cpu_rate_per_mb_s = cpu.unwrap_or(cpu0);
+                    tier.cards[0].gpu_rate_per_mb_s = gpu.unwrap_or(gpu0);
+                } else {
+                    let prev = *tier.cards.last().expect("opening card always present");
+                    tier.cards.push(RateCard {
+                        effective_from: at,
+                        cpu_rate_per_mb_s: cpu.unwrap_or(prev.cpu_rate_per_mb_s),
+                        gpu_rate_per_mb_s: gpu.unwrap_or(prev.gpu_rate_per_mb_s),
+                    });
+                }
+            }
+            tiers.push(tier);
+        }
+        Some(PriceBook { tiers })
+    }
+
+    /// Built-in multi-tier regimes for `exp pricing`, parameterized by
+    /// the base on-demand rates. Every regime shares the same tier
+    /// structure — `gpu-ondemand` (the default placement), a flat
+    /// `cpu-ondemand` tier, and a discounted, hazard-bearing
+    /// `cpu-spot` tier — and differs in how GPU capacity is priced
+    /// relative to CPU and how deep (and how risky) the spot discount
+    /// runs. `spot-discount` also steps its spot card mid-trace so
+    /// effective-dated splitting is exercised end to end.
+    pub fn regime(name: &str, cpu_rate: f64, gpu_rate: f64) -> Option<PriceBook> {
+        let (gpu_mult, spot_discount, hazard, spot_step) = match name {
+            "default" | "ondemand" => return Some(PriceBook::single(cpu_rate, gpu_rate)),
+            "gpu-cheap" => (0.5, 0.7, 0.001, None),
+            "gpu-expensive" => (2.0, 0.7, 0.001, None),
+            "spot-discount" => (1.0, 0.35, 0.004, Some((60.0, 0.55))),
+            _ => return None,
+        };
+        let gpu = gpu_rate * gpu_mult;
+        let mut spot = PriceTier::flat("cpu-spot", cpu_rate * spot_discount, gpu);
+        spot.preempt_hazard_per_s = hazard;
+        spot.cold_start_multiplier = 1.25;
+        spot.egress_per_mb = 0.002;
+        if let Some((at, mult)) = spot_step {
+            spot.cards.push(RateCard {
+                effective_from: at,
+                cpu_rate_per_mb_s: cpu_rate * mult,
+                gpu_rate_per_mb_s: gpu,
+            });
+        }
+        Some(PriceBook {
+            tiers: vec![
+                PriceTier::flat("gpu-ondemand", cpu_rate, gpu),
+                PriceTier::flat("cpu-ondemand", cpu_rate, gpu),
+                spot,
+            ],
+        })
+    }
+
+    /// Names accepted by [`PriceBook::regime`].
+    pub fn regime_names() -> &'static [&'static str] {
+        &["default", "gpu-cheap", "gpu-expensive", "spot-discount"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stepped_tier() -> PriceTier {
+        let mut t = PriceTier::flat("spot", 1.0, 3.0);
+        t.cards.push(RateCard {
+            effective_from: 10.0,
+            cpu_rate_per_mb_s: 2.0,
+            gpu_rate_per_mb_s: 6.0,
+        });
+        t.cards.push(RateCard {
+            effective_from: 20.0,
+            cpu_rate_per_mb_s: 0.5,
+            gpu_rate_per_mb_s: 1.5,
+        });
+        t
+    }
+
+    #[test]
+    fn card_at_picks_latest_effective() {
+        let t = stepped_tier();
+        assert_eq!(t.cpu_rate_at(0.0), 1.0);
+        assert_eq!(t.cpu_rate_at(9.999), 1.0);
+        assert_eq!(t.cpu_rate_at(10.0), 2.0);
+        assert_eq!(t.cpu_rate_at(19.0), 2.0);
+        assert_eq!(t.cpu_rate_at(25.0), 0.5);
+        assert_eq!(t.gpu_rate_at(25.0), 1.5);
+    }
+
+    #[test]
+    fn split_span_tiles_exactly() {
+        let t = stepped_tier();
+        // straddles both boundaries
+        let pieces = t.split_span(5.0, 25.0);
+        assert_eq!(pieces.len(), 3);
+        assert_eq!((pieces[0].0, pieces[0].1), (5.0, 10.0));
+        assert_eq!((pieces[1].0, pieces[1].1), (10.0, 20.0));
+        assert_eq!((pieces[2].0, pieces[2].1), (20.0, 25.0));
+        assert_eq!(pieces[0].2.cpu_rate_per_mb_s, 1.0);
+        assert_eq!(pieces[1].2.cpu_rate_per_mb_s, 2.0);
+        assert_eq!(pieces[2].2.cpu_rate_per_mb_s, 0.5);
+        let total: f64 = pieces.iter().map(|(s, e, _)| e - s).sum();
+        assert!((total - 20.0).abs() < 1e-12);
+        // entirely inside one card: one piece, no split
+        let pieces = t.split_span(12.0, 15.0);
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].2.cpu_rate_per_mb_s, 2.0);
+        // zero-length span does not go negative
+        let pieces = t.split_span(10.0, 10.0);
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].0, pieces[0].1);
+    }
+
+    #[test]
+    fn single_book_matches_flat_rates() {
+        let b = PriceBook::single(1.0, 3.0);
+        assert_eq!(b.tiers.len(), 1);
+        assert_eq!(b.tier(0).cpu_rate_at(123.0), 1.0);
+        assert_eq!(b.tier(0).gpu_rate_at(123.0), 3.0);
+        assert_eq!(b.tier(0).preempt_hazard_per_s, 0.0);
+        // out-of-range tier index falls back to the default tier
+        assert_eq!(b.tier(7).name, "ondemand");
+    }
+
+    #[test]
+    fn effective_rate_penalizes_hazard() {
+        let mut t = PriceTier::flat("spot", 0.5, 3.0);
+        assert_eq!(t.effective_rate(0.5, 4.0), 0.5);
+        t.preempt_hazard_per_s = 0.01;
+        t.cold_start_multiplier = 1.5;
+        t.egress_per_mb = 0.1;
+        let eff = t.effective_rate(0.5, 4.0);
+        assert!((eff - (0.5 * (1.0 + 0.01 * 4.0 * 1.5) + 0.01 * 0.1)).abs() < 1e-12);
+        assert!(eff > 0.5);
+    }
+
+    #[test]
+    fn best_tier_selection() {
+        let book = PriceBook::regime("spot-discount", 1.0, 3.0).unwrap();
+        // deep spot discount wins CPU placement despite the hazard
+        let spot = book.tier_index("cpu-spot").unwrap();
+        assert_eq!(book.best_cpu_tier(4.0), spot);
+        // but a brutal hazard flips placement back to on-demand
+        let mut risky = book.clone();
+        risky.tiers[spot as usize].preempt_hazard_per_s = 2.0;
+        assert_ne!(risky.best_cpu_tier(4.0), spot);
+        // GPU placement stays on the default tier (all gpu rates equal)
+        assert_eq!(book.best_gpu_tier(4.0), 0);
+    }
+
+    #[test]
+    fn from_toml_parses_tiers_and_dated_cards() {
+        let toml = Toml::parse(
+            r#"
+            [pricing]
+            default_tier = "gpu-ondemand"
+            [pricing.tiers."gpu-ondemand"]
+            gpu_rate_per_mb_s = 2.5
+            [pricing.tiers."cpu-spot"]
+            cpu_rate_per_mb_s = 0.4
+            preempt_hazard_per_s = 0.003
+            cold_start_multiplier = 1.2
+            egress_per_mb = 0.01
+            [pricing.tiers."cpu-spot".rates."60"]
+            cpu_rate_per_mb_s = 0.6
+            "#,
+        )
+        .unwrap();
+        let book = PriceBook::from_toml(&toml, 1.0, 3.0).unwrap();
+        assert_eq!(book.tiers.len(), 2);
+        // default_tier promoted to index 0 despite sort order
+        assert_eq!(book.tier(0).name, "gpu-ondemand");
+        assert_eq!(book.tier(0).gpu_rate_at(0.0), 2.5);
+        assert_eq!(book.tier(0).cpu_rate_at(0.0), 1.0); // fallback
+        let spot = book.tier(book.tier_index("cpu-spot").unwrap());
+        assert_eq!(spot.cpu_rate_at(0.0), 0.4);
+        assert_eq!(spot.cpu_rate_at(59.9), 0.4);
+        assert_eq!(spot.cpu_rate_at(60.0), 0.6);
+        // un-stepped field carries forward across the dated card
+        assert_eq!(spot.gpu_rate_at(60.0), 3.0);
+        assert_eq!(spot.preempt_hazard_per_s, 0.003);
+        assert_eq!(spot.cold_start_multiplier, 1.2);
+        assert_eq!(spot.egress_per_mb, 0.01);
+        // no [pricing.tiers.*] tables → no book
+        assert!(PriceBook::from_toml(&Toml::parse("x = 1").unwrap(), 1.0, 3.0).is_none());
+    }
+
+    #[test]
+    fn regimes_exist_and_differ() {
+        let base = (1.0, 3.0);
+        let cheap = PriceBook::regime("gpu-cheap", base.0, base.1).unwrap();
+        let dear = PriceBook::regime("gpu-expensive", base.0, base.1).unwrap();
+        assert!(cheap.tier(0).gpu_rate_at(0.0) < dear.tier(0).gpu_rate_at(0.0));
+        let spot = PriceBook::regime("spot-discount", base.0, base.1).unwrap();
+        let st = spot.tier(spot.tier_index("cpu-spot").unwrap());
+        assert!(st.preempt_hazard_per_s > 0.0);
+        assert_eq!(st.cards.len(), 2, "spot-discount steps its card mid-trace");
+        assert!(PriceBook::regime("nonsense", base.0, base.1).is_none());
+        for n in PriceBook::regime_names() {
+            assert!(PriceBook::regime(n, base.0, base.1).is_some());
+        }
+    }
+}

@@ -32,6 +32,9 @@ pub struct BillingEntry {
     /// capacity nobody requested (pre-warm idle) and for meters used
     /// outside a tenant context.
     pub tenant: Option<usize>,
+    /// Price-book tier index the charge was priced under (0 = the
+    /// default tier — all there is under a single-regime book).
+    pub tier: u16,
 }
 
 impl BillingEntry {
@@ -79,9 +82,31 @@ impl BillingMeter {
         rate_per_mb_s: f64,
         tenant: Option<usize>,
     ) {
+        self.charge_tiered(component, mem_mb, duration_s, rate_per_mb_s, tenant, 0);
+    }
+
+    /// [`BillingMeter::charge_for`] with a price-book tier tag, so the
+    /// ledger also cuts by tier: `total == Σ_tier tier_total(tier)`
+    /// exactly (every entry carries exactly one tier).
+    pub fn charge_tiered(
+        &mut self,
+        component: CostComponent,
+        mem_mb: f64,
+        duration_s: f64,
+        rate_per_mb_s: f64,
+        tenant: Option<usize>,
+        tier: u16,
+    ) {
         debug_assert!(mem_mb >= 0.0 && duration_s >= 0.0 && rate_per_mb_s >= 0.0);
         let tenant = if component == CostComponent::PrewarmIdle { None } else { tenant };
-        self.entries.push(BillingEntry { component, mem_mb, duration_s, rate_per_mb_s, tenant });
+        self.entries.push(BillingEntry {
+            component,
+            mem_mb,
+            duration_s,
+            rate_per_mb_s,
+            tenant,
+            tier,
+        });
     }
 
     pub fn total(&self) -> f64 {
@@ -151,6 +176,21 @@ impl BillingMeter {
         let mut out = BTreeMap::new();
         for e in &self.entries {
             *out.entry(e.tenant).or_insert(0.0) += e.cost();
+        }
+        out
+    }
+
+    /// Cost priced under one price-book tier across the ledger.
+    pub fn tier_total(&self, tier: u16) -> f64 {
+        self.entries.iter().filter(|e| e.tier == tier).map(BillingEntry::cost).sum()
+    }
+
+    /// Cost per price-book tier. The tiers partition the ledger:
+    /// Σ values == [`BillingMeter::total`] exactly.
+    pub fn by_tier(&self) -> BTreeMap<u16, f64> {
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            *out.entry(e.tier).or_insert(0.0) += e.cost();
         }
         out
     }

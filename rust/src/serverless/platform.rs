@@ -63,6 +63,7 @@
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::config::PlatformConfig;
+use crate::pricing::PriceBook;
 use crate::util::rng::Rng;
 
 use super::billing::{BillingMeter, CostComponent};
@@ -86,6 +87,10 @@ pub struct FunctionSpec {
     /// spawned after deployment; live instances keep their slot count.
     pub batch_capacity: usize,
     pub component: CostComponent,
+    /// Price-book tier this function's instances are placed on (and
+    /// billed under). 0 — the book's default tier — reproduces the
+    /// legacy flat pricing; spot tiers bring a preemption hazard.
+    pub tier: u16,
 }
 
 /// One billed sub-interval of an instance's occupancy, with the
@@ -134,6 +139,13 @@ struct Instance {
     /// order (front = coldest). Bounded by [`Platform::kv_budget`];
     /// kept in lockstep with the pool's session → instance index.
     kv: VecDeque<u64>,
+    /// Spot preemption: virtual time the provider reclaims this
+    /// instance (drawn from the tier's hazard at spawn; `INFINITY` on
+    /// on-demand tiers). From this time on the instance admits no new
+    /// work; in-flight slots drain, and `prune_expired_before`
+    /// truncates the warm window so the next request pays a fresh
+    /// (surcharged) cold restart.
+    preempt_at: f64,
 }
 
 impl Instance {
@@ -142,7 +154,7 @@ impl Instance {
     /// live before it was spawned (an out-of-order caller must not
     /// see instances from its future).
     fn live_at(&self, t: f64) -> bool {
-        self.spawned_at <= t && self.warm_until >= t
+        self.spawned_at <= t && self.warm_until >= t && self.preempt_at > t
     }
 
     /// When slot `s` can next begin service.
@@ -162,10 +174,13 @@ impl Instance {
 
     /// Merge occupancy [start, end] at (mem_mb, gpu_mb) into the
     /// billed-span set and return the charge pieces as
-    /// (mem_mb, gpu_mb, duration): uncovered sub-intervals bill the
-    /// full spec; covered sub-intervals bill only the excess over
-    /// what that sub-interval already billed. Per-span spec tracking
-    /// keeps shared-window totals independent of admission order.
+    /// (mem_mb, gpu_mb, piece_start, piece_end): uncovered
+    /// sub-intervals bill the full spec; covered sub-intervals bill
+    /// only the excess over what that sub-interval already billed.
+    /// Pieces carry their absolute bounds so the caller can split a
+    /// charge at a rate card's effective-date boundary. Per-span spec
+    /// tracking keeps shared-window totals independent of admission
+    /// order.
     fn bill_occupancy(
         &mut self,
         start: f64,
@@ -173,7 +188,7 @@ impl Instance {
         mem_mb: f64,
         gpu_mb: f64,
         tenant: Option<usize>,
-    ) -> Vec<(f64, f64, f64)> {
+    ) -> Vec<(f64, f64, f64, f64)> {
         // Fast path — occupancy entirely past the last billed span
         // (spans are sorted and disjoint, so past-the-last means past
         // them all): the in-order common case. Bills the full spec and
@@ -191,7 +206,7 @@ impl Instance {
                 }
                 _ => self.billed.push(BilledSpan { start, end, mem_mb, gpu_mb, tenant }),
             }
-            return vec![(mem_mb, gpu_mb, end - start)];
+            return vec![(mem_mb, gpu_mb, start, end)];
         }
         let mut pieces = Vec::new();
         let mut spans = Vec::with_capacity(self.billed.len() + 3);
@@ -205,14 +220,14 @@ impl Instance {
             let hi = span.end.min(end);
             // uncovered gap before this overlap bills the full spec
             if cursor < lo {
-                pieces.push((mem_mb, gpu_mb, lo - cursor));
+                pieces.push((mem_mb, gpu_mb, cursor, lo));
                 spans.push(BilledSpan { start: cursor, end: lo, mem_mb, gpu_mb, tenant });
             }
             // covered part bills only the excess over its past spec
             let d_mem = (mem_mb - span.mem_mb).max(0.0);
             let d_gpu = (gpu_mb - span.gpu_mb).max(0.0);
             if hi > lo && (d_mem > 0.0 || d_gpu > 0.0) {
-                pieces.push((d_mem, d_gpu, hi - lo));
+                pieces.push((d_mem, d_gpu, lo, hi));
             }
             // split the span: outside parts keep their spec, the
             // overlap rises to the max spec seen and stays attributed
@@ -236,7 +251,7 @@ impl Instance {
             cursor = cursor.max(hi);
         }
         if cursor < end {
-            pieces.push((mem_mb, gpu_mb, end - cursor));
+            pieces.push((mem_mb, gpu_mb, cursor, end));
             spans.push(BilledSpan { start: cursor, end, mem_mb, gpu_mb, tenant });
         }
         spans.sort_by(|a, b| a.start.total_cmp(&b.start));
@@ -295,6 +310,11 @@ struct FunctionPool {
     /// this pool: lets `prune_expired_before` skip its span-drop pass
     /// (an O(instances) walk) when nothing can be dropped.
     min_span_end: f64,
+    /// Earliest pending spot-preemption time across retained
+    /// instances: gates `prune_expired_before`'s preemption pass the
+    /// same way `min_span_end` gates span dropping. `INFINITY` (the
+    /// on-demand steady state) keeps the pass free.
+    min_preempt_at: f64,
     /// Session → instance holding its resident KV cache. BTreeMap for
     /// deterministic iteration; kept in lockstep with each instance's
     /// `kv` deque (an entry can go stale only through instance expiry
@@ -308,6 +328,7 @@ impl Default for FunctionPool {
             by_id: BTreeMap::new(),
             by_expiry: BTreeSet::new(),
             min_span_end: f64::INFINITY,
+            min_preempt_at: f64::INFINITY,
             kv_index: BTreeMap::new(),
         }
     }
@@ -315,18 +336,24 @@ impl Default for FunctionPool {
 
 impl FunctionPool {
     fn spawn(&mut self, inst: Instance) {
+        self.min_preempt_at = self.min_preempt_at.min(inst.preempt_at);
         self.by_expiry.insert((tkey(inst.warm_until), inst.id));
         self.by_id.insert(inst.id, inst);
     }
 
     /// Ids of instances live at `at`, in spawn (= id) order — the
-    /// admission and draining-clamp order.
+    /// admission and draining-clamp order. A spot-preempted instance
+    /// admits nothing from its preemption time on (but earlier-time,
+    /// out-of-order callers still see it as it was).
     fn live_ids(&self, at: f64) -> Vec<u64> {
         let mut ids: Vec<u64> = self
             .by_expiry
             .range((tkey(at), 0)..)
             .map(|&(_, id)| id)
-            .filter(|id| self.by_id[id].spawned_at <= at)
+            .filter(|id| {
+                let i = &self.by_id[id];
+                i.spawned_at <= at && i.preempt_at > at
+            })
             .collect();
         ids.sort_unstable();
         ids
@@ -335,7 +362,10 @@ impl FunctionPool {
     fn live_count(&self, at: f64) -> usize {
         self.by_expiry
             .range((tkey(at), 0)..)
-            .filter(|(_, id)| self.by_id[id].spawned_at <= at)
+            .filter(|(_, id)| {
+                let i = &self.by_id[id];
+                i.spawned_at <= at && i.preempt_at > at
+            })
             .count()
     }
 
@@ -358,48 +388,84 @@ fn settle_prewarm_span(
     billing: &mut BillingMeter,
     inst: &mut Instance,
     spec: &FunctionSpec,
-    cpu_rate: f64,
-    gpu_rate: f64,
+    book: &PriceBook,
     until: f64,
 ) {
     let Some(from) = inst.prewarm_idle_from.take() else {
         return;
     };
     let until = until.max(from);
+    let tier = book.tier(spec.tier);
     // pre-warmed capacity is platform-side: spans and entries untagged
-    for (mem_mb, gpu_mb, dur) in inst.bill_occupancy(from, until, spec.mem_mb, spec.gpu_mb, None)
+    for (mem_mb, gpu_mb, s, e) in
+        inst.bill_occupancy(from, until, spec.mem_mb, spec.gpu_mb, None)
     {
-        if mem_mb > 0.0 {
-            billing.charge(CostComponent::PrewarmIdle, mem_mb, dur, cpu_rate);
-        }
-        if gpu_mb > 0.0 {
-            billing.charge(CostComponent::PrewarmIdle, gpu_mb, dur, gpu_rate);
+        for (ps, pe, card) in tier.split_span(s, e) {
+            if mem_mb > 0.0 {
+                billing.charge_tiered(
+                    CostComponent::PrewarmIdle,
+                    mem_mb,
+                    pe - ps,
+                    card.cpu_rate_per_mb_s,
+                    None,
+                    spec.tier,
+                );
+            }
+            if gpu_mb > 0.0 {
+                billing.charge_tiered(
+                    CostComponent::PrewarmIdle,
+                    gpu_mb,
+                    pe - ps,
+                    card.gpu_rate_per_mb_s,
+                    None,
+                    spec.tier,
+                );
+            }
         }
     }
 }
 
 /// Charge one occupancy `[queue_exit, finished_at]` of `inst` under
 /// union billing (see [`Instance::bill_occupancy`]), attributed to
-/// `tenant` in both the ledger entries and the billed-span set.
+/// `tenant` in both the ledger entries and the billed-span set. Each
+/// charge piece splits at the tier's effective-date boundaries, so a
+/// span straddling a price change bills each side under the card in
+/// force at that sub-interval's own time.
 #[allow(clippy::too_many_arguments)]
 fn charge_union(
     billing: &mut BillingMeter,
     inst: &mut Instance,
     spec: &FunctionSpec,
-    cpu_rate: f64,
-    gpu_rate: f64,
+    book: &PriceBook,
     queue_exit: f64,
     finished_at: f64,
     tenant: Option<usize>,
 ) {
-    for (mem_mb, gpu_mb, dur) in
+    let tier = book.tier(spec.tier);
+    for (mem_mb, gpu_mb, s, e) in
         inst.bill_occupancy(queue_exit, finished_at, spec.mem_mb, spec.gpu_mb, tenant)
     {
-        if mem_mb > 0.0 {
-            billing.charge_for(spec.component, mem_mb, dur, cpu_rate, tenant);
-        }
-        if gpu_mb > 0.0 {
-            billing.charge_for(CostComponent::MainGpu, gpu_mb, dur, gpu_rate, tenant);
+        for (ps, pe, card) in tier.split_span(s, e) {
+            if mem_mb > 0.0 {
+                billing.charge_tiered(
+                    spec.component,
+                    mem_mb,
+                    pe - ps,
+                    card.cpu_rate_per_mb_s,
+                    tenant,
+                    spec.tier,
+                );
+            }
+            if gpu_mb > 0.0 {
+                billing.charge_tiered(
+                    CostComponent::MainGpu,
+                    gpu_mb,
+                    pe - ps,
+                    card.gpu_rate_per_mb_s,
+                    tenant,
+                    spec.tier,
+                );
+            }
         }
     }
 }
@@ -440,8 +506,11 @@ pub struct Platform {
     pub keepalive_s: f64,
     cold: ColdStartModel,
     net: NetworkModel,
-    cpu_rate: f64,
-    gpu_rate: f64,
+    /// The price surface every charge flows through. Defaults to a
+    /// single-tier book holding the config's flat rates (byte-
+    /// identical to the legacy direct multiplication); swap it with
+    /// [`Platform::set_price_book`] before serving.
+    book: PriceBook,
     specs: BTreeMap<String, FunctionSpec>,
     pool: BTreeMap<String, FunctionPool>,
     /// Per-function instance cap (scale-out limit); absent ⇒ unlimited.
@@ -463,6 +532,8 @@ pub struct Platform {
     /// Resident KV sessions one instance may hold (LRU-evicted
     /// beyond it). 0 (the default) disables KV residency tracking.
     kv_budget: usize,
+    /// Spot preemptions that actually truncated a warm instance.
+    preemptions: u64,
 }
 
 impl Platform {
@@ -472,8 +543,7 @@ impl Platform {
             keepalive_s: cfg.keepalive_s,
             cold: ColdStartModel::from_platform(cfg),
             net: NetworkModel::from_platform(cfg),
-            cpu_rate: cfg.cpu_rate_per_mb_s,
-            gpu_rate: cfg.gpu_rate_per_mb_s,
+            book: PriceBook::single(cfg.cpu_rate_per_mb_s, cfg.gpu_rate_per_mb_s),
             specs: BTreeMap::new(),
             pool: BTreeMap::new(),
             limits: BTreeMap::new(),
@@ -485,7 +555,25 @@ impl Platform {
             overhead_mode: InvokeOverhead::Sampled,
             tenant: None,
             kv_budget: 0,
+            preemptions: 0,
         }
+    }
+
+    /// Swap the price book the platform bills through. Set it before
+    /// any invocations (charges already in the ledger are not
+    /// re-priced). Function tier assignments index into this book.
+    pub fn set_price_book(&mut self, book: PriceBook) {
+        self.book = book;
+    }
+
+    pub fn price_book(&self) -> &PriceBook {
+        &self.book
+    }
+
+    /// Spot preemptions that actually truncated a warm instance so
+    /// far (counted when `prune_expired_before` applies the reclaim).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 
     /// Set the tenant the next invocations' billed occupancy is
@@ -625,6 +713,15 @@ impl Platform {
                 self.peak_retained = self.peak_retained.max(self.retained);
                 let capacity = spec.batch_capacity.max(1);
                 let cold_start_s = self.cold.function(spec.footprint_mb).total();
+                let hazard = self.book.tier(spec.tier).preempt_hazard_per_s;
+                // gated on hazard > 0 so on-demand tiers draw nothing
+                // and the RNG stream (hence every seeded trace) stays
+                // byte-identical under a hazard-free book
+                let preempt_at = if hazard > 0.0 {
+                    at + self.rng.exponential(hazard)
+                } else {
+                    f64::INFINITY
+                };
                 pool.spawn(Instance {
                     id,
                     spawned_at: at,
@@ -634,6 +731,7 @@ impl Platform {
                     billed: Vec::new(),
                     prewarm_idle_from: None,
                     kv: VecDeque::new(),
+                    preempt_at,
                 });
                 let w = weight.clamp(1, capacity);
                 (id, (0..w).collect(), at, cold_start_s)
@@ -678,14 +776,7 @@ impl Platform {
         // first use of pre-warmed capacity: the provisioning cold
         // start + idle window up to this admission settles as
         // PrewarmIdle, outside the request's own occupancy bill
-        settle_prewarm_span(
-            &mut self.billing,
-            inst,
-            &spec,
-            self.cpu_rate,
-            self.gpu_rate,
-            queue_exit,
-        );
+        settle_prewarm_span(&mut self.billing, inst, &spec, &self.book, queue_exit);
         let batch = inst.occupied_at(queue_exit) + claimed.len();
         for &s in &claimed {
             inst.slots[s] = finished_at;
@@ -702,14 +793,16 @@ impl Platform {
             &mut self.billing,
             inst,
             &spec,
-            self.cpu_rate,
-            self.gpu_rate,
+            &self.book,
             queue_exit,
             finished_at,
             self.tenant,
         );
         pool.reindex(id, old_expiry, new_expiry);
         pool.min_span_end = pool.min_span_end.min(span_low);
+        if cold_start_s > 0.0 {
+            self.charge_cold_surcharges(&spec, queue_exit, cold_start_s);
+        }
 
         Ok(Invocation {
             queued_at: at,
@@ -721,6 +814,55 @@ impl Platform {
             instance,
             batch,
         })
+    }
+
+    /// Tier surcharges on a request-triggered cold start, charged as
+    /// [`CostComponent::ColdStart`] under the caller's tenant context
+    /// (inside the request's billing window, so per-request
+    /// attribution and the ledger identity both hold): the cold
+    /// window's excess over base rate when the tier's multiplier is
+    /// above 1, and the per-MB egress of pulling the footprint onto
+    /// the tier. Pre-warm provisioning pays neither — it is scheduled
+    /// capacity, not an urgent pull; the surcharge is what makes spot
+    /// restarts *paid* restarts.
+    fn charge_cold_surcharges(&mut self, spec: &FunctionSpec, from: f64, cold_start_s: f64) {
+        let tier = self.book.tier(spec.tier);
+        if tier.cold_start_multiplier > 1.0 {
+            let over = tier.cold_start_multiplier - 1.0;
+            for (ps, pe, card) in tier.split_span(from, from + cold_start_s) {
+                if spec.mem_mb > 0.0 {
+                    self.billing.charge_tiered(
+                        CostComponent::ColdStart,
+                        spec.mem_mb * over,
+                        pe - ps,
+                        card.cpu_rate_per_mb_s,
+                        self.tenant,
+                        spec.tier,
+                    );
+                }
+                if spec.gpu_mb > 0.0 {
+                    self.billing.charge_tiered(
+                        CostComponent::ColdStart,
+                        spec.gpu_mb * over,
+                        pe - ps,
+                        card.gpu_rate_per_mb_s,
+                        self.tenant,
+                        spec.tier,
+                    );
+                }
+            }
+        }
+        if tier.egress_per_mb > 0.0 && spec.footprint_mb > 0.0 {
+            // one-shot network charge: footprint MB × egress price
+            self.billing.charge_tiered(
+                CostComponent::ColdStart,
+                spec.footprint_mb,
+                1.0,
+                tier.egress_per_mb,
+                self.tenant,
+                spec.tier,
+            );
+        }
     }
 
     /// Continue an in-flight request on a specific instance — the
@@ -765,14 +907,7 @@ impl Platform {
         let started_at = queue_exit;
         let finished_at = started_at + work_s;
         let span_low = inst.prewarm_idle_from.unwrap_or(queue_exit).min(queue_exit);
-        settle_prewarm_span(
-            &mut self.billing,
-            inst,
-            &spec,
-            self.cpu_rate,
-            self.gpu_rate,
-            queue_exit,
-        );
+        settle_prewarm_span(&mut self.billing, inst, &spec, &self.book, queue_exit);
         let batch = inst.occupied_at(queue_exit) + 1;
         inst.slots[slot] = finished_at;
         let old_expiry = tkey(inst.warm_until);
@@ -782,8 +917,7 @@ impl Platform {
             &mut self.billing,
             inst,
             &spec,
-            self.cpu_rate,
-            self.gpu_rate,
+            &self.book,
             queue_exit,
             finished_at,
             self.tenant,
@@ -920,6 +1054,7 @@ impl Platform {
         let limit = self.instance_limit(name);
         let cold_start_s = self.cold.function(spec.footprint_mb).total();
         let capacity = spec.batch_capacity.max(1);
+        let hazard = self.book.tier(spec.tier).preempt_hazard_per_s;
         let pool = self.pool.get_mut(name).unwrap();
         let live = pool.live_count(at);
         let room = limit.saturating_sub(live).min(n);
@@ -929,6 +1064,13 @@ impl Platform {
             self.retained += 1;
             self.peak_retained = self.peak_retained.max(self.retained);
             let ready_at = at + cold_start_s;
+            // draw gated on a positive hazard so the RNG stream stays
+            // byte-identical under a hazard-free (default) price book
+            let preempt_at = if hazard > 0.0 {
+                at + self.rng.exponential(hazard)
+            } else {
+                f64::INFINITY
+            };
             pool.spawn(Instance {
                 id,
                 spawned_at: at,
@@ -938,6 +1080,7 @@ impl Platform {
                 billed: Vec::new(),
                 prewarm_idle_from: Some(at),
                 kv: VecDeque::new(),
+                preempt_at,
             });
         }
         room
@@ -1019,7 +1162,7 @@ impl Platform {
             if let Some(from) = inst.prewarm_idle_from {
                 span_low = span_low.min(from);
             }
-            settle_prewarm_span(&mut self.billing, inst, &spec, self.cpu_rate, self.gpu_rate, at);
+            settle_prewarm_span(&mut self.billing, inst, &spec, &self.book, at);
             let old_expiry = tkey(inst.warm_until);
             inst.warm_until = inst.warm_until.min(at);
             let new_expiry = tkey(inst.warm_until);
@@ -1047,14 +1190,7 @@ impl Platform {
                     span_low = span_low.min(from);
                 }
                 let until = inst.warm_until;
-                settle_prewarm_span(
-                    &mut self.billing,
-                    inst,
-                    spec,
-                    self.cpu_rate,
-                    self.gpu_rate,
-                    until,
-                );
+                settle_prewarm_span(&mut self.billing, inst, spec, &self.book, until);
             }
             pool.min_span_end = span_low;
         }
@@ -1118,6 +1254,46 @@ impl Platform {
         let lw = tkey(low_water);
         for (name, pool) in self.pool.iter_mut() {
             let spec = self.specs.get(name);
+            // Spot preemption: instances whose reclaim time has passed
+            // stop idling on keep-alive. The warm window truncates at
+            // the preemption time (in-flight slots drain first — the
+            // provider reclaim waits for running work in this model),
+            // so the next request for this function pays a fresh cold
+            // start: the "paid restart" the spot discount trades for.
+            // Runs before the expiry pop below so a preempted-then-
+            // expired instance settles idle only up to its reclaim.
+            // `min_preempt_at` gates the scan the same way
+            // `min_span_end` gates the span walk further down.
+            if pool.min_preempt_at < low_water {
+                let mut new_min = f64::INFINITY;
+                let mut reindex: Vec<(u64, u64, u64)> = Vec::new();
+                for inst in pool.by_id.values_mut() {
+                    if inst.preempt_at < low_water {
+                        let horizon = inst.preempt_at.max(inst.last_activity());
+                        if inst.warm_until > horizon {
+                            if let Some(spec) = spec {
+                                settle_prewarm_span(
+                                    &mut self.billing,
+                                    inst,
+                                    spec,
+                                    &self.book,
+                                    horizon,
+                                );
+                            }
+                            reindex.push((inst.id, tkey(inst.warm_until), tkey(horizon)));
+                            inst.warm_until = horizon;
+                            self.preemptions += 1;
+                        }
+                        // reclaim consumed: never truncates twice
+                        inst.preempt_at = f64::INFINITY;
+                    }
+                    new_min = new_min.min(inst.preempt_at);
+                }
+                for (id, old_key, new_key) in reindex {
+                    pool.reindex(id, old_key, new_key);
+                }
+                pool.min_preempt_at = new_min;
+            }
             // expired instances sit at the front of the expiry index:
             // pop until the first survivor instead of scanning the
             // whole pool. A never-used pre-warmed instance settles its
@@ -1135,14 +1311,7 @@ impl Platform {
                 }
                 if let Some(spec) = spec {
                     let until = inst.warm_until;
-                    settle_prewarm_span(
-                        &mut self.billing,
-                        &mut inst,
-                        spec,
-                        self.cpu_rate,
-                        self.gpu_rate,
-                        until,
-                    );
+                    settle_prewarm_span(&mut self.billing, &mut inst, spec, &self.book, until);
                 }
             }
             // billed spans that end before `low_water` can never
@@ -1179,6 +1348,7 @@ mod tests {
             footprint_mb: 1000.0,
             batch_capacity: 1,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         p.deploy(FunctionSpec {
             name: "expert0".into(),
@@ -1187,6 +1357,7 @@ mod tests {
             footprint_mb: 200.0,
             batch_capacity: 1,
             component: CostComponent::RemoteExpertDecode,
+            tier: 0,
         });
         p
     }
@@ -1201,6 +1372,7 @@ mod tests {
             footprint_mb: 1000.0,
             batch_capacity: capacity,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         p
     }
@@ -1416,6 +1588,7 @@ mod tests {
             footprint_mb: 1000.0,
             batch_capacity: 2,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         let mark = p.billing.mark();
         let b = p.invoke_at("f", 0.0, 1.0, 0.0).unwrap();

@@ -93,7 +93,7 @@ impl Toml {
                 if name.is_empty() {
                     return Err(err("empty section name"));
                 }
-                section = name.trim().to_string();
+                section = parse_section_name(name.trim()).map_err(|m| err(&m))?;
             } else {
                 let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
                 let key = key.trim();
@@ -131,6 +131,60 @@ impl Toml {
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }
+}
+
+/// Split a section header on dots, honouring double-quoted segments
+/// (`pricing.tiers."cpu-spot"` → `pricing.tiers.cpu-spot`). Quotes are
+/// stripped so dashed/dotted tier names flatten to plain lookup keys.
+fn parse_section_name(name: &str) -> Result<String, String> {
+    let mut segments: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut chars = name.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                if !cur.trim().is_empty() {
+                    return Err(format!("unexpected quote in section segment {cur:?}"));
+                }
+                cur.clear();
+                let mut closed = false;
+                for q in chars.by_ref() {
+                    if q == '"' {
+                        closed = true;
+                        break;
+                    }
+                    cur.push(q);
+                }
+                if !closed {
+                    return Err("unterminated quoted section segment".into());
+                }
+                if cur.is_empty() {
+                    return Err("empty quoted section segment".into());
+                }
+                // only a dot (or the end) may follow a closing quote
+                if let Some(&next) = chars.peek() {
+                    if next != '.' {
+                        return Err(format!("unexpected {next:?} after quoted section segment"));
+                    }
+                }
+            }
+            '.' => {
+                let seg = cur.trim();
+                if seg.is_empty() {
+                    return Err("empty section segment".into());
+                }
+                segments.push(seg.to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    let seg = cur.trim();
+    if seg.is_empty() {
+        return Err("empty section segment".into());
+    }
+    segments.push(seg.to_string());
+    Ok(segments.join("."))
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -236,6 +290,38 @@ mod tests {
     fn nested_section_names() {
         let t = Toml::parse("[a.b]\nc = 1").unwrap();
         assert_eq!(t.get("a.b.c").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn quoted_section_segments_strip_quotes() {
+        let t = Toml::parse(
+            r#"
+            [pricing.tiers."cpu-spot"]
+            rate = 0.4
+            [pricing.tiers."cpu-spot".rates."60"]
+            cpu = 0.2
+            "#,
+        )
+        .unwrap();
+        assert!((t.f64_or("pricing.tiers.cpu-spot.rate", 0.0) - 0.4).abs() < 1e-12);
+        assert!((t.f64_or("pricing.tiers.cpu-spot.rates.60.cpu", 0.0) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dashed_and_dotted_quoted_segments() {
+        let t = Toml::parse("[\"a.b\".c]\nk = 1").unwrap();
+        // quoted dot stays inside the segment: flattened key is a.b.c.k
+        assert_eq!(t.get("a.b.c.k").unwrap().as_i64(), Some(1));
+        let t = Toml::parse("[tiers.\"gpu-ondemand\"]\nrate = 3").unwrap();
+        assert_eq!(t.get("tiers.gpu-ondemand.rate").unwrap().as_i64(), Some(3));
+    }
+
+    #[test]
+    fn rejects_bad_section_quoting() {
+        assert!(Toml::parse("[a.\"open]\nk = 1").is_err());
+        assert!(Toml::parse("[a.\"\"]\nk = 1").is_err());
+        assert!(Toml::parse("[a..b]\nk = 1").is_err());
+        assert!(Toml::parse("[\"a\"b]\nk = 1").is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use remoe::config::{CostDims, PlatformConfig, SlaConfig, SystemConfig};
 use remoe::coordinator::{build_history, serve_remoe, Planner};
 use remoe::model::Engine;
 use remoe::prediction::{SpsPredictor, TreeParams};
+use remoe::pricing::{PriceBook, RateCard};
 use remoe::runtime::ArtifactStore;
 use remoe::serverless::{CostComponent, FunctionSpec, InvokeOverhead, Platform};
 use remoe::util::rng::Rng;
@@ -111,6 +112,7 @@ fn platform_simulator_bills_remoe_topology() {
         footprint_mb: 700.0,
         batch_capacity: 1,
         component: CostComponent::MainCpu,
+        tier: 0,
     });
     for l in 0..4 {
         p.deploy(FunctionSpec {
@@ -120,6 +122,7 @@ fn platform_simulator_bills_remoe_topology() {
             footprint_mb: 120.0,
             batch_capacity: 1,
             component: CostComponent::RemoteExpertDecode,
+            tier: 0,
         });
     }
     // prefill: main + all expert functions in parallel
@@ -146,4 +149,84 @@ fn platform_simulator_bills_remoe_topology() {
     }
     assert!(p.billing.total() > before);
     assert_eq!(p.warm_count_at("experts-l0", p.clock), 1);
+}
+
+#[test]
+fn billed_span_straddling_a_rate_card_change_splits_at_the_boundary() {
+    let _guard = serial();
+    // one tier whose CPU rate steps 1.0 → 2.0 at t = 3
+    let mut book = PriceBook::single(1.0, 3.0);
+    book.tiers[0].cards.push(RateCard {
+        effective_from: 3.0,
+        cpu_rate_per_mb_s: 2.0,
+        gpu_rate_per_mb_s: 6.0,
+    });
+    let mut p = Platform::new(&PlatformConfig::default(), 1);
+    p.set_price_book(book);
+    p.deploy(FunctionSpec {
+        name: "f".into(),
+        mem_mb: 100.0,
+        gpu_mb: 0.0,
+        footprint_mb: 0.0, // cold start is exactly the 2 s container boot
+        batch_capacity: 1,
+        component: CostComponent::MainCpu,
+        tier: 0,
+    });
+    // cold invoke at t = 0 with 2 s of work: the billed occupancy is
+    // the cold window plus the run, [0, 4], straddling the card change
+    let inv = p.invoke_at("f", 0.0, 2.0, 0.0).unwrap();
+    assert_eq!(inv.cold_start_s, 2.0);
+    assert_eq!(inv.finished_at, 4.0);
+    // each side bills under its own card: 3 s at rate 1, 1 s at rate 2
+    let expected = 100.0 * (3.0 * 1.0 + 1.0 * 2.0);
+    let total = p.billing.total();
+    assert!(
+        (total - expected).abs() <= 1e-9,
+        "straddling span billed {total}, expected {expected}"
+    );
+    // the split is a partition, not a surcharge: flat books at either
+    // card's rate bracket it
+    assert!(total > 100.0 * 4.0 * 1.0 && total < 100.0 * 4.0 * 2.0);
+    // and the whole charge lands in the one tier's ledger cut
+    assert!((p.billing.tier_total(0) - total).abs() <= 1e-12);
+}
+
+#[test]
+fn spot_preemption_truncates_warmth_and_bills_a_surcharged_restart() {
+    let _guard = serial();
+    let mut book = PriceBook::regime("spot-discount", 1.0, 3.0).unwrap();
+    let spot = book.tier_index("cpu-spot").unwrap();
+    // crank the hazard so the seeded reclaim draw lands long before
+    // the keep-alive would expire on its own
+    book.tiers[spot as usize].preempt_hazard_per_s = 50.0;
+    let mut p = Platform::new(&PlatformConfig::default(), 42);
+    p.set_price_book(book);
+    p.deploy(FunctionSpec {
+        name: "experts".into(),
+        mem_mb: 300.0,
+        gpu_mb: 0.0,
+        footprint_mb: 120.0,
+        batch_capacity: 1,
+        component: CostComponent::RemoteExpertDecode,
+        tier: spot,
+    });
+    let first = p.invoke_at("experts", 0.0, 0.5, 0.0).unwrap();
+    assert!(first.cold_start_s > 0.0);
+    assert_eq!(p.preemptions(), 0, "reclaims apply at the prune pass, not mid-flight");
+    // the provider reclaim lands at the serve loop's low-water pass,
+    // well inside the 60 s keep-alive the instance would have enjoyed
+    p.prune_expired_before(30.0);
+    assert_eq!(p.preemptions(), 1, "hazard draw must truncate the warm window");
+    let cold_mark = p.billing.mark();
+    let second = p.invoke_at("experts", 30.0, 0.5, 0.0).unwrap();
+    assert!(second.cold_start_s > 0.0, "preempted instance must not serve warm");
+    // the restart is *paid*: the spot tier's cold-start multiplier and
+    // footprint egress land in the ColdStart component
+    let surcharge = p.billing.component_total_since(cold_mark, CostComponent::ColdStart);
+    assert!(surcharge > 0.0, "spot restart must carry a cold surcharge");
+    // every charge on this function lands in the spot tier's cut
+    let cuts = p.billing.by_tier();
+    assert_eq!(cuts.len(), 1);
+    let total = p.billing.total();
+    assert!((cuts[&spot] - total).abs() <= 1e-9 * total);
 }

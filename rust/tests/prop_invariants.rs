@@ -234,6 +234,7 @@ fn prop_platform_scheduler_invariants() {
             footprint_mb: rng.range_f64(0.0, 2000.0),
             batch_capacity: 1,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         let limit = rng.range_u(1, 3);
         p.set_instance_limit("f", limit);
@@ -352,6 +353,7 @@ fn prop_batching_slots_and_union_billing_invariants() {
             footprint_mb: rng.range_f64(0.0, 1500.0),
             batch_capacity: capacity,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         let limit = rng.range_u(1, 3);
         p.set_instance_limit("f", limit);
@@ -418,6 +420,7 @@ fn prop_weighted_slot_occupancy_never_exceeds_capacity() {
             footprint_mb: rng.range_f64(0.0, 1500.0),
             batch_capacity: capacity,
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         let limit = rng.range_u(1, 3);
         p.set_instance_limit("f", limit);
@@ -488,6 +491,7 @@ fn prop_prewarm_billing_identity_and_pool_cap() {
             footprint_mb: rng.range_f64(0.0, 1000.0),
             batch_capacity: rng.range_u(1, 3),
             component: CostComponent::MainCpu,
+            tier: 0,
         });
         let limit = rng.range_u(1, 4);
         p.set_instance_limit("f", limit);
@@ -674,6 +678,7 @@ fn prop_prune_is_invisible_to_ledger_and_live_views() {
                 footprint_mb: rng.range_f64(0.0, 1000.0),
                 batch_capacity: rng.range_u(1, 3),
                 component: CostComponent::MainCpu,
+                tier: 0,
             };
             let limit = rng.range_u(1, 4);
             let keepalive = rng.range_f64(1.0, 8.0);
@@ -1077,6 +1082,176 @@ fn prop_multi_tenant_serve_is_deterministic() {
         let b = run(&trace_b);
         assert_eq!(a.canonical(), b.canonical(), "multi-tenant serve must be deterministic");
         assert_eq!(a.canonical_hash(), b.canonical_hash());
+    });
+}
+
+#[test]
+fn prop_tiered_billing_identity_and_partition_under_random_books() {
+    // Under randomized multi-tier price books — effective-dated rate
+    // cards, cold-start multipliers, egress charges and spot hazards,
+    // with functions scattered across tiers (including out-of-range
+    // assignments that fall back to the default tier) — the ledger
+    // must still split exactly into per-request costs plus the
+    // PrewarmIdle component, and the per-tier cuts must partition the
+    // same total with every cut landing on a billable tier index.
+    Prop::new("pricing: ledger identity + tier partition").with_cases(30).check(|rng, case| {
+        use remoe::pricing::{PriceBook, PriceTier, RateCard};
+        use remoe::serverless::{CostComponent, FunctionSpec, Platform};
+
+        let ntiers = small_size(rng, 1, 3);
+        let mut tiers = Vec::with_capacity(ntiers);
+        for k in 0..ntiers {
+            let mut tier = PriceTier::flat(
+                &format!("tier{k}"),
+                rng.range_f64(0.2, 2.0),
+                rng.range_f64(1.0, 6.0),
+            );
+            let mut at = 0.0;
+            for _ in 0..rng.below(3) {
+                at += rng.range_f64(5.0, 60.0);
+                tier.cards.push(RateCard {
+                    effective_from: at,
+                    cpu_rate_per_mb_s: rng.range_f64(0.2, 2.0),
+                    gpu_rate_per_mb_s: rng.range_f64(1.0, 6.0),
+                });
+            }
+            if rng.bool(0.4) {
+                tier.preempt_hazard_per_s = rng.range_f64(0.001, 0.1);
+                tier.cold_start_multiplier = rng.range_f64(1.0, 2.0);
+                tier.egress_per_mb = rng.range_f64(0.0, 0.01);
+            }
+            tiers.push(tier);
+        }
+        let book = PriceBook { tiers };
+        let mut p = Platform::new(&PlatformConfig::default(), case as u64 ^ 0x9C1);
+        p.set_price_book(book);
+        p.keepalive_s = rng.range_f64(2.0, 20.0);
+        let nfns = small_size(rng, 1, 3);
+        for f in 0..nfns {
+            p.deploy(FunctionSpec {
+                name: format!("f{f}"),
+                mem_mb: rng.range_f64(50.0, 1500.0),
+                gpu_mb: if rng.bool(0.3) { rng.range_f64(50.0, 400.0) } else { 0.0 },
+                footprint_mb: rng.range_f64(0.0, 500.0),
+                batch_capacity: rng.range_u(1, 3),
+                component: CostComponent::MainCpu,
+                tier: rng.below(ntiers as u64 + 1) as u16,
+            });
+        }
+
+        let mut t = 0.0f64;
+        let mut attributed = 0.0;
+        let n = small_size(rng, 3, 50);
+        for _ in 0..n {
+            t += rng.range_f64(0.0, 30.0);
+            if rng.bool(0.2) {
+                // applies pending spot reclaims and settles evictions
+                p.prune_expired_before(t);
+            }
+            let name = format!("f{}", rng.below(nfns as u64));
+            match rng.below(5) {
+                0 => {
+                    p.prewarm_at(&name, t, rng.range_u(1, 2));
+                }
+                1 => {
+                    p.retire_idle_at(&name, t, 1);
+                }
+                2 => {
+                    p.keep_warm_at(&name, t, rng.range_u(1, 2));
+                }
+                _ => {
+                    let m = p.billing.mark();
+                    p.invoke_at(&name, t, rng.range_f64(0.01, 5.0), 0.0).unwrap();
+                    attributed += p.billing.total_since(m)
+                        - p.billing.component_total_since(m, CostComponent::PrewarmIdle);
+                }
+            }
+        }
+        p.settle_prewarm_idle();
+        let total = p.billing.total();
+        let prewarm = p.billing.component_total(CostComponent::PrewarmIdle);
+        assert!(
+            (total - attributed - prewarm).abs() <= 1e-9 * total.max(1.0),
+            "ledger {total} != Σ request costs {attributed} + prewarm {prewarm}"
+        );
+        let cuts = p.billing.by_tier();
+        let tier_sum: f64 = cuts.values().sum();
+        assert!(
+            (total - tier_sum).abs() <= 1e-9 * total.max(1.0),
+            "per-tier cuts {tier_sum} must partition the ledger {total}"
+        );
+        for (&tier, &cut) in &cuts {
+            // every cut matches its own filtered sum and bills a tier
+            // the deployed specs can actually reach
+            assert!((tier as usize) <= ntiers, "billed unknown tier {tier}");
+            let direct = p.billing.tier_total(tier);
+            assert!(
+                (cut - direct).abs() <= 1e-9 * direct.abs().max(1.0),
+                "by_tier({tier}) {cut} != tier_total {direct}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_spot_serve_is_deterministic_under_hazard_draws() {
+    // The spot-preemption hazard consumes seeded RNG draws at every
+    // instance spawn; two full rebuilds (fresh engine, predictor,
+    // platform) under the hazard-bearing spot-discount book must still
+    // produce byte-identical canonical serializations and the same
+    // preemption count, and the planner must place experts on the spot
+    // tier that regime discounts.
+    Prop::new("pricing: spot serve determinism").with_cases(2).check(|rng, case| {
+        use remoe::config::SystemConfig;
+        use remoe::coordinator::{
+            build_history, serve_on_platform, Planner, RemoePolicy, ServeOptions,
+        };
+        use remoe::model::{self, Engine};
+        use remoe::prediction::{SpsPredictor, TreeParams};
+        use remoe::pricing::PriceBook;
+        use remoe::serverless::Platform;
+        use remoe::workload::corpus::{standard_corpora, Corpus};
+        use remoe::workload::trace::bursty_trace_over;
+
+        let n_test = small_size(rng, 2, 4);
+        let period_s = rng.range_f64(5.0, 40.0);
+        let run = || {
+            let mut engine = Engine::native(model::gpt2_moe_mini(), 7);
+            let corpus = Corpus::new(standard_corpora()[0].clone());
+            let (train, test) = corpus.split(12, n_test, case as u64 + 5);
+            let history = build_history(&mut engine, &train).unwrap();
+            let params = TreeParams { beta: 10, fanout: 3, ..TreeParams::default() };
+            let sps = SpsPredictor::build(history, 4, params, &mut Rng::new(case as u64));
+            let dims = CostDims::gpt2_moe(4);
+            let cfg = SystemConfig::default();
+            let book = PriceBook::regime(
+                "spot-discount",
+                cfg.platform.cpu_rate_per_mb_s,
+                cfg.platform.gpu_rate_per_mb_s,
+            )
+            .unwrap();
+            let spot = book.tier_index("cpu-spot").unwrap();
+            let planner = Planner::with_book(&dims, &cfg, &SlaConfig::for_dims(&dims), book);
+            assert_eq!(planner.expert_tier, spot, "experts must deploy on the spot tier");
+            let trace = bursty_trace_over(&test, 2, 2, period_s, 6);
+            let opts = ServeOptions::builder().build();
+            let mut platform = Platform::new(&planner.platform, opts.seed);
+            platform.set_price_book(planner.book.clone());
+            let mut policy = RemoePolicy {
+                engine: &mut engine,
+                planner: &planner,
+                predictor: &sps,
+                mem_history: None,
+                drift: None,
+            };
+            let agg = serve_on_platform(&mut policy, &trace, &mut platform, &opts).unwrap();
+            (agg, platform.preemptions())
+        };
+        let (a, pa) = run();
+        let (b, pb) = run();
+        assert_eq!(a.canonical(), b.canonical(), "spot serve must be deterministic");
+        assert_eq!(a.canonical_hash(), b.canonical_hash());
+        assert_eq!(pa, pb, "preemption counts diverged across identical reruns");
     });
 }
 
